@@ -1,0 +1,111 @@
+"""Analytic FLOPs accounting — paper Appendix A.3 (Eq. 10-16), exact
+formulas, evaluated at the paper's configurations to reproduce Table 3's
+cost columns."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class T:
+    """Transformer shape (paper notation)."""
+    L: int; H: int; A: int; D_ff: int; V: int  # noqa: E702
+
+
+# paper Table 1
+EXPERT_335M = T(L=24, H=1024, A=16, D_ff=4096, V=32000)
+EXPERT_1P3B = T(L=24, H=2048, A=16, D_ff=8192, V=32000)
+ROUTER_4M = T(L=12, H=96, A=12, D_ff=384, V=32000)
+
+
+def forward_flops(m: T, B: int, S: int) -> float:
+    """Eq. 10 inner bracket: embedding + L*(MHA + FFN) + output."""
+    emb = B * S * m.H
+    mha = 8 * B * S * m.H ** 2 + 4 * B * S ** 2 * m.H
+    ffn = 4 * B * S * m.H * m.D_ff
+    out = 2 * B * S * m.H * m.V + 3 * B * S * m.V
+    return emb + m.L * (mha + ffn) + out
+
+
+def train_flops(m: T, B: int, S: int, steps: int) -> float:
+    """Eq. 10: 3x forward per step (backward ~ 2x forward)."""
+    return 3.0 * steps * forward_flops(m, B, S)
+
+
+def inference_flops(m: T, S: int) -> float:
+    """Eq. 11 (B=1)."""
+    return forward_flops(m, 1, S)
+
+
+def mixture_train_flops(expert: T, router: T, *, E: int, B: int, S: int,
+                        M: int, steps_expert: int, steps_router: int,
+                        B_router: int) -> dict:
+    """Eq. 12-16."""
+    routers = E * train_flops(router, B_router, S, steps_router)        # Eq.13
+    shard_r = (steps_router * B_router * E) * inference_flops(router, M) * E  # Eq.14
+    experts = E * train_flops(expert, B, S, steps_expert)               # Eq.15
+    shard_e = (steps_expert * B * E) * inference_flops(router, M) * E   # Eq.16
+    return {"experts": experts, "routers": routers,
+            "shard_routers": shard_r, "shard_experts": shard_e,
+            "total": experts + routers + shard_r + shard_e,
+            "overhead": routers + shard_r + shard_e}
+
+
+def mixture_inference_flops(expert: T, router: T, *, E: int, S: int,
+                            M: int) -> dict:
+    ex = inference_flops(expert, S)
+    rt = E * inference_flops(router, M)
+    return {"expert": ex, "routers": rt, "total": ex + rt,
+            "overhead_frac": rt / ex}
+
+
+# paper Table 2 rows: (expert cfg, E, steps_expert, dense steps, batch)
+TABLE3_ROWS = [
+    ("335M", EXPERT_335M, 4, 256_000, 256_000, 512, 128),
+    ("335M", EXPERT_335M, 8, 256_000, 512_000, 512, 128),
+    ("335M", EXPERT_335M, 16, 256_000, 1_024_000, 512, 128),
+    ("335M", EXPERT_335M, 32, 256_000, 2_048_000, 512, 128),
+    ("1.3B", EXPERT_1P3B, 4, 512_000, 512_000, 512, 128),
+    ("1.3B", EXPERT_1P3B, 16, 512_000, 1_024_000, 1024, 128),
+    ("1.3B", EXPERT_1P3B, 32, 512_000, 1_024_000, 2048, 128),
+]
+
+S_PAPER, M_PAPER = 1024, 256
+ROUTER_STEPS, ROUTER_BATCH = 128_000, 32
+
+
+def table3() -> list[dict]:
+    rows = []
+    for name, expert, E, e_steps, d_steps, d_batch, e_batch in TABLE3_ROWS:
+        dense = train_flops(expert, d_batch, S_PAPER, d_steps)
+        mix = mixture_train_flops(expert, ROUTER_4M, E=E, B=e_batch,
+                                  S=S_PAPER, M=M_PAPER,
+                                  steps_expert=e_steps,
+                                  steps_router=ROUTER_STEPS,
+                                  B_router=ROUTER_BATCH)
+        d_inf = inference_flops(expert, S_PAPER)
+        m_inf = mixture_inference_flops(expert, ROUTER_4M, E=E, S=S_PAPER,
+                                        M=M_PAPER)
+        rows.append({
+            "model": name, "experts": E,
+            "dense_train_1e19": dense / 1e19,
+            "mix_overhead_train_pct": 100 * mix["overhead"] / (E * train_flops(
+                expert, e_batch, S_PAPER, e_steps)),
+            "dense_inf_1e12": d_inf / 1e12,
+            "mix_overhead_inf_pct": 100 * m_inf["overhead_frac"],
+        })
+    return rows
+
+
+def comm_table(E: int = 32, W: float = 1.3e9, T_tokens: float = 45e6,
+               S: int = 1024) -> dict:
+    """App. A.4: router all-gather bytes vs dense DDP per-step bytes."""
+    data_per_router = 2 * 2 * T_tokens * E / S          # f16 scores, 2x ring
+    n_comm = ROUTER_STEPS * S * ROUTER_BATCH / T_tokens
+    ddp_per_step = 2 * W * 4                            # f32 grads, 2x ring
+    return {"router_bytes_per_comm": data_per_router,
+            "router_n_comms": n_comm,
+            "router_total_bytes": data_per_router * n_comm,
+            "ddp_bytes_per_step": ddp_per_step,
+            "ratio_one_ddp_step_vs_entire_router_training":
+                ddp_per_step / (data_per_router * n_comm)}

@@ -1,0 +1,55 @@
+"""Multi-pod summary table: dense (pod = extra DP) vs smalltalk (pod =
+expert-parallel) — the paper's communication claim per architecture.
+
+    PYTHONPATH=src python -m benchmarks.multipod_table results/dryrun
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def main() -> None:
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    recs = {}
+    for f in glob.glob(os.path.join(d, "*-mp-*.json")):
+        r = json.load(open(f))
+        recs[(r["arch"], r["shape"], r["mode"])] = r
+    archs = sorted({k[0] for k in recs})
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    print("| arch | shape | dense(mp) | pod-crossing bytes/step (dense) | "
+          "smalltalk(mp) | pod-crossing bytes (smalltalk) |")
+    print("|---|---|---|---|---|---|")
+    for a in archs:
+        for s in shapes:
+            de = recs.get((a, s, "dense"))
+            st = recs.get((a, s, "smalltalk"))
+            if de is None and st is None:
+                continue
+
+            def fmt(r, col):
+                if r is None:
+                    return "-", "-"
+                if r["status"] != "OK":
+                    return r["status"], "-"
+                pc = r["hlo_cost"]["pod_crossing_bytes"]
+                return "OK", f"{pc/1e9:.2f} GB" if pc else "**0**"
+
+            d1, d2 = fmt(de, True)
+            s1, s2 = fmt(st, True)
+            print(f"| {a} | {s} | {d1} | {d2} | {s1} | {s2} |")
+    n_ok = sum(r["status"] == "OK" for r in recs.values())
+    n_skip = sum(r["status"] == "SKIP" for r in recs.values())
+    n_fail = len(recs) - n_ok - n_skip
+    print(f"\n{n_ok} OK / {n_skip} SKIP / {n_fail} FAIL")
+    # the paper's claim, asserted:
+    bad = [(k, r["hlo_cost"]["pod_crossing_bytes"]) for k, r in recs.items()
+           if k[2] == "smalltalk" and r["status"] == "OK"
+           and r["hlo_cost"]["pod_crossing_bytes"] > 0]
+    print("smalltalk pod-crossing violations:", bad if bad else "none ✅")
+
+
+if __name__ == "__main__":
+    main()

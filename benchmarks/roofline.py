@@ -1,0 +1,117 @@
+"""Roofline report generator (deliverable g).
+
+Reads the dry-run JSON records (results/dryrun/*.json), computes the
+three roofline terms per (arch x shape), the MODEL_FLOPS/HLO_FLOPs
+usefulness ratio, the dominant bottleneck, and a what-would-move-it note.
+
+    PYTHONPATH=src python -m benchmarks.roofline results/dryrun
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def model_params(cfg) -> tuple[float, float]:
+    """(total params, active params) — analytic, via eval_shape."""
+    from repro.launch.specs import param_struct
+    struct = param_struct(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(struct)[0]
+    total = active = 0.0
+    for path, leaf in flat:
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        n = float(leaf.size)
+        total += n
+        if cfg.moe is not None and "moe" in names and "dense" not in names \
+                and names[-1] in ("wi", "wg", "wo"):
+            n = n * cfg.moe.top_k / cfg.moe.n_experts
+        active += n
+    return total, active
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (inference)."""
+    _, active = model_params(cfg)
+    if kind == "train":
+        return 6.0 * active * shape.global_batch * shape.seq_len
+    if kind == "prefill":
+        return 2.0 * active * shape.global_batch * shape.seq_len
+    return 2.0 * active * shape.global_batch           # decode: 1 token
+
+
+def hint(dom: str, rec: dict, cfg) -> str:
+    if dom == "collective_s":
+        kinds = rec["hlo_cost"].get("by_kind", {})
+        top = max(kinds, key=kinds.get) if kinds else "?"
+        return (f"cut {top} traffic (layout/sharding: e.g. reduce "
+                f"tensor-parallel all-reduces or overlap with compute)")
+    if dom == "memory_s":
+        return ("raise arithmetic intensity: fuse (Pallas), larger "
+                "per-device batch, fewer remat recomputes, bf16 residuals")
+    return "compute-bound: near roofline; only kernel-level wins remain"
+
+
+def load(dirpath: str, *, mesh: str = "sp", mode: str = "dense") -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirpath, f"*-{mesh}-{mode}.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def table(recs: list[dict]) -> str:
+    lines = [
+        "| arch | shape | step | compute_s | memory_s | collective_s | "
+        "dominant | MODEL_FLOPS/HLO | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = {n: i for i, n in enumerate(INPUT_SHAPES)}
+    recs = sorted(recs, key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    for r in recs:
+        if r["status"] == "SKIP":
+            lines.append(f"| {r['arch']} | {r['shape']} | SKIP | - | - | - | "
+                         f"- | - | {r['why']} |")
+            continue
+        if r["status"] != "OK":
+            lines.append(f"| {r['arch']} | {r['shape']} | FAIL | - | - | - | "
+                         f"- | - | see json |")
+            continue
+        cfg = get_config(r["arch"])
+        shape = INPUT_SHAPES[r["shape"]]
+        rl = r["roofline"]
+        mf = model_flops(cfg, shape, r["kind"])
+        hlo_global = r["hlo_cost"]["flops"] * r["chips"]
+        ratio = mf / hlo_global if hlo_global else float("nan")
+        dom = rl["dominant"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {rl['compute_s']*1e3:.2f}ms | {rl['memory_s']*1e3:.2f}ms "
+            f"| {rl['collective_s']*1e3:.2f}ms | {dom.replace('_s','')} "
+            f"| {ratio:.2f} | {hint(dom, r, cfg)} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    recs = load(d)
+    print(f"## Roofline — single-pod 16x16 (256 chips), "
+          f"{PEAK_FLOPS_BF16/1e12:.0f} TF/s bf16, {HBM_BW/1e9:.0f} GB/s HBM, "
+          f"{ICI_BW/1e9:.0f} GB/s ICI\n")
+    print(table(recs))
+    ok = sum(r["status"] == "OK" for r in recs)
+    sk = sum(r["status"] == "SKIP" for r in recs)
+    print(f"\n{ok} OK, {sk} SKIP (per assignment rules), "
+          f"{len(recs) - ok - sk} FAIL")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,273 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call = wall time of
+the measured computation; derived = the table/figure's headline quantity).
+
+  table3_flops       App. A.3 / Table 3 cost accounting (analytic, exact)
+  tableA4_comm       App. A.4 communication overhead vs dense DDP
+  fig2_ppl_vs_flops  mixture vs dense ppl at equal total tokens (measured)
+  fig4a_router_size  router-size invariance (routing purity, measured)
+  fig4b_prefix_len   routed ppl vs inference prefix length (measured)
+  fig4c_tfidf        LM routing vs TF-IDF+k-means (purity, measured)
+  fig5_specialize    per-segment expert-vs-dense ppl (measured)
+  assignment_perf    balanced-assignment throughput
+  kernels_perf       pallas(interpret) vs jnp-chunked loss / attention
+
+Scale note: measured rows run a CPU-sized replica (tiny experts, synthetic
+multi-domain corpus) of each experiment; the analytic rows evaluate the
+paper's exact formulas at paper scale.
+"""
+from __future__ import annotations
+
+import sys
+import time
+from functools import lru_cache
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def row(name: str, us: float, derived: str) -> None:
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def timed(fn):
+    t0 = time.time()
+    out = fn()
+    return out, (time.time() - t0) * 1e6
+
+
+# ---------------------------------------------------------------------------
+# Analytic tables
+# ---------------------------------------------------------------------------
+def bench_table3_flops():
+    from benchmarks.flops_accounting import comm_table, table3
+    (rows, us) = timed(table3)
+    for r in rows:
+        row(f"table3_{r['model']}x{r['experts']}e_train_overhead_pct",
+            us / len(rows),
+            f"{r['mix_overhead_train_pct']:.2f}")
+        row(f"table3_{r['model']}x{r['experts']}e_inf_overhead_pct",
+            us / len(rows),
+            f"{r['mix_overhead_inf_pct']:.2f}")
+
+
+def bench_tableA4_comm():
+    from benchmarks.flops_accounting import comm_table
+    (c, us) = timed(lambda: comm_table(E=32))
+    row("tableA4_router_total_comm_MB", us,
+        f"{c['router_total_bytes'] / 1e6:.2f}")
+    row("tableA4_ddp_bytes_per_step_GB", us,
+        f"{c['ddp_bytes_per_step'] / 1e9:.2f}")
+    row("tableA4_one_ddp_step_vs_router_total", us,
+        f"{c['ratio_one_ddp_step_vs_entire_router_training']:.1f}")
+
+
+# ---------------------------------------------------------------------------
+# Measured mini-replica (shared artifacts)
+# ---------------------------------------------------------------------------
+@lru_cache(maxsize=1)
+def _mini():
+    """Train the shared mini replica: routers (EM), mixture, dense."""
+    import jax
+    from repro.configs.base import ModelConfig
+    from repro.core import em, mixture as mixlib
+    from repro.data import DataConfig, Stream, SyntheticCorpus, make_lm_batch
+    from repro.models import model as modellib
+    from repro.optim import AdamWConfig
+
+    rcfg = ModelConfig(name="bench-router", n_layers=2, d_model=64, n_heads=4,
+                       n_kv_heads=4, d_ff=256, vocab_size=256,
+                       ffn_type="gelu", loss_chunk=64)
+    ecfg = ModelConfig(name="bench-expert", n_layers=2, d_model=128,
+                       n_heads=4, n_kv_heads=4, d_ff=512, vocab_size=256,
+                       ffn_type="gelu", loss_chunk=64)
+    corpus = SyntheticCorpus(DataConfig(vocab_size=256, seq_len=64,
+                                        n_domains=4))
+    emcfg = em.EMConfig(n_experts=4, prefix_len=32, em_iters=3,
+                        chunk_size=2048, steps_per_iter=40, batch_size=32,
+                        lr=3e-3)
+    key = jax.random.PRNGKey(0)
+    t0 = time.time()
+    state = em.train_routers(corpus, rcfg, emcfg, key)
+    t_router = time.time() - t0
+    assign, doms, comm = em.shard_corpus(state, rcfg, corpus, 4096, emcfg)
+    opt = AdamWConfig(peak_lr=1e-3, warmup_steps=20, total_steps=200,
+                      clip_norm=1.0)
+    E, steps, bs = 4, 200, 16
+    t0 = time.time()
+    mix = mixlib.train_mixture_experts(ecfg, corpus, assign, steps, bs, opt,
+                                       key, router_state=state, prefix_len=32,
+                                       router_cfg=rcfg)
+    t_mix = time.time() - t0
+    t0 = time.time()
+    dense = modellib.init_params(key, ecfg)
+    optd = AdamWConfig(peak_lr=1e-3, warmup_steps=20, total_steps=E * steps,
+                       clip_norm=1.0)
+    dense, _ = mixlib.train_expert(ecfg, dense, Stream(corpus, bs), E * steps,
+                                   optd)
+    t_dense = time.time() - t0
+    held = corpus.sequences(np.arange(10_000_000, 10_000_000 + 512))
+    batch = make_lm_batch(*held)
+    return dict(rcfg=rcfg, ecfg=ecfg, corpus=corpus, emcfg=emcfg, state=state,
+                assign=assign, doms=doms, mix=mix, dense=dense, batch=batch,
+                t_router=t_router, t_mix=t_mix, t_dense=t_dense,
+                held_domains=held[1])
+
+
+def bench_fig2_ppl_vs_flops():
+    from repro.core import mixture as mixlib
+    m = _mini()
+    ppl_mix, eids, nll = mixlib.mixture_eval_ppl(m["mix"], m["batch"],
+                                                 return_routes=True)
+    ppl_dense = mixlib.dense_eval_ppl(m["ecfg"], m["dense"], m["batch"])
+    m["eids"], m["nll_mix"] = eids, nll
+    row("fig2_ppl_mixture_4e", m["t_mix"] * 1e6, f"{ppl_mix:.4f}")
+    row("fig2_ppl_dense_equal_tokens", m["t_dense"] * 1e6, f"{ppl_dense:.4f}")
+    row("fig2_ppl_gain_pct", 0.0, f"{100 * (1 - ppl_mix / ppl_dense):.2f}")
+
+
+def bench_fig4a_router_size():
+    """Router size does not matter: EM purity for 2 router sizes."""
+    import jax
+    from repro.configs.base import ModelConfig
+    from repro.core import em
+    m = _mini()
+    small = ModelConfig(name="bench-router-xs", n_layers=1, d_model=32,
+                        n_heads=2, n_kv_heads=2, d_ff=128, vocab_size=256,
+                        ffn_type="gelu", loss_chunk=64)
+    (state_xs, us) = timed(lambda: em.train_routers(
+        m["corpus"], small, m["emcfg"], jax.random.PRNGKey(0)))
+    p_big = m["state"].history[-1]["purity"]
+    p_xs = state_xs.history[-1]["purity"]
+    row("fig4a_purity_router_84k_params", m["t_router"] * 1e6, f"{p_big:.3f}")
+    row("fig4a_purity_router_13k_params", us, f"{p_xs:.3f}")
+
+
+def bench_fig4b_prefix_len():
+    from repro.core import mixture as mixlib
+    m = _mini()
+    for M in (8, 16, 32):
+        (ppl, us) = timed(lambda M=M: mixlib.mixture_eval_ppl(
+            m["mix"], m["batch"], prefix_len=M))
+        row(f"fig4b_ppl_prefix_{M}", us, f"{ppl:.4f}")
+
+
+def bench_fig4c_tfidf():
+    from benchmarks.tfidf_router import TfidfSvd, balanced_kmeans, route_nearest
+    from repro.core.em import domain_purity
+    m = _mini()
+    corpus, emcfg = m["corpus"], m["emcfg"]
+    train_toks, train_doms = corpus.sequences(np.arange(1024))
+
+    def run():
+        enc = TfidfSvd(vocab=256, dim=16)
+        feats = enc.fit(train_toks)
+        assign, centers = balanced_kmeans(feats, 4, iters=10)
+        # route HELD-OUT prefixes (the paper's point: short prefix hurts tfidf)
+        held, doms = corpus.sequences(np.arange(20_000, 20_000 + 512))
+        pf = enc.transform(held[:, :emcfg.prefix_len])
+        return route_nearest(pf, centers), doms
+
+    ((route, doms), us) = timed(run)
+    p_tfidf = domain_purity(route, doms, 4)
+    p_lm = domain_purity(m["assign"][:4096], m["doms"][:4096], 4)
+    row("fig4c_purity_tfidf_kmeans", us, f"{p_tfidf:.3f}")
+    row("fig4c_purity_lm_router", 0.0, f"{p_lm:.3f}")
+
+
+def bench_fig5_specialize():
+    from repro.core import mixture as mixlib
+    m = _mini()
+    if "eids" not in m:
+        bench_fig2_ppl_vs_flops()
+    eids, nll = m["eids"], m["nll_mix"]
+    dense_nll = mixlib.eval_nll(m["ecfg"], m["dense"],
+                                {k: np.asarray(v) for k, v in m["batch"].items()
+                                 if k != "domain"})
+    wins, shares = [], []
+    for e in range(4):
+        sel = eids == e
+        if sel.sum() == 0:
+            continue
+        wins.append(float(np.exp(nll[sel].mean()))
+                    < float(np.exp(dense_nll[sel].mean())))
+        shares.append(float(sel.mean()))
+        row(f"fig5_segment{e}_ppl_mix_vs_dense", 0.0,
+            f"{np.exp(nll[sel].mean()):.3f}_vs_{np.exp(dense_nll[sel].mean()):.3f}")
+    row("fig5_experts_beating_dense", 0.0, f"{sum(wins)}/{len(wins)}")
+    row("fig5_min_segment_share", 0.0, f"{min(shares):.3f}")
+
+
+# ---------------------------------------------------------------------------
+# Systems micro-benches
+# ---------------------------------------------------------------------------
+def bench_assignment_perf():
+    import jax
+    from repro.core.assignment import balanced_assignment
+    scores = np.random.default_rng(0).normal(size=(4096, 32)).astype(np.float32)
+    fn = jax.jit(lambda s: balanced_assignment(s, 129))
+    fn(scores).block_until_ready()
+    t0 = time.time()
+    for _ in range(5):
+        fn(scores).block_until_ready()
+    us = (time.time() - t0) / 5 * 1e6
+    row("assignment_balanced_4096x32", us, "capacity=129")
+
+
+def bench_kernels_perf():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.lm_loss import ops as lm_ops
+    from repro.kernels.flash_attention import ops as fa_ops
+    h = jax.random.normal(jax.random.PRNGKey(0), (4, 256, 128))
+    emb = jax.random.normal(jax.random.PRNGKey(1), (2048, 128)) * 0.1
+    lab = jax.random.randint(jax.random.PRNGKey(2), (4, 256), 0, 2048)
+    for impl in ("jnp", "pallas"):
+        fn = jax.jit(lambda h, e, l, impl=impl: lm_ops.lm_loss(
+            h, e, l, impl=impl))
+        ref = fn(h, emb, lab).block_until_ready()
+        t0 = time.time()
+        for _ in range(3):
+            fn(h, emb, lab).block_until_ready()
+        us = (time.time() - t0) / 3 * 1e6
+        row(f"lm_loss_{impl}_4x256xV2048", us,
+            f"mean_nll={float(ref.mean()):.3f}")
+    q = jax.random.normal(jax.random.PRNGKey(0), (2, 512, 8, 64))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 512, 2, 64))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 512, 2, 64))
+    for impl in ("jnp", "pallas"):
+        fn = jax.jit(lambda q, k, v, impl=impl: fa_ops.flash_attention(
+            q, k, v, impl=impl))
+        out = fn(q, k, v).block_until_ready()
+        t0 = time.time()
+        for _ in range(3):
+            fn(q, k, v).block_until_ready()
+        us = (time.time() - t0) / 3 * 1e6
+        row(f"flash_attn_{impl}_2x512_gqa4", us,
+            f"out_norm={float(jnp.abs(out).mean()):.4f}")
+
+
+ALL = [bench_table3_flops, bench_tableA4_comm, bench_fig2_ppl_vs_flops,
+       bench_fig4a_router_size, bench_fig4b_prefix_len, bench_fig4c_tfidf,
+       bench_fig5_specialize, bench_assignment_perf, bench_kernels_perf]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for fn in ALL:
+        if only and only not in fn.__name__:
+            continue
+        try:
+            fn()
+        except Exception as ex:  # keep the harness going; surface the row
+            row(fn.__name__ + "_ERROR", 0.0, repr(ex)[:80])
+
+
+if __name__ == "__main__":
+    main()

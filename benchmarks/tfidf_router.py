@@ -1,0 +1,73 @@
+"""TF-IDF + SVD + balanced k-means routing baseline (Gururangan et al.
+2023), the comparison in paper Fig. 4c — numpy implementation."""
+from __future__ import annotations
+
+import numpy as np
+
+
+class TfidfSvd:
+    """TF-IDF fitted on the training corpus, SVD projection reused for
+    routing prefixes (the honest version of the Fig. 4c baseline)."""
+
+    def __init__(self, vocab: int, dim: int = 32):
+        self.vocab = vocab
+        self.dim = dim
+        self.idf: np.ndarray | None = None
+        self.proj: np.ndarray | None = None
+
+    def _counts(self, tokens: np.ndarray) -> np.ndarray:
+        N = tokens.shape[0]
+        counts = np.zeros((N, self.vocab), np.float32)
+        for i, row in enumerate(tokens):
+            np.add.at(counts[i], row, 1.0)
+        return counts
+
+    def _tfidf(self, tokens: np.ndarray) -> np.ndarray:
+        tf = self._counts(tokens)
+        tf /= np.maximum(tf.sum(1, keepdims=True), 1)
+        x = tf * self.idf[None]
+        return x / np.maximum(np.linalg.norm(x, axis=1, keepdims=True), 1e-9)
+
+    def fit(self, tokens: np.ndarray) -> np.ndarray:
+        counts = self._counts(tokens)
+        df = (counts > 0).sum(0)
+        self.idf = (np.log((1 + tokens.shape[0]) / (1 + df)) + 1.0
+                    ).astype(np.float32)
+        x = self._tfidf(tokens)
+        _, s, vt = np.linalg.svd(x, full_matrices=False)
+        d = min(self.dim, vt.shape[0])
+        self.proj = vt[:d].T                    # (vocab, d)
+        return x @ self.proj
+
+    def transform(self, tokens: np.ndarray) -> np.ndarray:
+        return self._tfidf(tokens) @ self.proj
+
+
+def balanced_kmeans(x: np.ndarray, k: int, iters: int = 20,
+                    seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """Balanced k-means (capacity-constrained greedy assignment)."""
+    rng = np.random.default_rng(seed)
+    n = x.shape[0]
+    cap = int(np.ceil(n / k))
+    centers = x[rng.choice(n, k, replace=False)]
+    assign = np.zeros(n, np.int64)
+    for _ in range(iters):
+        d2 = ((x[:, None] - centers[None]) ** 2).sum(-1)    # (n, k)
+        order = np.argsort(d2.min(1))
+        counts = np.zeros(k, np.int64)
+        for i in order:
+            for c in np.argsort(d2[i]):
+                if counts[c] < cap:
+                    assign[i] = c
+                    counts[c] += 1
+                    break
+        for c in range(k):
+            sel = assign == c
+            if sel.any():
+                centers[c] = x[sel].mean(0)
+    return assign, centers
+
+
+def route_nearest(feats: np.ndarray, centers: np.ndarray) -> np.ndarray:
+    d2 = ((feats[:, None] - centers[None]) ** 2).sum(-1)
+    return d2.argmin(1)

@@ -1,0 +1,15 @@
+"""Serving example (deliverable b): batched requests through the routed
+mixture — prefix scoring by E tiny routers, argmax routing, per-expert
+batched prefill + multi-token decode.
+
+    PYTHONPATH=src python examples/serve_mixture.py
+    PYTHONPATH=src python examples/serve_mixture.py --ckpt results/train
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""End-to-end training example (deliverable b): full SmallTalk pipeline —
+EM routers -> corpus sharding -> independent experts -> mixture-vs-dense
+evaluation, with checkpoints.
+
+Thin wrapper over the production driver:
+
+    PYTHONPATH=src python examples/train_smalltalk.py                  # tiny
+    PYTHONPATH=src python examples/train_smalltalk.py --preset small   # ~100M-class
+    PYTHONPATH=src python examples/train_smalltalk.py --preset paper   # TPU scale
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    if "--preset" not in sys.argv:
+        sys.argv += ["--preset", "tiny"]
+    if "--dense-baseline" not in sys.argv:
+        sys.argv += ["--dense-baseline"]
+    main()

@@ -1,0 +1,3 @@
+"""repro: SmallTalk LM (ICLR 2025) — asynchronous mixture of language models
+on a multi-pod JAX/TPU stack."""
+__version__ = "1.0.0"

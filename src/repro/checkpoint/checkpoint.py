@@ -1,0 +1,66 @@
+"""Pytree checkpointing (npz-based, per-expert / per-router files).
+
+SmallTalk's checkpoint layout is naturally sharded: each expert (and each
+router) checkpoints independently on its own node group — there is no
+global barrier, matching the paper's no-communication training story.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SEP = "::"
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            flat["BF16" + SEP + key] = arr.view(np.uint16)
+        else:
+            flat[key] = arr
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path if path.endswith(".npz") else path + ".npz",
+             **_flatten(tree))
+
+
+def restore(path: str, template: Any) -> Any:
+    """Restore into the structure of ``template`` (shapes must match)."""
+    if not path.endswith(".npz"):
+        path += ".npz"
+    with np.load(path) as data:
+        arrays = {}
+        for k in data.files:
+            if k.startswith("BF16" + SEP):
+                arrays[k[len("BF16" + SEP):]] = data[k].view(jnp.bfloat16)
+            else:
+                arrays[k] = data[k]
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path_keys, leaf in paths:
+        key = SEP.join(_path_str(p) for p in path_keys)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing {key!r}")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,6 @@
+from repro.configs.base import (INPUT_SHAPES, InputShape, MixtureConfig,
+                                ModelConfig, MoEConfig, get_config,
+                                list_configs, smoke_variant)
+
+__all__ = ["INPUT_SHAPES", "InputShape", "MixtureConfig", "ModelConfig",
+           "MoEConfig", "get_config", "list_configs", "smoke_variant"]

@@ -1,0 +1,151 @@
+"""Assigned architecture pool (10 archs, 6 families) + the paper's own
+SmallTalk expert/router models.  Every config cites its source.
+
+Sharding/memory policy notes (see parallel/sharding.py):
+  - archs >= ~7B params set ``fsdp`` in SHARDING_OVERRIDES (params + opt
+    state sharded over data*model, ZeRO-3 style);
+  - the >=300B MoEs store optimizer moments in bf16 (documented in
+    EXPERIMENTS.md) to fit 16 GB/chip v5e.
+"""
+from __future__ import annotations
+
+from repro.configs.base import (ATTN, ATTN_LOCAL, ATTN_SHARED, MAMBA2, MLSTM,
+                                SLSTM, MixtureConfig, ModelConfig, MoEConfig,
+                                register)
+
+# ---------------------------------------------------------------------------
+# Assigned pool
+# ---------------------------------------------------------------------------
+GEMMA2_27B = register(ModelConfig(
+    name="gemma2-27b", arch_type="dense", citation="arXiv:2408.00118",
+    n_layers=46, d_model=4608, n_heads=32, n_kv_heads=16, d_ff=36864,
+    vocab_size=256000, head_dim=144,
+    stages=(((ATTN_LOCAL, ATTN), 23),),          # local+global alternating
+    sliding_window=4096, attn_softcap=50.0, final_softcap=30.0,
+    ffn_type="geglu", rope_theta=10_000.0,
+))
+
+ZAMBA2_1P2B = register(ModelConfig(
+    name="zamba2-1.2b", arch_type="hybrid", citation="arXiv:2411.15242",
+    n_layers=38, d_model=2048, n_heads=32, n_kv_heads=32, d_ff=8192,
+    vocab_size=32000,
+    # Mamba2 backbone with a *shared* full transformer block every 6 layers
+    stages=(((MAMBA2,) * 5 + (ATTN_SHARED,), 6), ((MAMBA2,), 2)),
+    ssm_state=64, ssm_headdim=64, ssm_expand=2,
+    ffn_type="swiglu",
+))
+
+QWEN2_VL_7B = register(ModelConfig(
+    name="qwen2-vl-7b", arch_type="vlm", citation="arXiv:2409.12191",
+    n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4, d_ff=18944,
+    vocab_size=152064,
+    stages=(((ATTN,), 28),), qkv_bias=True,
+    rope_variant="mrope", mrope_sections=(16, 24, 24), rope_theta=1e6,
+    input_mode="multimodal", input_embed_dim=1176, n_image_tokens=1024,
+    ffn_type="swiglu",
+))
+
+CHATGLM3_6B = register(ModelConfig(
+    name="chatglm3-6b", arch_type="dense", citation="arXiv:2406.12793",
+    n_layers=28, d_model=4096, n_heads=32, n_kv_heads=2, d_ff=13696,
+    vocab_size=65024,
+    stages=(((ATTN,), 28),), qkv_bias=True,
+    rope_variant="half",                          # 2d RoPE: rotary on half dims
+    ffn_type="swiglu",
+))
+
+GROK1_314B = register(ModelConfig(
+    name="grok-1-314b", arch_type="moe", citation="hf:xai-org/grok-1",
+    n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8, d_ff=32768,
+    vocab_size=131072,
+    stages=(((ATTN,), 64),), attn_softcap=30.0,
+    moe=MoEConfig(n_experts=8, top_k=2),
+    ffn_type="gelu", opt_dtype="bfloat16",
+))
+
+ARCTIC_480B = register(ModelConfig(
+    name="arctic-480b", arch_type="moe", citation="hf:Snowflake/snowflake-arctic-base",
+    n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8, d_ff=4864,
+    vocab_size=32000,
+    stages=(((ATTN,), 35),),
+    moe=MoEConfig(n_experts=128, top_k=2, dense_residual=True),
+    ffn_type="swiglu", param_dtype="bfloat16", opt_dtype="bfloat16",
+))
+
+QWEN2_1P5B = register(ModelConfig(
+    name="qwen2-1.5b", arch_type="dense", citation="arXiv:2407.10671",
+    n_layers=28, d_model=1536, n_heads=12, n_kv_heads=2, d_ff=8960,
+    vocab_size=151936,
+    stages=(((ATTN,), 28),), qkv_bias=True,
+    ffn_type="swiglu", rope_theta=1e6,
+))
+
+QWEN1P5_4B = register(ModelConfig(
+    name="qwen1.5-4b", arch_type="dense", citation="hf:Qwen/Qwen1.5-0.5B",
+    n_layers=40, d_model=2560, n_heads=20, n_kv_heads=20, d_ff=6912,
+    vocab_size=151936,
+    stages=(((ATTN,), 40),), qkv_bias=True,
+    ffn_type="swiglu",
+))
+
+HUBERT_XLARGE = register(ModelConfig(
+    name="hubert-xlarge", arch_type="audio", citation="arXiv:2106.07447",
+    n_layers=48, d_model=1280, n_heads=16, n_kv_heads=16, d_ff=5120,
+    vocab_size=504,
+    stages=(((ATTN,), 48),), causal=False,        # encoder-only
+    input_mode="embeddings", input_embed_dim=512,  # conv feature-extractor stub
+    ffn_type="gelu", tie_embeddings=False,
+))
+
+XLSTM_1P3B = register(ModelConfig(
+    name="xlstm-1.3b", arch_type="ssm", citation="arXiv:2405.04517",
+    n_layers=48, d_model=2048, n_heads=4, n_kv_heads=4, d_ff=0,
+    vocab_size=50304,
+    stages=(((MLSTM,) * 7 + (SLSTM,), 6),),       # xLSTM[7:1]
+    ffn_type="none", rope_variant="none", tie_embeddings=False,
+))
+
+ASSIGNED = [GEMMA2_27B, ZAMBA2_1P2B, QWEN2_VL_7B, CHATGLM3_6B, GROK1_314B,
+            ARCTIC_480B, QWEN2_1P5B, QWEN1P5_4B, HUBERT_XLARGE, XLSTM_1P3B]
+ASSIGNED_NAMES = [c.name for c in ASSIGNED]
+
+# archs whose params/opt-state must be sharded over data*model (ZeRO-3)
+FSDP_ARCHS = {"gemma2-27b", "grok-1-314b", "arctic-480b", "qwen2-vl-7b",
+              "chatglm3-6b"}
+
+# ---------------------------------------------------------------------------
+# The paper's own models (Table 1)
+# ---------------------------------------------------------------------------
+_MIX = MixtureConfig(n_experts=4, prefix_len=256, router="router-4m")
+
+SMALLTALK_335M = register(ModelConfig(
+    name="smalltalk-335m", arch_type="dense", citation="SmallTalk LM Table 1",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16, d_ff=4096,
+    vocab_size=32000, stages=(((ATTN,), 24),),
+    ffn_type="gelu", mixture=_MIX,
+))
+
+SMALLTALK_1P3B = register(ModelConfig(
+    name="smalltalk-1.3b", arch_type="dense", citation="SmallTalk LM Table 1",
+    n_layers=24, d_model=2048, n_heads=16, n_kv_heads=16, d_ff=8192,
+    vocab_size=32000, stages=(((ATTN,), 24),),
+    ffn_type="gelu", mixture=_MIX,
+))
+
+ROUTER_4M = register(ModelConfig(
+    name="router-4m", arch_type="dense", citation="SmallTalk LM Table 1",
+    n_layers=12, d_model=96, n_heads=12, n_kv_heads=12, d_ff=384,
+    vocab_size=32000, stages=(((ATTN,), 12),), ffn_type="gelu",
+))
+
+ROUTER_64M = register(ModelConfig(
+    name="router-64m", arch_type="dense", citation="SmallTalk LM Table 1",
+    n_layers=12, d_model=416, n_heads=12, n_kv_heads=12, d_ff=1664,
+    vocab_size=32000, head_dim=32, stages=(((ATTN,), 12),), ffn_type="gelu",
+))
+
+ROUTER_110M = register(ModelConfig(
+    name="router-110m", arch_type="dense", citation="SmallTalk LM Table 1",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, d_ff=3072,
+    vocab_size=32000, stages=(((ATTN,), 12),), ffn_type="gelu",
+))

@@ -1,0 +1,260 @@
+"""Configuration system for the repro framework.
+
+A :class:`ModelConfig` fully describes one architecture from the assigned
+pool (or the paper's own expert/router models).  Layer heterogeneity
+(gemma2 local/global alternation, zamba2 mamba+shared-attention, xlstm
+mLSTM/sLSTM interleave) is expressed as a *stage schedule*: a list of
+``(unit, repeat)`` pairs where ``unit`` is a tuple of block kinds.  Params
+for each unit position are stacked over ``repeat`` and executed with
+``lax.scan`` so HLO size stays bounded for paper-scale configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any
+
+# ---------------------------------------------------------------------------
+# Block kinds
+# ---------------------------------------------------------------------------
+ATTN = "attn"                # global (full) attention
+ATTN_LOCAL = "attn_local"    # sliding-window attention
+ATTN_SHARED = "attn_shared"  # attention with weights shared across layers
+MAMBA2 = "mamba2"            # Mamba-2 SSD block
+MLSTM = "mlstm"              # xLSTM matrix-memory block
+SLSTM = "slstm"              # xLSTM scalar-memory block (sequential scan)
+
+BLOCK_KINDS = (ATTN, ATTN_LOCAL, ATTN_SHARED, MAMBA2, MLSTM, SLSTM)
+RECURRENT_KINDS = (MAMBA2, MLSTM, SLSTM)
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Token-level mixture-of-experts FFN (inside one SmallTalk expert)."""
+    n_experts: int
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    dense_residual: bool = False       # snowflake-arctic style parallel dense FFN
+    router_softcap: float = 0.0
+
+
+@dataclass(frozen=True)
+class MixtureConfig:
+    """SmallTalk LM sequence-level mixture (the paper's technique)."""
+    n_experts: int = 4
+    prefix_len: int = 256              # M — routing prefix length
+    router: str = "router-4m"          # config name of the router LM
+    capacity_factor: float = 1.0       # balanced-assignment capacity slack
+    router_chunk_tokens: int = 45_000_000  # T — tokens between router comms
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    # identity -------------------------------------------------------------
+    name: str = "model"
+    arch_type: str = "dense"           # dense|moe|ssm|hybrid|vlm|audio
+    citation: str = ""
+    # trunk ----------------------------------------------------------------
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab_size: int = 32000
+    head_dim: int = 0                  # 0 -> d_model // n_heads
+    stages: tuple[tuple[tuple[str, ...], int], ...] = ()  # () -> ((ATTN,), n_layers)
+    # attention ------------------------------------------------------------
+    qkv_bias: bool = False
+    rope_variant: str = "full"         # full|half|mrope|none
+    rope_theta: float = 10_000.0
+    mrope_sections: tuple[int, int, int] = (16, 24, 24)
+    attn_softcap: float = 0.0          # tanh logit soft-capping (gemma2/grok)
+    final_softcap: float = 0.0         # final-logit soft-capping (gemma2)
+    sliding_window: int = 4096         # window for ATTN_LOCAL blocks
+    causal: bool = True                # False => encoder-only (bidirectional)
+    # ffn ------------------------------------------------------------------
+    ffn_type: str = "swiglu"           # swiglu|geglu|gelu|none
+    moe: MoEConfig | None = None
+    # ssm / xlstm ----------------------------------------------------------
+    ssm_state: int = 64
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    slstm_proj_factor: float = 1.3333333
+    mlstm_proj_factor: float = 2.0
+    # io -------------------------------------------------------------------
+    input_mode: str = "tokens"         # tokens|embeddings|multimodal
+    input_embed_dim: int = 0           # for embeddings/multimodal stubs
+    n_image_tokens: int = 0            # multimodal: image token budget
+    tie_embeddings: bool = True
+    # numerics ---------------------------------------------------------------
+    norm_eps: float = 1e-6
+    param_dtype: str = "float32"       # master params
+    compute_dtype: str = "bfloat16"
+    opt_dtype: str = "float32"         # adam m/v (bf16 for >=300B archs)
+    logit_dtype: str = "float32"
+    # training -------------------------------------------------------------
+    remat: str = "unit"                # none|unit (checkpoint each scanned unit)
+    scan_layers: bool = True           # False: unroll stages (dry-run cost accounting)
+    loss_chunk: int = 256              # token-chunk for chunked CE
+    use_pallas: bool = False           # TPU target: pallas kernels; CPU: jnp refs
+    # mixture (paper) --------------------------------------------------------
+    mixture: MixtureConfig | None = None
+
+    # derived ---------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def layer_pattern(self) -> tuple[str, ...]:
+        pat: list[str] = []
+        for unit, rep in self.resolved_stages:
+            pat.extend(unit * rep)
+        return tuple(pat)
+
+    @property
+    def resolved_stages(self) -> tuple[tuple[tuple[str, ...], int], ...]:
+        if self.stages:
+            return self.stages
+        return (((ATTN,), self.n_layers),)
+
+    @property
+    def is_encoder(self) -> bool:
+        return not self.causal
+
+    @property
+    def has_decode(self) -> bool:
+        return self.causal
+
+    @property
+    def subquadratic(self) -> bool:
+        """True if no block holds an unbounded full-attention KV cache...
+
+        ... i.e. the arch is eligible for long_500k per the assignment rules.
+        ATTN_LOCAL keeps O(window) KV; recurrent blocks keep O(1) state.
+        gemma2 (alternating local/global) is grandfathered in via its native
+        sliding-window variant (see DESIGN.md §4).
+        """
+        kinds = set(self.layer_pattern)
+        full_attn = {ATTN, ATTN_SHARED} & kinds
+        local_or_rec = ({ATTN_LOCAL} | set(RECURRENT_KINDS)) & kinds
+        if not full_attn:
+            return True
+        # mixed local/global counts (bounded KV on most layers)
+        return ATTN_LOCAL in kinds or bool(set(RECURRENT_KINDS) & kinds)
+
+    def validate(self) -> None:
+        assert self.d_model % self.n_heads == 0 or self.head_dim, self.name
+        assert self.n_heads % self.n_kv_heads == 0, self.name
+        assert len(self.layer_pattern) == self.n_layers, (
+            f"{self.name}: stage schedule covers {len(self.layer_pattern)} "
+            f"layers, config says {self.n_layers}")
+        for k in self.layer_pattern:
+            assert k in BLOCK_KINDS, k
+        if self.moe is not None:
+            assert self.moe.top_k <= self.moe.n_experts
+
+    def replace(self, **kw: Any) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                          # train|prefill|decode
+
+
+INPUT_SHAPES: dict[str, InputShape] = {
+    "train_4k":    InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k":  InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k":   InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+_REGISTRY: dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    cfg.validate()
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown config {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_configs() -> list[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+_LOADED = False
+
+
+def _ensure_loaded() -> None:
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    # import for registration side effects
+    from repro.configs import archs  # noqa: F401
+
+
+def smoke_variant(cfg: ModelConfig) -> ModelConfig:
+    """Reduced config of the same family: 2 layers, d_model<=512, <=4 experts."""
+    d_model = min(cfg.d_model, 256)
+    n_heads = min(cfg.n_heads, 4)
+    n_kv = max(1, min(cfg.n_kv_heads, n_heads))
+    while n_heads % n_kv:
+        n_kv -= 1
+    # keep one unit of each distinct stage kind, at most 2 layers total
+    pattern = cfg.layer_pattern
+    unit: tuple[str, ...]
+    if len(set(pattern)) == 1:
+        unit = (pattern[0],) * min(2, len(pattern))
+    else:
+        # first occurrence of up to 2 distinct kinds, preserving order
+        seen: list[str] = []
+        for k in pattern:
+            if k not in seen:
+                seen.append(k)
+            if len(seen) == 2:
+                break
+        unit = tuple(seen)
+    moe = cfg.moe
+    if moe is not None:
+        moe = dataclasses.replace(moe, n_experts=min(4, moe.n_experts),
+                                  top_k=min(2, moe.n_experts, moe.top_k))
+    return cfg.replace(
+        name=cfg.name + "-smoke",
+        n_layers=len(unit),
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=0,
+        d_ff=min(cfg.d_ff, 512) if cfg.d_ff else 0,
+        vocab_size=min(cfg.vocab_size, 512),
+        stages=((unit, 1),),
+        sliding_window=min(cfg.sliding_window, 64),
+        mrope_sections=(8, 12, 12) if cfg.rope_variant == "mrope" else cfg.mrope_sections,
+        n_image_tokens=min(cfg.n_image_tokens, 16),
+        input_embed_dim=min(cfg.input_embed_dim, 64) if cfg.input_embed_dim else 0,
+        ssm_headdim=min(cfg.ssm_headdim, 32),
+        ssm_state=min(cfg.ssm_state, 16),
+        loss_chunk=64,
+        moe=moe,
+    )

@@ -1,0 +1,1 @@
+from repro.core import assignment, em, mixture, router  # noqa: F401

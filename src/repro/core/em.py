@@ -1,0 +1,155 @@
+"""EM training of the routers (paper Algorithm 1, lines 1-10).
+
+Alternates:
+  M-step: every router takes SGD steps on its currently-assigned segment
+          (vmapped across routers — embarrassingly parallel);
+  E-step: a fresh corpus chunk is scored by all routers on a short prefix
+          and re-partitioned with balanced assignments.
+
+Communication accounting (paper App. A.4) is tracked explicitly:
+``comm_bytes`` counts exactly the score floats a real deployment would
+all-gather (2 bytes * N sequences per router per E-step) — nothing else
+crosses node boundaries.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import assignment as asg
+from repro.core import router as routerlib
+from repro.data import SyntheticCorpus, make_lm_batch
+from repro.optim import AdamWConfig, adamw
+
+
+@dataclass
+class EMConfig:
+    n_experts: int = 4
+    prefix_len: int = 64            # M
+    em_iters: int = 4               # T
+    # N sequences per E-step chunk.  Must be >> steps_per_iter*batch_size/E:
+    # routers must see (nearly) fresh data each step or they memorize their
+    # segment instead of learning its distribution (paper: ~45M tokens/chunk)
+    chunk_size: int = 2048
+    steps_per_iter: int = 50        # router SGD steps per M-step
+    batch_size: int = 16
+    capacity_factor: float = 1.0
+    lr: float = 1e-3
+    warmup: int = 20
+
+
+@dataclass
+class EMState:
+    router_params: dict
+    history: list = field(default_factory=list)
+    comm_bytes: int = 0
+    chunks_used: int = 0
+
+
+def _per_expert_batches(corpus: SyntheticCorpus, indices_by_e: list[np.ndarray],
+                        batch_size: int, rng: np.random.Generator,
+                        prefix_len: int) -> dict:
+    """Build an (E, B, M) token batch: each router trains on its segment."""
+    toks = []
+    for idx in indices_by_e:
+        sel = rng.choice(idx, size=batch_size, replace=len(idx) < batch_size)
+        t, _ = corpus.sequences(sel)
+        toks.append(t[:, :prefix_len])
+    toks = np.stack(toks)                            # (E,B,M)
+    labels = np.roll(toks, -1, axis=2)
+    mask = np.ones_like(toks, np.float32)
+    mask[..., -1] = 0.0
+    return {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels),
+            "loss_mask": jnp.asarray(mask)}
+
+
+def domain_purity(assign: np.ndarray, domains: np.ndarray, e: int) -> float:
+    """Fraction of sequences landing with their segment's plurality domain."""
+    total = 0
+    for ex in range(e):
+        d = domains[assign == ex]
+        if len(d):
+            total += np.bincount(d).max()
+    return total / len(assign)
+
+
+def train_routers(corpus: SyntheticCorpus, rcfg, emcfg: EMConfig,
+                  key) -> EMState:
+    E = emcfg.n_experts
+    key, k1 = jax.random.split(key)
+    stacked = routerlib.init_ensemble(k1, rcfg, E)
+    opt_cfg = AdamWConfig(peak_lr=emcfg.lr, warmup_steps=emcfg.warmup,
+                          schedule="constant",
+                          total_steps=emcfg.em_iters * emcfg.steps_per_iter)
+    opt_state = jax.vmap(lambda p: adamw.init_state(p, opt_cfg))(stacked)
+    rng = np.random.default_rng(0xB0B)
+    state = EMState(router_params=stacked)
+
+    # initial chunk: random assignment (Algorithm 1 line 3)
+    chunk = np.arange(emcfg.chunk_size, dtype=np.int64)
+    assign = rng.integers(0, E, size=emcfg.chunk_size)
+    _, domains = corpus.sequences(chunk)
+    state.chunks_used = 1
+
+    train_step = jax.jit(lambda p, s, b: routerlib.ensemble_train_step(
+        p, s, b, rcfg, opt_cfg))
+    score_fn = jax.jit(lambda p, t: routerlib.ensemble_scores(p, rcfg, t))
+    cap = asg.default_capacity(emcfg.chunk_size, E, emcfg.capacity_factor)
+    assign_fn = jax.jit(lambda s: asg.balanced_assignment(s, cap))
+
+    for it in range(emcfg.em_iters):
+        # ---- M-step: SGD on own segment --------------------------------
+        seg = [chunk[assign == ex] for ex in range(E)]
+        seg = [s if len(s) else chunk[:1] for s in seg]
+        losses = []
+        for _ in range(emcfg.steps_per_iter):
+            batch = _per_expert_batches(corpus, seg, emcfg.batch_size, rng,
+                                        emcfg.prefix_len)
+            stacked, opt_state, metrics = train_step(stacked, opt_state, batch)
+            losses.append(np.asarray(metrics["ce"]))
+        # ---- E-step: fresh chunk, score, balanced-assign ----------------
+        chunk = state.chunks_used * emcfg.chunk_size + \
+            np.arange(emcfg.chunk_size, dtype=np.int64)
+        state.chunks_used += 1
+        toks, domains = corpus.sequences(chunk)
+        scores = score_fn(stacked, jnp.asarray(toks[:, :emcfg.prefix_len]))
+        assign = np.asarray(assign_fn(scores))
+        # all-gather of one f16 score per (sequence, router): App. A.4
+        state.comm_bytes += 2 * emcfg.chunk_size * E
+        state.history.append({
+            "iter": it,
+            "router_ce": float(np.mean(losses[-1])),
+            "purity": domain_purity(assign, domains, E),
+            "load": np.bincount(assign, minlength=E).tolist(),
+        })
+
+    state.router_params = stacked
+    return state
+
+
+def shard_corpus(state_or_params, rcfg, corpus: SyntheticCorpus,
+                 n_sequences: int, emcfg: EMConfig,
+                 batch: int = 1024) -> tuple[np.ndarray, np.ndarray, int]:
+    """Stage-2 segmentation (Algorithm 1 lines 12-13).
+
+    Scores the first ``n_sequences`` of the corpus in chunks and returns
+    (assignments (N,), domains (N,), comm_bytes).
+    """
+    stacked = getattr(state_or_params, "router_params", state_or_params)
+    E = emcfg.n_experts
+    score_fn = jax.jit(lambda t: routerlib.ensemble_scores(stacked, rcfg, t))
+    cap = asg.default_capacity(batch, E, emcfg.capacity_factor)
+    assign_fn = jax.jit(lambda s: asg.balanced_assignment(s, cap))
+    out, doms = [], []
+    comm = 0
+    for start in range(0, n_sequences, batch):
+        idx = np.arange(start, min(start + batch, n_sequences), dtype=np.int64)
+        toks, d = corpus.sequences(idx)
+        scores = score_fn(jnp.asarray(toks[:, :emcfg.prefix_len]))
+        out.append(np.asarray(assign_fn(scores[:len(idx)])))
+        doms.append(d)
+        comm += 2 * len(idx) * E
+    return np.concatenate(out), np.concatenate(doms), comm

@@ -1,0 +1,137 @@
+"""SmallTalk mixture: independent expert training + routed inference.
+
+Stage 2 of Algorithm 1: after the routers have segmented the corpus, the
+E experts are plain LMs trained completely independently (here looped on
+one host; on the production mesh each lives on its own pod — see
+``mixture_train_step`` which vmaps a stacked expert tree over the ``pod``
+axis with zero cross-pod collectives).
+
+Inference (§2.2): score the first ``prefix_len`` tokens with every router,
+``argmax`` (no balancing), run the ONE selected expert.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import assignment as asg
+from repro.core import router as routerlib
+from repro.data import AssignedStream, SyntheticCorpus
+from repro.models import model as modellib
+from repro.optim import AdamWConfig, adamw
+
+Params = dict[str, Any]
+
+
+@dataclass
+class MixtureState:
+    expert_cfg: Any
+    router_cfg: Any
+    expert_params: list          # E independent param trees
+    router_params: Params        # stacked (E, ...)
+    prefix_len: int
+    history: list = field(default_factory=list)
+
+
+# ---------------------------------------------------------------------------
+# Expert training (independent)
+# ---------------------------------------------------------------------------
+def train_expert(cfg, params: Params, stream, steps: int, opt_cfg: AdamWConfig,
+                 log_every: int = 50) -> tuple[Params, list]:
+    state = adamw.init_state(params, opt_cfg)
+    step_fn = jax.jit(adamw.make_train_step(
+        lambda p, b: modellib.loss_and_metrics(p, cfg, b), opt_cfg))
+    hist = []
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in stream.next().items()
+                 if k != "domain"}
+        params, state, metrics = step_fn(params, state, batch)
+        if i % log_every == 0 or i == steps - 1:
+            hist.append({"step": i, "ce": float(metrics["ce"])})
+    return params, hist
+
+
+def train_mixture_experts(cfg, corpus: SyntheticCorpus, assignments: np.ndarray,
+                          steps_per_expert: int, batch_size: int,
+                          opt_cfg: AdamWConfig, key,
+                          router_state=None, prefix_len: int = 64,
+                          router_cfg=None) -> MixtureState:
+    E = cfg.mixture.n_experts if cfg.mixture else int(assignments.max()) + 1
+    expert_params = []
+    hist = []
+    for e in range(E):
+        k = jax.random.fold_in(key, e)
+        params = modellib.init_params(k, cfg)
+        idx = np.nonzero(assignments == e)[0]
+        stream = AssignedStream(corpus, idx, batch_size, seed=e)
+        params, h = train_expert(cfg, params, stream, steps_per_expert, opt_cfg)
+        expert_params.append(params)
+        hist.append(h)
+    return MixtureState(expert_cfg=cfg, router_cfg=router_cfg,
+                        expert_params=expert_params,
+                        router_params=(router_state.router_params
+                                       if router_state else None),
+                        prefix_len=prefix_len, history=hist)
+
+
+# ---------------------------------------------------------------------------
+# Routed evaluation / serving
+# ---------------------------------------------------------------------------
+def route(mix: MixtureState, tokens: jnp.ndarray,
+          prefix_len: int | None = None) -> jnp.ndarray:
+    """Inference routing: (B,) expert ids from a short prefix, pure argmax."""
+    m = prefix_len or mix.prefix_len
+    scores = routerlib.ensemble_scores(mix.router_params, mix.router_cfg,
+                                       tokens[:, :m])
+    return asg.argmax_assignment(scores)
+
+
+def eval_nll(cfg, params: Params, batch: dict) -> np.ndarray:
+    nll, _ = modellib.per_token_nll(params, cfg, batch)
+    mask = batch.get("loss_mask", jnp.ones_like(nll))
+    return np.asarray((nll * mask).sum(1) / jnp.maximum(mask.sum(1), 1))
+
+
+def mixture_eval_ppl(mix: MixtureState, batch: dict,
+                     prefix_len: int | None = None,
+                     return_routes: bool = False):
+    """Per-sequence routed NLL -> corpus perplexity."""
+    toks = jnp.asarray(batch["tokens"])
+    eids = np.asarray(route(mix, toks, prefix_len))
+    nll = np.zeros(toks.shape[0], np.float64)
+    for e in np.unique(eids):
+        sel = np.nonzero(eids == e)[0]
+        sub = {k: jnp.asarray(np.asarray(v)[sel]) for k, v in batch.items()
+               if k != "domain"}
+        nll[sel] = eval_nll(mix.expert_cfg, mix.expert_params[int(e)], sub)
+    ppl = float(np.exp(nll.mean()))
+    return (ppl, eids, nll) if return_routes else ppl
+
+
+def dense_eval_ppl(cfg, params: Params, batch: dict) -> float:
+    sub = {k: jnp.asarray(v) for k, v in batch.items() if k != "domain"}
+    return float(np.exp(eval_nll(cfg, params, sub).mean()))
+
+
+# ---------------------------------------------------------------------------
+# Stacked multi-pod training step (dry-run / production)
+# ---------------------------------------------------------------------------
+def stack_experts(expert_params: list) -> Params:
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *expert_params)
+
+
+def mixture_train_step(cfg, opt_cfg: AdamWConfig):
+    """Build the stacked train step: vmap over the leading expert axis.
+
+    On the (pod, data, model) mesh the stacked axis is sharded over
+    ``pod``: each pod updates its own expert.  The compiled HLO contains
+    NO collectives on the pod axis (verified by launch/dryrun.py), which
+    is the paper's communication claim stated in the IR.
+    """
+    step = adamw.make_train_step(
+        lambda p, b: modellib.loss_and_metrics(p, cfg, b), opt_cfg)
+    return jax.vmap(step)

@@ -1,0 +1,60 @@
+"""Router ensemble: E independent tiny LMs, stacked for vmap execution.
+
+The router posterior is Bayes over per-expert prefix likelihoods
+(paper Eq. 4-7): ``score[b, e] = log p(x_{1:M} | theta^{r,e})``.  On one
+host we stack the E router param trees on a leading axis and ``vmap`` the
+LM; on the production mesh the same stacked tree is sharded over the
+``pod`` axis so each pod scores with its own router — the only cross-pod
+traffic is the (B, E) score matrix (2 bytes/sequence/router, App. A.4).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as modellib
+
+Params = dict[str, Any]
+
+
+def init_ensemble(key, rcfg, n_experts: int) -> Params:
+    """Stacked param tree with leading axis E (independent inits)."""
+    keys = jax.random.split(key, n_experts)
+    return jax.vmap(lambda k: modellib.init_params(k, rcfg))(keys)
+
+
+def unstack(stacked: Params, e: int) -> Params:
+    return jax.tree_util.tree_map(lambda x: x[e], stacked)
+
+
+def sequence_loglik(params: Params, rcfg, tokens: jnp.ndarray) -> jnp.ndarray:
+    """log p(x_{1:M}) per sequence under ONE router.  tokens: (B, M) -> (B,)."""
+    labels = jnp.roll(tokens, -1, axis=1)
+    nll, _ = modellib.per_token_nll(params, rcfg, {"tokens": tokens,
+                                                   "labels": labels})
+    mask = jnp.ones_like(nll).at[:, -1].set(0.0)     # no label for last pos
+    return -(nll * mask).sum(axis=1)
+
+
+def ensemble_scores(stacked: Params, rcfg, prefix: jnp.ndarray) -> jnp.ndarray:
+    """Score matrix (B, E): prefix log-likelihood under every router."""
+    scores = jax.vmap(lambda p: sequence_loglik(p, rcfg, prefix))(stacked)
+    return scores.T                                   # (B, E)
+
+
+def ensemble_train_step(stacked: Params, opt_states: Params, batches: dict,
+                        rcfg, opt_cfg):
+    """One SGD step for every router on its own batch.
+
+    ``batches`` leaves have leading axis E: router e trains on batches[e].
+    vmap == "each node trains its own router"; zero cross-router terms.
+    """
+    from repro.optim import adamw
+
+    def loss_fn(params, batch):
+        return modellib.loss_and_metrics(params, rcfg, batch)
+
+    step = adamw.make_train_step(loss_fn, opt_cfg)
+    return jax.vmap(step)(stacked, opt_states, batches)

@@ -1,0 +1,5 @@
+from repro.data.corpus import DataConfig, SyntheticCorpus, make_lm_batch
+from repro.data.pipeline import AssignedStream, Stream, chunk_indices
+
+__all__ = ["DataConfig", "SyntheticCorpus", "make_lm_batch",
+           "AssignedStream", "Stream", "chunk_indices"]

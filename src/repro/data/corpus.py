@@ -1,0 +1,92 @@
+"""Synthetic multi-domain corpus.
+
+The paper trains on RedPajama-V2 (not shippable in this container), so the
+framework provides a deterministic synthetic corpus with *K latent domains*
+whose statistics differ enough that (a) a tiny LM can tell domains apart
+from a short prefix and (b) per-domain specialists beat a single dense
+model at equal total tokens — the two properties SmallTalk LM exploits.
+
+Each domain d draws from an affine bigram chain
+    x_{t+1} = (a_d * x_t + b_d + eps) mod V   with prob `signal`
+    x_{t+1} ~ Uniform(V)                       otherwise
+with per-domain (a_d, b_d) and jitter eps ~ U[0, jitter).  Domains are
+therefore equally hard but mutually unpredictable: a model trained on
+domain d sees ~uniform noise on other domains.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int = 512
+    seq_len: int = 256
+    n_domains: int = 4
+    signal: float = 0.85
+    jitter: int = 2
+    seed: int = 0
+
+
+class SyntheticCorpus:
+    """Deterministic, stream-indexed corpus: sequence i is always the same."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        V, K = cfg.vocab_size, cfg.n_domains
+        # co-prime multipliers => distinct chains
+        cands = [a for a in range(3, 10 * K + 3, 2) if np.gcd(a, V) == 1]
+        self.a = np.array(cands[:K], np.int64)
+        self.b = rng.integers(1, V, size=K).astype(np.int64)
+
+    def domain_of(self, index: int | np.ndarray) -> np.ndarray:
+        return np.asarray(index) % self.cfg.n_domains
+
+    def sequences(self, indices: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Generate sequences for stream indices.  Returns (tokens (N,S), domains (N,))."""
+        cfg = self.cfg
+        indices = np.asarray(indices, np.int64)
+        N = len(indices)
+        doms = self.domain_of(indices)
+        V, S = cfg.vocab_size, cfg.seq_len
+        # per-sequence counter-based RNG: sequence i is identical no matter
+        # which batch it is generated in (expert pipelines regenerate their
+        # assigned indices locally — see data/pipeline.py)
+        toks = np.empty((N, S), np.int64)
+        noise = np.empty((N, S - 1))
+        jit = np.empty((N, S - 1), np.int64)
+        unif = np.empty((N, S - 1), np.int64)
+        for i, idx in enumerate(indices):
+            r = np.random.default_rng(
+                np.random.SeedSequence([cfg.seed + 1, int(idx)]))
+            toks[i, 0] = r.integers(0, V)
+            noise[i] = r.random(S - 1)
+            jit[i] = r.integers(0, max(cfg.jitter, 1), size=S - 1)
+            unif[i] = r.integers(0, V, size=S - 1)
+        a = self.a[doms]
+        b = self.b[doms]
+        for t in range(1, S):
+            nxt = (a * toks[:, t - 1] + b + jit[:, t - 1]) % V
+            toks[:, t] = np.where(noise[:, t - 1] < cfg.signal, nxt,
+                                  unif[:, t - 1])
+        return toks.astype(np.int32), doms.astype(np.int32)
+
+    def batch(self, step: int, batch_size: int, *, offset: int = 0) -> dict:
+        """Training batch dict for ``step`` (deterministic)."""
+        idx = offset + step * batch_size + np.arange(batch_size)
+        toks, doms = self.sequences(idx)
+        return make_lm_batch(toks, domains=doms)
+
+
+def make_lm_batch(tokens: np.ndarray, domains: np.ndarray | None = None) -> dict:
+    """tokens (N,S) -> next-token-prediction batch."""
+    labels = np.roll(tokens, -1, axis=1)
+    mask = np.ones_like(tokens, np.float32)
+    mask[:, -1] = 0.0
+    out = {"tokens": tokens, "labels": labels, "loss_mask": mask}
+    if domains is not None:
+        out["domain"] = domains
+    return out

@@ -1,0 +1,69 @@
+"""Data pipeline: deterministic sharded streams + assignment-driven
+per-expert streams for SmallTalk training.
+
+The pipeline is host-side numpy (as a real input pipeline would be) and
+hands jax fully-formed batches.  ``ShardedStream`` models the "each expert
+group reads its own slice of the corpus" layout from the paper: expert e's
+stream only materializes the sequences assigned to e, so no token is ever
+sent over the interconnect.
+"""
+from __future__ import annotations
+
+from collections.abc import Iterator
+
+import numpy as np
+
+from repro.data.corpus import SyntheticCorpus, make_lm_batch
+
+
+class Stream:
+    """Round-robin deterministic batch stream over the corpus."""
+
+    def __init__(self, corpus: SyntheticCorpus, batch_size: int,
+                 offset: int = 0):
+        self.corpus = corpus
+        self.batch_size = batch_size
+        self.offset = offset
+        self.step = 0
+
+    def next(self) -> dict:
+        b = self.corpus.batch(self.step, self.batch_size, offset=self.offset)
+        self.step += 1
+        return b
+
+    def __iter__(self) -> Iterator[dict]:
+        while True:
+            yield self.next()
+
+
+class AssignedStream:
+    """Batches drawn from an explicit set of assigned sequence indices.
+
+    This is the expert-side view after routing: the router decided which
+    corpus indices belong to this expert; the expert's input pipeline
+    re-generates exactly those sequences locally.
+    """
+
+    def __init__(self, corpus: SyntheticCorpus, indices: np.ndarray,
+                 batch_size: int, seed: int = 0):
+        self.corpus = corpus
+        self.indices = np.asarray(indices, np.int64)
+        self.batch_size = batch_size
+        self.rng = np.random.default_rng(seed)
+        self._order = self.rng.permutation(len(self.indices))
+        self._pos = 0
+
+    def next(self) -> dict:
+        n = self.batch_size
+        if self._pos + n > len(self._order):           # reshuffle epoch
+            self._order = self.rng.permutation(len(self.indices))
+            self._pos = 0
+        sel = self.indices[self._order[self._pos:self._pos + n]]
+        self._pos += n
+        toks, doms = self.corpus.sequences(sel)
+        return make_lm_batch(toks, domains=doms)
+
+
+def chunk_indices(chunk_id: int, chunk_size: int) -> np.ndarray:
+    """Stream indices of corpus chunk ``chunk_id`` (disjoint, contiguous)."""
+    return chunk_id * chunk_size + np.arange(chunk_size, dtype=np.int64)

@@ -1,0 +1,32 @@
+"""Public entry points for attention.
+
+``flash_attention`` dispatches between the Pallas TPU kernel and the
+blockwise-jnp reference; ``decode_attention`` is the single-token path.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ref as _ref
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, impl: str = "jnp",
+                    interpret: bool = True, q_chunk: int = 1024) -> jnp.ndarray:
+    """q: (B,Sq,Hq,hd); k,v: (B,Skv,Hkv,hd) -> (B,Sq,Hq,hd)."""
+    if impl == "naive":
+        return _ref.mha_reference(q, k, v, causal=causal, window=window,
+                                  softcap=softcap)
+    if impl == "pallas":
+        from repro.kernels.flash_attention import flash_attention as _pl
+        return _pl.flash_attention_pallas(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            interpret=interpret)
+    return _ref.blockwise_attention(q, k, v, causal=causal, window=window,
+                                    softcap=softcap, q_chunk=q_chunk)
+
+
+def decode_attention(q, k, v, *, q_pos, kv_pos, window: int = 0,
+                     softcap: float = 0.0) -> jnp.ndarray:
+    return _ref.decode_attention_ref(q, k, v, q_pos=q_pos, kv_pos=kv_pos,
+                                     window=window, softcap=softcap)

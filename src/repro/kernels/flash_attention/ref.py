@@ -1,0 +1,132 @@
+"""Pure-jnp oracles for the flash-attention kernel.
+
+``mha_reference`` materializes the full (Sq, Skv) score matrix — the
+ground-truth oracle for kernel tests.  ``blockwise_attention`` is the
+memory-bounded online-softmax implementation used by the model code on
+CPU / in dry-runs (the Pallas kernel replaces it on real TPU).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _soft_cap(x, cap: float):
+    return jnp.tanh(x / cap) * cap if cap else x
+
+
+def _mask(q_pos, kv_pos, causal: bool, window: int):
+    """q_pos: (..., Sq), kv_pos: (..., Skv) -> bool (..., Sq, Skv)."""
+    m = jnp.ones(q_pos.shape + kv_pos.shape[-1:], bool)
+    qp = q_pos[..., :, None]
+    kp = kv_pos[..., None, :]
+    if causal:
+        m &= kp <= qp
+    if window > 0:
+        m &= kp > qp - window
+    return m
+
+
+def mha_reference(q, k, v, *, causal: bool = True, window: int = 0,
+                  softcap: float = 0.0) -> jnp.ndarray:
+    """q: (B,Sq,Hq,hd); k,v: (B,Skv,Hkv,hd). Full-materialization oracle."""
+    B, Sq, Hq, hd = q.shape
+    _, Skv, Hkv, _ = k.shape
+    g = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, g, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kf) / math.sqrt(hd)
+    s = _soft_cap(s, softcap)
+    q_pos = jnp.arange(Sq)
+    kv_pos = jnp.arange(Skv)
+    m = _mask(q_pos, kv_pos, causal, window)
+    s = jnp.where(m[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, vf)
+    return o.reshape(B, Sq, Hq, hd).astype(q.dtype)
+
+
+def _chunk(n: int, pref: int) -> int:
+    c = min(pref, n)
+    while n % c:
+        c -= 1
+    return c
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                   "q_chunk", "kv_chunk"))
+def blockwise_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                        softcap: float = 0.0, q_chunk: int = 1024,
+                        kv_chunk: int = 1024) -> jnp.ndarray:
+    """Online-softmax attention with O(Sq*kv_chunk) workspace."""
+    B, Sq, Hq, hd = q.shape
+    _, Skv, Hkv, _ = k.shape
+    g = Hq // Hkv
+    cq = _chunk(Sq, q_chunk)
+    ck = _chunk(Skv, kv_chunk)
+    nq, nk = Sq // cq, Skv // ck
+    scale = 1.0 / math.sqrt(hd)
+
+    qf = q.astype(jnp.float32).reshape(B, nq, cq, Hkv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    kf = k.astype(jnp.float32).reshape(B, nk, ck, Hkv, hd)
+    vf = v.astype(jnp.float32).reshape(B, nk, ck, Hkv, hd)
+
+    def per_q(args):
+        qi, qc = args                                # qc: (B,cq,Hkv,g,hd)
+        q_pos = qi * cq + jnp.arange(cq)
+
+        def kv_step(carry, inputs):
+            m_i, l_i, acc = carry
+            ki, kc, vc = inputs                      # (B,ck,Hkv,hd)
+            kv_pos = ki * ck + jnp.arange(ck)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qc, kc) * scale
+            s = _soft_cap(s, softcap)
+            msk = _mask(q_pos, kv_pos, causal, window)   # (cq, ck)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_i, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_i - m_new)
+            l_new = l_i * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum("bkgqs,bskd->bkgqd", p, vc)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, Hkv, g, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, g, cq), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, g, cq, hd), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), kf.transpose(1, 0, 2, 3, 4), vf.transpose(1, 0, 2, 3, 4)))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]   # (B,Hkv,g,cq,hd)
+        return out.transpose(0, 3, 1, 2, 4)              # (B,cq,Hkv,g,hd)
+
+    out = jax.lax.map(per_q, (jnp.arange(nq), qf))       # (nq,B,cq,Hkv,g,hd)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, Hq, hd)
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, *, q_pos, kv_pos, window: int = 0,
+                         softcap: float = 0.0) -> jnp.ndarray:
+    """Single-step decode oracle.
+
+    q: (B,1,Hq,hd); k,v: (B,Skv,Hkv,hd); q_pos: (B,1); kv_pos: (B,Skv)
+    with -1 marking empty slots.
+    """
+    B, _, Hq, hd = q.shape
+    _, Skv, Hkv, _ = k.shape
+    g = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, g, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, k.astype(jnp.float32)) / math.sqrt(hd)
+    s = _soft_cap(s, softcap)
+    valid = (kv_pos >= 0) & (kv_pos <= q_pos)            # (B,Skv)
+    if window > 0:
+        valid &= kv_pos > q_pos - window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, 1, Hq, hd).astype(q.dtype)

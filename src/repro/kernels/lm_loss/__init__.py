@@ -1,0 +1,1 @@
+from repro.kernels.lm_loss import ops, ref  # noqa: F401

@@ -1,0 +1,20 @@
+"""Public entry point for the fused LM loss."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.lm_loss import ref as _ref
+
+
+def lm_loss(hidden, unembed, labels, *, softcap: float = 0.0,
+            chunk: int = 256, impl: str = "jnp",
+            interpret: bool = True) -> jnp.ndarray:
+    """Per-token NLL (B,S) f32 without materializing (B,S,V) logits."""
+    if impl == "naive":
+        return _ref.lm_loss_naive(hidden, unembed, labels, softcap=softcap)
+    if impl == "pallas":
+        from repro.kernels.lm_loss import lm_loss as _pl
+        return _pl.lm_loss_pallas(hidden, unembed, labels, softcap=softcap,
+                                  interpret=interpret)
+    return _ref.lm_loss_chunked(hidden, unembed, labels, softcap=softcap,
+                                chunk=chunk)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the fused LM-loss (softmax cross-entropy) kernel.
+
+The hot-spot: with vocabularies up to 256k, materializing (B,S,V) logits
+costs tens of GB.  ``lm_loss_chunked`` scans over token chunks so only
+(B,chunk,V) exists at a time; the Pallas kernel additionally tiles the
+vocab dimension through VMEM with an online logsumexp.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _soft_cap(x, cap: float):
+    return jnp.tanh(x / cap) * cap if cap else x
+
+
+def lm_loss_naive(hidden, unembed, labels, *, softcap: float = 0.0) -> jnp.ndarray:
+    """Full-materialization oracle.
+
+    hidden: (B,S,D); unembed: (V,D); labels: (B,S) int32.
+    Returns per-token NLL (B,S) float32.
+    """
+    logits = hidden.astype(jnp.float32) @ unembed.astype(jnp.float32).T
+    logits = _soft_cap(logits, softcap)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return lse - gold
+
+
+@partial(jax.jit, static_argnames=("softcap", "chunk"))
+def lm_loss_chunked(hidden, unembed, labels, *, softcap: float = 0.0,
+                    chunk: int = 256) -> jnp.ndarray:
+    """Token-chunked NLL: peak logits workspace is (B,chunk,V)."""
+    B, S, D = hidden.shape
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    nc = S // c
+    h = hidden.reshape(B, nc, c, D).transpose(1, 0, 2, 3)
+    y = labels.reshape(B, nc, c).transpose(1, 0, 2)
+
+    def step(_, inp):
+        hc, yc = inp
+        return None, lm_loss_naive(hc, unembed, yc, softcap=softcap)
+
+    _, nll = jax.lax.scan(step, None, (h, y))
+    return nll.transpose(1, 0, 2).reshape(B, S)

@@ -1,0 +1,419 @@
+"""Trip-count-aware HLO cost analyzer.
+
+XLA's built-in ``cost_analysis`` counts a ``while`` body ONCE, so any model
+that scans over layers (ours do — that is how paper-scale HLO stays
+compilable) has its FLOPs/bytes/collectives undercounted by ~n_layers.
+This module parses ``compiled.as_text()`` (the SPMD-partitioned,
+per-device module) and computes:
+
+  * flops            — 2 * prod(result) * prod(contracting dims) per dot,
+                       multiplied through while-loop trip counts;
+  * hbm_bytes        — TPU-style fusion model: every *top-level* op writes
+                       its result once and reads its operands once; fusion
+                       internals are free (the CPU backend's
+                       ``bytes accessed`` counts unfused internals and
+                       overestimates TPU HBM traffic by >10x);
+  * collective bytes — ring-factored per-device traffic (see hlo_stats),
+                       also trip-count-multiplied, with pod-crossing split.
+
+Validated against XLA cost_analysis on fully-unrolled modules (equal trip
+counts of 1): flops agree to <1%.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from functools import lru_cache
+
+import numpy as np
+
+from repro.launch import hlo_stats
+
+_DTYPE_BYTES = hlo_stats._DTYPE_BYTES
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w\.\-~]+)\s*\(.*\)\s*->\s*\S.*\{\s*$")
+_TRIP_CFG = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OP_ASSIGN = re.compile(r"^\s+(?:ROOT\s+)?%?([\w\.\-~]+)\s*=\s*(.*)$")
+_KIND_CALL = re.compile(r"^([\w\-]+)\((.*)$")
+_SHAPE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_ATTR_CALLS = re.compile(r"calls=%?([\w\.\-~]+)")
+_ATTR_BODY = re.compile(r"body=%?([\w\.\-~]+)")
+_ATTR_COND = re.compile(r"condition=%?([\w\.\-~]+)")
+_ATTR_TOAPPLY = re.compile(r"to_apply=%?([\w\.\-~]+)")
+_ATTR_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+
+_MEM_SKIP = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "while", "call", "conditional", "after-all", "custom-call",
+             "partition-id", "replica-id", "iota"}
+_CALL_KINDS = {"while", "call", "conditional", "fusion"}
+
+
+def _shape_dims(tok: str):
+    m = _SHAPE.match(tok)
+    if not m:
+        return None, []
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",") if d]
+
+
+def _bytes_of(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    kind: str
+    rest: str          # operand list + attrs (raw remainder of line)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)   # %name -> type string
+
+    @property
+    def ops_by_name(self) -> dict:
+        if not hasattr(self, "_by_name"):
+            self._by_name = {o.name: o for o in self.ops}
+        return self._by_name
+
+
+def parse_module(text: str) -> tuple[dict, str]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry = None
+    for line in text.splitlines():
+        h = _COMP_HEADER.match(line)
+        if h:
+            cur = Computation(h.group(2))
+            comps[cur.name] = cur
+            if h.group(1):
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _OP_ASSIGN.match(line)
+        if m:
+            name, rhs = m.groups()
+            parsed = _split_rhs(rhs)
+            if parsed is None:
+                continue
+            tstr, kind, rest = parsed
+            cur.ops.append(Op(name, tstr, kind, rest))
+            cur.shapes[name] = tstr
+    return comps, entry
+
+
+def _split_rhs(rhs: str):
+    """rhs = '<type> <kind>(<operands...>), attrs'.  Tuple types contain
+    spaces and /*index=k*/ comments, so split paren-aware."""
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    tstr, rest = rhs[:i + 1], rhs[i + 1:].strip()
+                    break
+        else:
+            return None
+    else:
+        parts = rhs.split(None, 1)
+        if len(parts) != 2:
+            return None
+        tstr, rest = parts
+    m = _KIND_CALL.match(rest)
+    if not m:
+        return None
+    return tstr, m.group(1), m.group(2)
+
+
+def _operand_names(rest: str) -> list[str]:
+    """First-level operand %names up to the closing paren."""
+    out, depth = [], 1
+    token = ""
+    for ch in rest:
+        if ch == "(" or ch == "{":
+            depth += 1
+        elif ch == ")" or ch == "}":
+            depth -= 1
+            if depth == 0:
+                break
+        token += ch
+    for part in token.split(","):
+        part = part.strip()
+        m = re.search(r"%([\w\.\-~]+)$", part)
+        if m:
+            out.append(m.group(1))
+    return out
+
+
+_META_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def _op_tag(op: "Op") -> str:
+    """Provenance tag for hillclimbing: jax op_name (trimmed) + HLO kind."""
+    m = _META_RE.search(op.rest)
+    name = m.group(1) if m else ""
+    name = re.sub(r"\[.*?\]", "", name)[-90:]
+    return f"{op.kind}:{name}" if name else op.kind
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_pod_bytes: float = 0.0
+    coll_count: float = 0.0
+    coll_by_kind: dict = field(default_factory=dict)
+    pod_by_tag: dict = field(default_factory=dict)    # pod-crossing provenance
+    mem_by_tag: dict = field(default_factory=dict)    # provenance -> bytes
+    flops_by_tag: dict = field(default_factory=dict)
+
+    def _tag(self, table: dict, tag: str, v: float):
+        table[tag] = table.get(tag, 0.0) + v
+        if len(table) > 400:                          # bound memory
+            for k in sorted(table, key=table.get)[:200]:
+                del table[k]
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        self.coll_pod_bytes += other.coll_pod_bytes * mult
+        self.coll_count += other.coll_count * mult
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + v * mult
+        for k, v in other.pod_by_tag.items():
+            self._tag(self.pod_by_tag, k, v * mult)
+        for k, v in other.mem_by_tag.items():
+            self._tag(self.mem_by_tag, k, v * mult)
+        for k, v in other.flops_by_tag.items():
+            self._tag(self.flops_by_tag, k, v * mult)
+
+    def top(self, table: str = "mem_by_tag", n: int = 15) -> list:
+        t = getattr(self, table)
+        return sorted(t.items(), key=lambda kv: -kv[1])[:n]
+
+
+def _sliced_params(comp: "Computation") -> set:
+    """Indices of fusion parameters consumed ONLY via dynamic-slice/gather
+    inside the fused computation (slice-wise access on real hardware)."""
+    if hasattr(comp, "_sliced"):
+        return comp._sliced
+    param_idx = {}
+    uses: dict[str, list] = {}
+    for op in comp.ops:
+        if op.kind == "parameter":
+            m = re.match(r"\s*(\d+)", op.rest)
+            if m:
+                param_idx[op.name] = int(m.group(1))
+            continue
+        for o in _operand_names(op.rest):
+            uses.setdefault(o, []).append(op.kind)
+    out = set()
+    for pname, idx in param_idx.items():
+        kinds = uses.get(pname, [])
+        if kinds and all(k in ("dynamic-slice", "gather") for k in kinds):
+            out.add(idx)
+    comp._sliced = out
+    return out
+
+
+def _trip_count(comps: dict, cond_name: str) -> int:
+    comp = comps.get(cond_name)
+    if comp is None:
+        return 1
+    best = 1
+    for op in comp.ops:
+        if op.kind == "constant":
+            m = _CONST_INT.search("constant(" + op.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def analyze(text: str, *, pod_boundary: int | None = None) -> Cost:
+    comps, entry = parse_module(text)
+    memo: dict[str, Cost] = {}
+
+    def comp_cost(name: str) -> Cost:
+        if name in memo:
+            return memo[name]
+        memo[name] = Cost()          # break cycles defensively
+        comp = comps.get(name)
+        if comp is None:
+            return memo[name]
+        c = Cost()
+        for op in comp.ops:
+            # ---- flops ------------------------------------------------
+            if op.kind == "dot":
+                res_elems = 1
+                for m in _SHAPE.finditer(op.type_str):
+                    for d in m.group(2).split(","):
+                        if d:
+                            res_elems *= int(d)
+                contract = 1
+                cm = _CONTRACT.search(op.rest)
+                opnds = _operand_names(op.rest)
+                if cm and opnds:
+                    lhs_t = comp.shapes.get(opnds[0])
+                    if lhs_t:
+                        _, dims = _shape_dims(lhs_t)
+                        for idx in cm.group(1).split(","):
+                            if idx and int(idx) < len(dims):
+                                contract *= dims[int(idx)]
+                f = 2.0 * res_elems * contract
+                c.flops += f
+                c._tag(c.flops_by_tag, _op_tag(op), f)
+            # ---- collectives -------------------------------------------
+            base = op.kind.replace("-start", "")
+            if base in ("all-reduce", "all-gather", "reduce-scatter",
+                        "all-to-all", "collective-permute"):
+                nbytes = _bytes_of(op.type_str)
+                gm = hlo_stats._GROUPS_RE.search(op.rest)
+                groups = hlo_stats._parse_groups(gm.group(1)) if gm else None
+                n = len(groups[0]) if groups and groups[0] else 2
+                factor = {"all-gather": (n - 1) / n,
+                          "reduce-scatter": float(n - 1),
+                          "all-reduce": 2 * (n - 1) / n,
+                          "all-to-all": (n - 1) / n,
+                          "collective-permute": 1.0}[base]
+                moved = nbytes * factor
+                c.coll_bytes += moved
+                c.coll_count += 1
+                c.coll_by_kind[base] = c.coll_by_kind.get(base, 0.0) + moved
+                if pod_boundary is not None and groups:
+                    if any(g and min(g) < pod_boundary <= max(g)
+                           for g in groups):
+                        c.coll_pod_bytes += moved
+                        c._tag(c.pod_by_tag, _op_tag(op), moved)
+            # ---- memory (fusion model) ----------------------------------
+            if op.kind == "fusion":
+                # in-place update fusions (root = dynamic-update-slice, or a
+                # tuple of them — scan residual stacking) move only the
+                # update slices, NOT the carried buffer; same for
+                # dynamic-slice-rooted read fusions.  Counting the full
+                # buffer once per loop iteration inflated memory terms by
+                # >100x on recurrent models before this special case.
+                called = _ATTR_CALLS.search(op.rest)
+                sub = comps.get(called.group(1)) if called else None
+                root = sub.ops[-1] if sub and sub.ops else None
+                handled = False
+                if root is not None:
+                    roots = [root]
+                    if root.kind == "tuple":
+                        roots = [sub.ops_by_name[n] for n in
+                                 _operand_names(root.rest)
+                                 if n in sub.ops_by_name]
+                    if roots and all(r.kind in ("dynamic-update-slice",
+                                                "dynamic-slice", "gather",
+                                                "scatter") for r in roots):
+                        b = 0
+                        for r in roots:
+                            if r.kind == "dynamic-update-slice":
+                                ops_r = _operand_names(r.rest)
+                                upd = sub.shapes.get(ops_r[1]) \
+                                    if len(ops_r) > 1 else None
+                                b += 2 * _bytes_of(upd) if upd else \
+                                    _bytes_of(r.type_str)
+                            else:
+                                b += 2 * _bytes_of(r.type_str)
+                        c.hbm_bytes += b
+                        c._tag(c.mem_by_tag, _op_tag(op), b)
+                        handled = True
+                if not handled:
+                    res_b = _bytes_of(op.type_str)
+                    b = res_b
+                    # sliced-access heuristic: operands feeding only an
+                    # internal dynamic-slice are read slice-wise (loop-
+                    # carried stacks inside scan bodies), not in full
+                    sliced = _sliced_params(sub) if sub else set()
+                    opnds = _operand_names(op.rest)
+                    for i, o in enumerate(opnds):
+                        t = comp.shapes.get(o)
+                        if not t:
+                            continue
+                        ob = _bytes_of(t)
+                        if i in sliced and ob > 8 * max(res_b, 1):
+                            ob = min(ob, res_b)
+                        b += ob
+                    c.hbm_bytes += b
+                    c._tag(c.mem_by_tag, _op_tag(op), b)
+            elif op.kind not in _MEM_SKIP:
+                if op.kind in ("dynamic-slice", "gather"):
+                    # only the slice moves, not the sliced-from operand
+                    b = 2 * _bytes_of(op.type_str)
+                    c.hbm_bytes += b
+                    c._tag(c.mem_by_tag, _op_tag(op), b)
+                elif op.kind in ("dynamic-update-slice", "scatter"):
+                    # in-place update: traffic ~ 2x the update, not the buffer
+                    idx = 1 if op.kind == "dynamic-update-slice" else 2
+                    opnds = _operand_names(op.rest)
+                    upd = comp.shapes.get(opnds[idx]) if len(opnds) > idx \
+                        else None
+                    b = 2 * _bytes_of(upd) if upd else _bytes_of(op.type_str)
+                    c.hbm_bytes += b
+                    c._tag(c.mem_by_tag, _op_tag(op), b)
+                else:
+                    b = _bytes_of(op.type_str)
+                    for o in _operand_names(op.rest):
+                        t = comp.shapes.get(o)
+                        if t:
+                            b += _bytes_of(t)
+                    c.hbm_bytes += b
+                    c._tag(c.mem_by_tag, _op_tag(op), b)
+            # ---- recurse into called computations -----------------------
+            if op.kind == "while":
+                body = _ATTR_BODY.search(op.rest)
+                cond = _ATTR_COND.search(op.rest)
+                tc = _TRIP_CFG.search(op.rest)
+                if tc:
+                    trips = int(tc.group(1))
+                else:
+                    trips = _trip_count(comps, cond.group(1)) if cond else 1
+                if body:
+                    c.add(comp_cost(body.group(1)), trips)
+                if cond:
+                    c.add(comp_cost(cond.group(1)), trips + 1)
+            elif op.kind == "fusion":
+                called = _ATTR_CALLS.search(op.rest)
+                if called:
+                    sub = comp_cost(called.group(1))
+                    c.flops += sub.flops           # flops only: mem is fused
+                    c.coll_bytes += sub.coll_bytes
+            elif op.kind == "call":
+                called = _ATTR_TOAPPLY.search(op.rest)
+                if called:
+                    c.add(comp_cost(called.group(1)))
+            elif op.kind == "conditional":
+                br = _ATTR_BRANCHES.search(op.rest)
+                if br:
+                    subs = [comp_cost(b.strip().lstrip("%"))
+                            for b in br.group(1).split(",") if b.strip()]
+                    for s in subs:                  # assume all branches run
+                        c.add(s, 1.0 / max(len(subs), 1))
+        memo[name] = c
+        return c
+
+    return comp_cost(entry) if entry else Cost()

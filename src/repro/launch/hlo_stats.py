@@ -1,0 +1,98 @@
+"""Parse compiled (SPMD-partitioned, per-device) HLO text for roofline
+inputs: per-collective byte counts with bandwidth-optimal ring factors,
+plus pod-crossing detection on the multi-pod mesh.
+
+Ring factors (Thakur et al. 2005; Patarasuk & Yuan 2009), per device:
+  all-gather        (n-1)/n * result_bytes
+  reduce-scatter    (n-1)   * result_bytes          (operand = n*result)
+  all-reduce        2(n-1)/n * bytes
+  all-to-all        (n-1)/n * bytes
+  collective-permute 1.0    * bytes
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import numpy as np
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2,
+                "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+\[[\d,]*\]))\S*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{.*?\}\}|\[[^\]]*\]<=\[[^\]]*\](?:T\([\d,]+\))?)")
+
+
+def _shape_bytes(tok: str) -> int:
+    m = _SHAPE_RE.match(tok)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _parse_groups(text: str) -> list[list[int]] | None:
+    """Materialize replica groups (explicit or iota v2 format)."""
+    if text.startswith("{{"):
+        return [[int(x) for x in g.split(",") if x.strip()]
+                for g in re.findall(r"\{([\d,\s]+)\}", text[1:-1])]
+    m = re.match(r"\[([\d,]+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?", text)
+    if not m:
+        return None
+    out_dims = [int(x) for x in m.group(1).split(",")]
+    in_dims = [int(x) for x in m.group(2).split(",")]
+    ids = np.arange(int(np.prod(in_dims))).reshape(in_dims)
+    if m.group(3):
+        perm = [int(x) for x in m.group(3).split(",")]
+        ids = ids.transpose(perm)
+    return ids.reshape(out_dims).tolist()
+
+
+@dataclass
+class CollectiveStats:
+    bytes_per_device: float = 0.0          # ring-factored, per chip
+    pod_crossing_bytes: float = 0.0        # subset crossing the pod boundary
+    by_kind: dict = field(default_factory=dict)
+    count: int = 0
+
+
+def collect(hlo_text: str, *, pod_boundary: int | None = None) -> CollectiveStats:
+    """pod_boundary: device-id threshold (e.g. 256 on the 512-chip mesh)."""
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        tuple_body, single, kind = m.groups()
+        if tuple_body:
+            nbytes = sum(_shape_bytes(t.strip())
+                         for t in tuple_body.split(",") if "[" in t)
+        else:
+            nbytes = _shape_bytes(single)
+        gm = _GROUPS_RE.search(line)
+        groups = _parse_groups(gm.group(1)) if gm else None
+        n = len(groups[0]) if groups and groups[0] else 2
+        factor = {"all-gather": (n - 1) / n,
+                  "reduce-scatter": float(n - 1),
+                  "all-reduce": 2 * (n - 1) / n,
+                  "all-to-all": (n - 1) / n,
+                  "collective-permute": 1.0}[kind]
+        moved = nbytes * factor
+        st.bytes_per_device += moved
+        st.by_kind[kind] = st.by_kind.get(kind, 0.0) + moved
+        st.count += 1
+        if pod_boundary is not None and groups:
+            crossing = any(
+                min(g) < pod_boundary <= max(g) for g in groups if g)
+            if crossing:
+                st.pod_crossing_bytes += moved
+    return st

@@ -1,0 +1,121 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every
+(architecture x input-shape x step) combination — the shannon/kernels
+pattern: weak-type-correct, shardable, zero device allocation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES
+from repro.configs.base import InputShape
+from repro.models import common, model as modellib
+from repro.parallel import sharding as shlib
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def _sd(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def step_kind(cfg, shape: InputShape) -> str:
+    """train | prefill | decode — with encoder archs mapping decode->skip."""
+    if shape.kind == "train":
+        return "train"
+    if shape.kind == "decode" and not cfg.has_decode:
+        return "skip"
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return "skip"
+    return shape.kind
+
+
+def batch_struct(cfg, shape: InputShape, kind: str) -> dict:
+    """ShapeDtypeStruct batch for one step kind."""
+    B, S = shape.global_batch, shape.seq_len
+    cdt = common.dt(cfg.compute_dtype)
+    if kind == "decode":
+        b: dict = {"tokens": _sd((B, 1), I32), "cache_index": _sd((), I32)}
+        if cfg.rope_variant == "mrope":
+            b["positions"] = _sd((B, 1, 3), I32)
+        else:
+            b["positions"] = _sd((B, 1), I32)
+        return b
+    # train / prefill consume the full sequence
+    if cfg.input_mode == "tokens":
+        b = {"tokens": _sd((B, S), I32)}
+    elif cfg.input_mode == "embeddings":
+        b = {"embeds": _sd((B, S, cfg.input_embed_dim), cdt),
+             "frame_mask": _sd((B, S), jnp.bool_)}
+    else:  # multimodal
+        b = {"tokens": _sd((B, S), I32),
+             "image_embeds": _sd((B, cfg.n_image_tokens,
+                                  cfg.input_embed_dim), cdt),
+             "image_positions": _sd((B, cfg.n_image_tokens), I32),
+             "positions": _sd((B, S, 3), I32)}
+    if kind == "train":
+        b["labels"] = _sd((B, S), I32)
+    return b
+
+
+def param_struct(cfg) -> dict:
+    """Param tree as ShapeDtypeStructs via eval_shape (no allocation)."""
+    return jax.eval_shape(
+        lambda k: modellib.init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def opt_struct(params_struct, opt_cfg) -> dict:
+    from repro.optim import adamw
+    return jax.eval_shape(lambda p: adamw.init_state(p, opt_cfg),
+                          params_struct)
+
+
+def input_specs(cfg, shape_name: str, kind: str | None = None,
+                opt_cfg=None):
+    """Returns (kind, args: dict of structs) for the step to lower."""
+    shape = INPUT_SHAPES[shape_name]
+    kind = kind or step_kind(cfg, shape)
+    if kind == "skip":
+        return kind, {}
+    out = {"batch": batch_struct(cfg, shape, kind),
+           "params": param_struct(cfg)}
+    if kind == "train":
+        assert opt_cfg is not None
+        out["opt_state"] = opt_struct(out["params"], opt_cfg)
+    if kind == "decode":
+        out["caches"] = modellib.cache_specs(cfg, shape.global_batch,
+                                             shape.seq_len)
+    return kind, out
+
+
+def shardings_for(cfg, kind: str, args: dict, mesh, *, fsdp: bool,
+                  batch_axis="data", mode: str = "tp"):
+    """PartitionSpec trees matching ``args``.
+
+    mode="tp": Megatron tensor parallelism over 'model' (+ optional ZeRO).
+    mode="dp": model axis joins data (small archs); weights ZeRO-sharded
+    over (data x model), batch over both axes.
+    """
+    if mode == "dp":
+        ba = (("pod",) if "pod" in mesh.axis_names and
+              isinstance(batch_axis, tuple) else ()) + ("data", "model")
+        sh: dict = {"params": shlib.param_specs_dp(args["params"], mesh),
+                    "batch": shlib.batch_specs(args["batch"], mesh, ba)}
+        if "opt_state" in args:
+            sh["opt_state"] = shlib.opt_state_specs(
+                sh["params"], mesh, fsdp=True, params_shape=args["params"],
+                axes=("data", "model"))
+        if "caches" in args:
+            sh["caches"] = shlib.cache_tree_specs(args["caches"], mesh)
+        return sh
+    sh = {"params": shlib.param_specs(args["params"], mesh, fsdp=fsdp),
+          "batch": shlib.batch_specs(args["batch"], mesh, batch_axis)}
+    if "opt_state" in args:
+        sh["opt_state"] = shlib.opt_state_specs(
+            sh["params"], mesh, fsdp=fsdp,
+            params_shape=args["params"])
+    if "caches" in args:
+        sh["caches"] = shlib.cache_tree_specs(args["caches"], mesh)
+    return sh

@@ -1,0 +1,40 @@
+"""Step functions lowered by the dry-run and used by train.py/serve.py."""
+from __future__ import annotations
+
+import jax
+
+from repro.models import model as modellib
+from repro.optim import AdamWConfig, adamw
+
+
+def default_opt_cfg(cfg) -> AdamWConfig:
+    return AdamWConfig(peak_lr=5e-4, warmup_steps=3000, total_steps=256_000,
+                       opt_dtype=cfg.opt_dtype)
+
+
+def build_train_step(cfg, opt_cfg: AdamWConfig):
+    def loss_fn(params, batch):
+        return modellib.loss_and_metrics(params, cfg, batch)
+    return adamw.make_train_step(loss_fn, opt_cfg)
+
+
+def build_prefill_step(cfg):
+    def prefill_step(params, batch):
+        return modellib.prefill(params, cfg, batch)
+    return prefill_step
+
+
+def build_decode_step(cfg):
+    def decode_step(params, batch, caches):
+        return modellib.decode_step(params, cfg, batch, caches)
+    return decode_step
+
+
+def build_mixture_train_step(cfg, opt_cfg: AdamWConfig):
+    """Stacked-expert step: vmap over leading expert axis (sharded 'pod').
+
+    spmd_axis_name pins every internal sharding constraint / shard_map to
+    the pod axis so manual-SPMD regions (xLSTM cells, MoE buffers) do not
+    force pod replication."""
+    step = build_train_step(cfg, opt_cfg)
+    return jax.vmap(step, spmd_axis_name="pod")

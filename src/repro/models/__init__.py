@@ -1,0 +1,1 @@
+from repro.models import common, model  # noqa: F401

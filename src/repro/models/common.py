@@ -1,0 +1,257 @@
+"""Shared building blocks: norms, RoPE variants, attention, FFNs.
+
+Everything is pure-functional JAX: ``init_*`` builds param pytrees (nested
+dicts of ``jnp.ndarray``), ``*_apply`` consumes them.  Attention is routed
+through :mod:`repro.kernels.flash_attention.ops` so the Pallas TPU kernel
+and the blockwise-jnp reference share one call site.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = dict[str, Any]
+
+
+def dt(name: str):
+    return jnp.dtype(name)
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def rmsnorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.zeros((d,), dtype)}  # (1 + scale) parametrization
+
+
+def rmsnorm(params: Params, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    orig = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + params["scale"].astype(jnp.float32))).astype(orig)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (full / half / M-RoPE) — half-split (llama) convention
+# ---------------------------------------------------------------------------
+def rope_frequencies(cfg, positions: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray, int]:
+    """Return (cos, sin, rotary_dim).
+
+    positions: (B, S) int32 for full/half; (B, S, 3) for mrope.
+    cos/sin: (B, S, rotary_dim//2) float32.
+    """
+    head_dim = cfg.resolved_head_dim
+    if cfg.rope_variant == "none":
+        raise ValueError("rope disabled")
+    if cfg.rope_variant == "half":
+        rot = head_dim // 2
+    else:
+        rot = head_dim
+    rot = (rot // 2) * 2
+    half = rot // 2
+    inv_freq = 1.0 / (cfg.rope_theta ** (np.arange(0, half, dtype=np.float32) / half))
+    inv_freq = jnp.asarray(inv_freq)
+    if cfg.rope_variant == "mrope":
+        sections = np.asarray(cfg.mrope_sections)
+        assert sections.sum() == half, (sections, half)
+        sect_id = np.repeat(np.arange(3), sections)           # (half,)
+        if positions.ndim == 2:                               # text-only fallback
+            positions = positions[..., None] * jnp.ones((3,), positions.dtype)
+        pos = jnp.take_along_axis(
+            positions.astype(jnp.float32),
+            jnp.broadcast_to(jnp.asarray(sect_id)[None, None, :],
+                             positions.shape[:2] + (half,)),
+            axis=-1)                                          # (B,S,half)
+        angles = pos * inv_freq[None, None, :]
+    else:
+        if positions.ndim == 3:
+            positions = positions[..., 0]
+        angles = positions.astype(jnp.float32)[..., None] * inv_freq[None, None, :]
+    return jnp.cos(angles), jnp.sin(angles), rot
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray, rot: int) -> jnp.ndarray:
+    """x: (B, S, H, head_dim); cos/sin: (B, S, rot//2)."""
+    orig = x.dtype
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = jnp.split(xr.astype(jnp.float32), 2, axis=-1)
+    c = cos[:, :, None, :]
+    s = sin[:, :, None, :]
+    rotated = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return jnp.concatenate([rotated.astype(orig), xp], axis=-1) if rot < x.shape[-1] \
+        else rotated.astype(orig)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (GQA; full / sliding-window; softcap; decode cache)
+# ---------------------------------------------------------------------------
+def attn_init(key, cfg, dtype) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(ks[0], d, hq * hd, dtype),
+        "wk": dense_init(ks[1], d, hkv * hd, dtype),
+        "wv": dense_init(ks[2], d, hkv * hd, dtype),
+        "wo": dense_init(ks[3], hq * hd, d, dtype),
+        "norm": rmsnorm_init(d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    return p
+
+
+def attn_apply(params: Params, x: jnp.ndarray, cfg, *,
+               kind: str, positions: jnp.ndarray,
+               cache: Params | None = None,
+               cache_index: jnp.ndarray | None = None,
+               cache_len: int | None = None) -> tuple[jnp.ndarray, Params | None]:
+    """Pre-norm attention block.  Returns (residual_output, new_cache).
+
+    Train/prefill: ``cache`` is None (prefill returns a fresh cache when
+    ``cache_index`` is not None, meaning "materialize cache please").
+    Decode: ``x`` is (B, 1, D); ``cache`` holds k/v (B, Skv, Hkv, hd) plus
+    ``pos`` (B, Skv) int32 slot positions (-1 = empty); ``cache_index`` is
+    the scalar write slot.
+    """
+    from repro.kernels.flash_attention import ops as fa
+
+    B, S, D = x.shape
+    hd = cfg.resolved_head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    h = rmsnorm(params["norm"], x, cfg.norm_eps)
+    q = h @ params["wq"]
+    k = h @ params["wk"]
+    v = h @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    from repro.parallel import act_sharding as act
+    q = act.shard_attn_q(q.reshape(B, S, hq, hd))
+    k = act.shard_attn_kv(k.reshape(B, S, hkv, hd))
+    v = act.shard_attn_kv(v.reshape(B, S, hkv, hd))
+    if cfg.rope_variant != "none":
+        cos, sin, rot = rope_frequencies(cfg, positions)
+        q = apply_rope(q, cos, sin, rot)
+        k = apply_rope(k, cos, sin, rot)
+
+    window = cfg.sliding_window if kind == "attn_local" else 0
+    causal = cfg.causal
+    q_pos = positions[..., 0] if positions.ndim == 3 else positions
+
+    new_cache: Params | None = None
+    if cache is not None:
+        # single-token decode against the cache; local layers use a
+        # rotating buffer of `window` slots (slot = pos % size)
+        size = cache["k"].shape[1]
+        idx = cache_index % size
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, idx, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, idx, axis=1)
+        cpos = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], q_pos.astype(cache["pos"].dtype), idx, axis=1)
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+        out = fa.decode_attention(q, ck, cv, q_pos=q_pos, kv_pos=cpos,
+                                  window=window, softcap=cfg.attn_softcap)
+    else:
+        # context-parallel mode: S is sharded over 'model', so the q-chunk
+        # map must not re-chunk S (per-device memory is already bounded)
+        ctx = act.attn_mode(hq) == "ctx"
+        out = fa.flash_attention(
+            q, k, v, causal=causal, window=window, softcap=cfg.attn_softcap,
+            impl="pallas" if cfg.use_pallas else "jnp",
+            q_chunk=S if ctx else 1024)
+        if ctx:
+            out = act.constrain(out, "data", "model", None, None)
+        else:
+            out = act.shard_attn_q(out)
+        if cache_index is not None:   # prefill: materialize the cache
+            total = cache_len if cache_len else S   # decode budget
+            size = min(total, window) if window > 0 else total
+            pos32 = q_pos.astype(jnp.int32)
+            if size >= S:
+                pad = size - S
+                new_cache = {
+                    "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                    "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                    "pos": jnp.pad(pos32, ((0, 0), (0, pad)),
+                                   constant_values=-1),
+                }
+            else:
+                # keep the last `size` entries, rolled so position p sits at
+                # slot p % size — the decode write rule then evicts oldest
+                sh = S % size
+                new_cache = {
+                    "k": jnp.roll(k[:, S - size:], sh, axis=1),
+                    "v": jnp.roll(v[:, S - size:], sh, axis=1),
+                    "pos": jnp.roll(pos32[:, S - size:], sh, axis=1),
+                }
+    out = out.reshape(B, S, hq * hd)
+    return act.shard_tokens(x + out @ params["wo"]), new_cache
+
+
+def attn_cache_spec(cfg, batch: int, seq: int, kind: str) -> dict[str, jax.ShapeDtypeStruct]:
+    """Shape of the decode cache for one attention layer."""
+    size = min(seq, cfg.sliding_window) if kind == "attn_local" else seq
+    hd = cfg.resolved_head_dim
+    cdt = dt(cfg.compute_dtype)
+    return {
+        "k": jax.ShapeDtypeStruct((batch, size, cfg.n_kv_heads, hd), cdt),
+        "v": jax.ShapeDtypeStruct((batch, size, cfg.n_kv_heads, hd), cdt),
+        "pos": jax.ShapeDtypeStruct((batch, size), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# FFN (swiglu / geglu / gelu) and block wrapper
+# ---------------------------------------------------------------------------
+def ffn_init(key, cfg, dtype) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p: Params = {"norm": rmsnorm_init(d, dtype)}
+    if cfg.ffn_type in ("swiglu", "geglu"):
+        p["wi"] = dense_init(ks[0], d, f, dtype)
+        p["wg"] = dense_init(ks[1], d, f, dtype)
+    else:
+        p["wi"] = dense_init(ks[0], d, f, dtype)
+    p["wo"] = dense_init(ks[2], f, d, dtype)
+    return p
+
+
+def ffn_core(params: Params, h: jnp.ndarray, ffn_type: str) -> jnp.ndarray:
+    if ffn_type == "swiglu":
+        a = jax.nn.silu(h @ params["wg"]) * (h @ params["wi"])
+    elif ffn_type == "geglu":
+        a = jax.nn.gelu(h @ params["wg"], approximate=True) * (h @ params["wi"])
+    else:
+        a = jax.nn.gelu(h @ params["wi"], approximate=True)
+    return a @ params["wo"]
+
+
+def ffn_apply(params: Params, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    h = rmsnorm(params["norm"], x, cfg.norm_eps)
+    return x + ffn_core(params, h, cfg.ffn_type)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap

@@ -1,0 +1,326 @@
+"""Model assembly: stage-scanned heterogeneous decoder/encoder LMs.
+
+One composable definition covers all assigned architectures.  The layer
+pattern is factored into ``(unit, repeat)`` stages (config); params for
+each unit position are stacked over ``repeat`` and executed with
+``lax.scan`` (remat per unit), keeping HLO size bounded at paper scale.
+
+Public API:
+  init_params(key, cfg)
+  loss_and_metrics(params, cfg, batch)        -- training objective
+  prefill(params, cfg, batch)                 -- forward + materialize caches
+  decode_step(params, cfg, batch, caches)     -- one token, update caches
+  cache_specs(cfg, batch, seq)                -- ShapeDtypeStruct cache tree
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as cfglib
+from repro.models import common, moe as moelib, ssm, xlstm
+
+Params = dict[str, Any]
+
+ATTN_KINDS = (cfglib.ATTN, cfglib.ATTN_LOCAL, cfglib.ATTN_SHARED)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _init_block(key, kind: str, cfg, dtype) -> Params:
+    if kind in ATTN_KINDS:
+        k1, k2 = jax.random.split(key)
+        p: Params = {"attn": common.attn_init(k1, cfg, dtype)}
+        if cfg.d_ff > 0:
+            if cfg.moe is not None:
+                p["moe"] = moelib.moe_init(k2, cfg, dtype)
+            else:
+                p["ffn"] = common.ffn_init(k2, cfg, dtype)
+        return p
+    if kind == cfglib.MAMBA2:
+        return {"mamba2": ssm.mamba2_init(key, cfg, dtype)}
+    if kind == cfglib.MLSTM:
+        return {"mlstm": xlstm.mlstm_init(key, cfg, dtype)}
+    if kind == cfglib.SLSTM:
+        return {"slstm": xlstm.slstm_init(key, cfg, dtype)}
+    raise ValueError(kind)
+
+
+def init_params(key, cfg) -> Params:
+    dtype = common.dt(cfg.param_dtype)
+    keys = jax.random.split(key, 8)
+    params: Params = {
+        "embed": common.embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": common.rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = common.embed_init(keys[1], cfg.vocab_size,
+                                              cfg.d_model, dtype)
+    if cfg.input_mode == "embeddings":
+        params["in_proj"] = common.dense_init(keys[2], cfg.input_embed_dim,
+                                              cfg.d_model, dtype)
+        params["mask_emb"] = (jax.random.normal(keys[3], (cfg.d_model,),
+                                                jnp.float32) * 0.02).astype(dtype)
+    if cfg.input_mode == "multimodal":
+        params["img_proj"] = common.dense_init(keys[2], cfg.input_embed_dim,
+                                               cfg.d_model, dtype)
+    if cfglib.ATTN_SHARED in cfg.layer_pattern:
+        params["shared_block"] = _init_block(keys[4], cfglib.ATTN, cfg, dtype)
+
+    stages = []
+    skey = keys[5]
+    for unit, rep in cfg.resolved_stages:
+        stage = []
+        for kind in unit:
+            skey, bkey = jax.random.split(skey)
+            if kind == cfglib.ATTN_SHARED:
+                stage.append({})      # weights live in params["shared_block"]
+            else:
+                stage.append(jax.vmap(
+                    lambda k, kind=kind: _init_block(k, kind, cfg, dtype))(
+                        jax.random.split(bkey, rep)))
+        stages.append(tuple(stage))
+    params["stages"] = tuple(stages)
+    return params
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+def cast_params(params: Params, cfg) -> Params:
+    """Cast floating-point leaves to the compute dtype (mixed precision).
+
+    Numerics-sensitive leaves (gate biases, A_log, routers) are re-upcast
+    to f32 at their use sites inside the blocks."""
+    cdt = common.dt(cfg.compute_dtype)
+    def cast(x):
+        return x.astype(cdt) if jnp.issubdtype(x.dtype, jnp.floating) else x
+    return jax.tree_util.tree_map(cast, params)
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+def _apply_block(kind: str, bparams: Params, x, cfg, *, positions,
+                 cache=None, cache_index=None, want_cache=False,
+                 shared=None, cache_len=None):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ATTN_KINDS:
+        p = shared if kind == cfglib.ATTN_SHARED else bparams
+        ci = cache_index if (cache is not None or want_cache) else None
+        if ci is None and want_cache:
+            ci = 0
+        x, new_cache = common.attn_apply(
+            p["attn"], x, cfg,
+            kind="attn_local" if kind == cfglib.ATTN_LOCAL else "attn",
+            positions=positions, cache=cache,
+            cache_index=ci, cache_len=cache_len)
+        if cfg.d_ff > 0:
+            if cfg.moe is not None:
+                x, aux = moelib.moe_apply(p["moe"], x, cfg)
+            else:
+                x = common.ffn_apply(p["ffn"], x, cfg)
+        return x, new_cache, aux
+    if kind == cfglib.MAMBA2:
+        x, c = ssm.mamba2_apply(bparams["mamba2"], x, cfg, cache=cache,
+                                want_cache=want_cache)
+        return x, c, aux
+    if kind == cfglib.MLSTM:
+        x, c = xlstm.mlstm_apply(bparams["mlstm"], x, cfg, cache=cache,
+                                 want_cache=want_cache)
+        return x, c, aux
+    if kind == cfglib.SLSTM:
+        x, c = xlstm.slstm_apply(bparams["slstm"], x, cfg, cache=cache,
+                                 want_cache=want_cache)
+        return x, c, aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Trunk
+# ---------------------------------------------------------------------------
+def forward(params: Params, cfg, x, positions, *, caches=None,
+            cache_index=None, want_cache=False, cache_len=None):
+    """x: (B,S,D) embedded inputs.  Returns (hidden, new_caches, aux)."""
+    mode = "decode" if caches is not None else (
+        "prefill" if want_cache else "train")
+    shared = params.get("shared_block")
+    aux = jnp.zeros((), jnp.float32)
+    new_caches = []
+
+    for si, (unit, rep) in enumerate(cfg.resolved_stages):
+        stage_params = params["stages"][si]
+        stage_cache = caches[si] if caches is not None else None
+
+        def unit_fn(carry, xs, unit=unit):
+            xc, auxc = carry
+            if mode == "decode":
+                uparams, ucache = xs
+            else:
+                uparams, ucache = xs, None
+            out_caches = []
+            for pos, kind in enumerate(unit):
+                bc = ucache[pos] if ucache is not None else None
+                xc, c, a = _apply_block(
+                    kind, uparams[pos], xc, cfg, positions=positions,
+                    cache=bc, cache_index=cache_index,
+                    want_cache=(mode == "prefill"), shared=shared,
+                    cache_len=cache_len)
+                out_caches.append(c)
+                auxc = auxc + a
+            ys = tuple(out_caches) if mode in ("decode", "prefill") else None
+            return (xc, auxc), ys
+
+        if cfg.remat == "unit" and mode == "train":
+            unit_fn = jax.checkpoint(unit_fn, prevent_cse=False)
+
+        xs = (stage_params, stage_cache) if mode == "decode" else stage_params
+        if cfg.scan_layers:
+            (x, aux), ys = jax.lax.scan(unit_fn, (x, aux), xs, length=rep)
+        else:
+            # unrolled: identical math, layer bodies visible to HLO cost
+            # analysis (XLA counts a while body once, not x trip-count)
+            ys_list = []
+            for r in range(rep):
+                xs_r = jax.tree_util.tree_map(lambda t: t[r], xs)
+                (x, aux), ys_r = unit_fn((x, aux), xs_r)
+                ys_list.append(ys_r)
+            ys = (jax.tree_util.tree_map(lambda *ts: jnp.stack(ts), *ys_list)
+                  if ys_list and ys_list[0] is not None else None)
+        if mode in ("decode", "prefill"):
+            new_caches.append(ys)
+
+    h = common.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return h, (tuple(new_caches) if new_caches else None), aux
+
+
+# ---------------------------------------------------------------------------
+# Input embedding
+# ---------------------------------------------------------------------------
+def embed_inputs(params: Params, cfg, batch: dict) -> tuple[jnp.ndarray, jnp.ndarray]:
+    cdt = common.dt(cfg.compute_dtype)
+    if cfg.input_mode == "tokens":
+        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cdt)
+        B, S = batch["tokens"].shape
+    elif cfg.input_mode == "embeddings":
+        x = (batch["embeds"].astype(cdt) @ params["in_proj"].astype(cdt))
+        if "frame_mask" in batch:
+            x = jnp.where(batch["frame_mask"][..., None],
+                          params["mask_emb"].astype(cdt), x)
+        B, S = x.shape[:2]
+    elif cfg.input_mode == "multimodal":
+        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cdt)
+        if "image_embeds" in batch:       # decode steps are text-only
+            img = batch["image_embeds"].astype(cdt) @ \
+                params["img_proj"].astype(cdt)
+            ipos = batch["image_positions"]                   # (B, Nimg)
+            bidx = jnp.arange(x.shape[0])[:, None]
+            x = x.at[bidx, ipos].set(img)
+        B, S = batch["tokens"].shape
+    else:
+        raise ValueError(cfg.input_mode)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    from repro.parallel import act_sharding as act
+    return act.shard_tokens(x), positions
+
+
+def unembed_matrix(params: Params, cfg):
+    return params["embed"] if cfg.tie_embeddings else params["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# Training objective
+# ---------------------------------------------------------------------------
+def per_token_nll(params: Params, cfg, batch: dict) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (nll (B,S) f32, aux scalar)."""
+    from repro.kernels.lm_loss import ops as lm_ops
+    params = cast_params(params, cfg)
+    x, positions = embed_inputs(params, cfg, batch)
+    h, _, aux = forward(params, cfg, x, positions)
+    unemb = unembed_matrix(params, cfg).astype(common.dt(cfg.compute_dtype))
+    nll = lm_ops.lm_loss(h, unemb, batch["labels"],
+                         softcap=cfg.final_softcap, chunk=cfg.loss_chunk,
+                         impl="pallas" if cfg.use_pallas else "jnp")
+    return nll, aux
+
+
+def loss_and_metrics(params: Params, cfg, batch: dict,
+                     aux_coef: float = 0.01) -> tuple[jnp.ndarray, dict]:
+    nll, aux = per_token_nll(params, cfg, batch)
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = (nll * mask).sum() / denom
+    loss = ce + (aux_coef * aux if cfg.moe is not None else 0.0)
+    return loss, {"ce": ce, "aux": aux, "tokens": denom}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+def _logits(params, cfg, h):
+    unemb = unembed_matrix(params, cfg).astype(common.dt(cfg.compute_dtype))
+    logits = (h @ unemb.T).astype(common.dt(cfg.logit_dtype))
+    return common.softcap(logits, cfg.final_softcap)
+
+
+def prefill(params: Params, cfg, batch: dict, cache_len: int | None = None):
+    """Full-sequence forward; returns (last-position logits (B,V), caches).
+
+    ``cache_len`` reserves decode budget in attention caches (defaults to
+    the prefill length, i.e. no room for new tokens)."""
+    params = cast_params(params, cfg)
+    x, positions = embed_inputs(params, cfg, batch)
+    h, caches, _ = forward(params, cfg, x, positions, want_cache=True,
+                           cache_index=0, cache_len=cache_len)
+    return _logits(params, cfg, h[:, -1:])[:, 0], caches
+
+
+def decode_step(params: Params, cfg, batch: dict, caches):
+    """One-token decode.  batch: tokens (B,1) (+ positions), cache_index scalar.
+
+    Returns (logits (B,1,V), new_caches)."""
+    params = cast_params(params, cfg)
+    x, positions = embed_inputs(params, cfg, batch)
+    h, new_caches, _ = forward(params, cfg, x, positions, caches=caches,
+                               cache_index=batch["cache_index"])
+    return _logits(params, cfg, h), new_caches
+
+
+# ---------------------------------------------------------------------------
+# Cache specs (for dry-runs: ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+def _block_cache_spec(kind: str, cfg, batch: int, seq: int):
+    if kind in ATTN_KINDS:
+        k = "attn_local" if kind == cfglib.ATTN_LOCAL else "attn"
+        return common.attn_cache_spec(cfg, batch, seq, k)
+    if kind == cfglib.MAMBA2:
+        return ssm.mamba2_cache_spec(cfg, batch)
+    if kind == cfglib.MLSTM:
+        return xlstm.mlstm_cache_spec(cfg, batch)
+    if kind == cfglib.SLSTM:
+        return xlstm.slstm_cache_spec(cfg, batch)
+    raise ValueError(kind)
+
+
+def cache_specs(cfg, batch: int, seq: int):
+    """Mirror of the cache pytree as ShapeDtypeStructs (stacked per stage)."""
+    def stack(spec, rep):
+        return jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((rep,) + s.shape, s.dtype), spec)
+
+    out = []
+    for unit, rep in cfg.resolved_stages:
+        out.append(tuple(stack(_block_cache_spec(k, cfg, batch, seq), rep)
+                         for k in unit))
+    return tuple(out)

@@ -1,0 +1,135 @@
+"""Token-level mixture-of-experts FFN (grok-1: 8e top-2; arctic: 128e top-2
++ dense residual).
+
+Dispatch is sort-based (Megablocks-style, XLA-friendly): tokens are ranked
+within their assigned expert via a stable argsort, scattered into a fixed
+``(E, C, D)`` capacity buffer, processed with stacked expert matmuls, and
+combined back with router-probability weighting.  This keeps memory at
+O(E*C*D) instead of the GShard one-hot O(N*E*C) and induces an all-to-all
+when the expert dim is sharded over the ``model`` mesh axis.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+Params = dict[str, Any]
+
+
+def moe_init(key, cfg, dtype) -> Params:
+    d, f, m = cfg.d_model, cfg.d_ff, cfg.moe
+    ks = jax.random.split(key, 6)
+    p: Params = {
+        "norm": common.rmsnorm_init(d, dtype),
+        "router": common.dense_init(ks[0], d, m.n_experts, jnp.float32),
+        "wi": _stacked(ks[1], m.n_experts, d, f, dtype),
+        "wo": _stacked(ks[2], m.n_experts, f, d, dtype),
+    }
+    if cfg.ffn_type in ("swiglu", "geglu"):
+        p["wg"] = _stacked(ks[3], m.n_experts, d, f, dtype)
+    if m.dense_residual:
+        p["dense"] = common.ffn_init(ks[4], cfg, dtype)
+    return p
+
+
+def _stacked(key, e, din, dout, dtype):
+    scale = 1.0 / math.sqrt(din)
+    return (jax.random.normal(key, (e, din, dout), jnp.float32) * scale).astype(dtype)
+
+
+def expert_capacity(n_tokens: int, cfg) -> int:
+    m = cfg.moe
+    c = int(math.ceil(n_tokens * m.top_k / m.n_experts * m.capacity_factor))
+    return max(8, -(-c // 8) * 8)  # round up to 8 for TPU-friendly shapes
+
+
+def moe_apply(params: Params, x: jnp.ndarray, cfg) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (residual output, aux load-balancing loss scalar).
+
+    Dispatch is GROUP-LOCAL (GShard-style groups = batch rows): top-k,
+    ranking, scatter and combine are all batched over B, so under a
+    data-sharded batch every sort/scatter stays on-shard.  The global-sort
+    variant we started from turned each MoE layer into an all-gather +
+    global argsort + scattered writes across the whole mesh — the §Perf
+    log shows it made grok-1 train 65x collective-bound.  Capacity is per
+    group: C = ceil(S * k / E * cf).
+    """
+    m = cfg.moe
+    B, S, D = x.shape
+    E, K = m.n_experts, m.top_k
+    C = expert_capacity(S, cfg)
+
+    h = common.rmsnorm(params["norm"], x, cfg.norm_eps)
+    gate_logits = h.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    if m.router_softcap:
+        gate_logits = common.softcap(gate_logits, m.router_softcap)
+    gate_probs = jax.nn.softmax(gate_logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(gate_probs, K)                        # (B,S,K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)    # renorm among selected
+
+    # Switch-style aux loss: E * sum_e fraction_routed_e * mean_prob_e
+    onehot_top1 = jax.nn.one_hot(top_e[..., 0], E, dtype=jnp.float32)
+    frac = onehot_top1.reshape(-1, E).mean(0)
+    mean_p = gate_probs.reshape(-1, E).mean(0)
+    aux = E * jnp.sum(frac * mean_p)
+
+    # ---- group-local slot computation (batched over B, all on-shard) ---
+    from repro.parallel import act_sharding as act
+    NK = S * K
+    eflat = top_e.reshape(B, NK)                                       # expert ids
+    order = jnp.argsort(eflat, axis=1, stable=True)                    # per-row
+    e_sorted = jnp.take_along_axis(eflat, order, axis=1)
+    counts = jnp.zeros((B, E), jnp.int32).at[
+        jnp.arange(B)[:, None], eflat].add(1)
+    starts = jnp.concatenate(
+        [jnp.zeros((B, 1), jnp.int32), jnp.cumsum(counts, 1)[:, :-1]], 1)
+    rank = jnp.arange(NK, dtype=jnp.int32)[None] - \
+        jnp.take_along_axis(starts, e_sorted, axis=1)
+    # invert the sort: slot per (token, k-choice), -1 = dropped
+    slot_flat = jnp.zeros((B, NK), jnp.int32).at[
+        jnp.arange(B)[:, None], order].set(jnp.where(rank < C, rank, -1))
+    slots = slot_flat.reshape(B, S, K)
+
+    # ---- one-hot einsum dispatch (GShard-style, factored per choice) ---
+    # scatter/gather across the model-sharded expert dim makes GSPMD emit
+    # mask+all-reduce storms (§Perf log); these einsums keep dispatch fully
+    # local and leave exactly ONE all-reduce (over 'model') at combine.
+    def disp_k(k):
+        e_oh = jax.nn.one_hot(top_e[..., k], E, dtype=h.dtype)
+        c_oh = jax.nn.one_hot(slots[..., k], C, dtype=h.dtype)  # -1 -> zeros
+        return e_oh[..., :, None] * c_oh[..., None, :]          # (B,S,E,C)
+
+    buf = jnp.zeros((B, E, C, D), h.dtype)
+    for k in range(K):
+        buf = buf + jnp.einsum("bsec,bsd->becd", disp_k(k), h)
+    buf = act.constrain(buf, "data", "model", None, None)
+
+    # ---- stacked expert FFN --------------------------------------------
+    if cfg.ffn_type in ("swiglu", "geglu"):
+        actfn = jax.nn.silu if cfg.ffn_type == "swiglu" else (
+            lambda t: jax.nn.gelu(t, approximate=True))
+        inner = actfn(jnp.einsum("becd,edf->becf", buf, params["wg"])) * \
+            jnp.einsum("becd,edf->becf", buf, params["wi"])
+    else:
+        inner = jax.nn.gelu(jnp.einsum("becd,edf->becf", buf, params["wi"]),
+                            approximate=True)
+    out_buf = jnp.einsum("becf,efd->becd", inner, params["wo"])
+    out_buf = act.constrain(out_buf, "data", "model", None, None)
+
+    # ---- combine (contraction over sharded E -> one all-reduce) ---------
+    y = jnp.zeros((B, S, D), h.dtype)
+    for k in range(K):
+        yk = jnp.einsum("bsec,becd->bsd", disp_k(k), out_buf)
+        y = y + yk * top_p[..., k, None].astype(h.dtype)
+    y = act.shard_tokens(y)
+
+    if m.dense_residual:
+        y = y + common.ffn_core(params["dense"],
+                                common.rmsnorm(params["dense"]["norm"], x,
+                                               cfg.norm_eps), cfg.ffn_type)
+    return x + y, aux

@@ -1,0 +1,174 @@
+"""Mamba-2 block (SSD chunked algorithm) — zamba2's recurrent backbone.
+
+Train/prefill use the chunked SSD formulation: a single ``lax.scan`` over
+chunks computes both the intra-chunk quadratic term and the inter-chunk
+state recurrence, so the workspace is O(B*Q*Q*H) per step instead of
+O(B*S*Q*H).  Decode is the O(1)-state single-step recurrence.  Single SSM
+group (G=1).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+Params = dict[str, Any]
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_headdim
+    return d_inner, nheads
+
+
+def mamba2_init(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    d_inner, nheads = _dims(cfg)
+    n = cfg.ssm_state
+    conv_ch = d_inner + 2 * n
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * d_inner + 2 * n + nheads          # z, x, B, C, dt
+    return {
+        "norm": common.rmsnorm_init(d, dtype),
+        "in_proj": common.dense_init(ks[0], d, d_in_proj, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((nheads,), jnp.float32),    # A = -exp(A_log) = -1
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "out_norm": common.rmsnorm_init(d_inner, dtype),
+        "out_proj": common.dense_init(ks[2], d_inner, d, dtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    d_inner, _ = _dims(cfg)
+    n = cfg.ssm_state
+    z, xbc, dt = jnp.split(proj, [d_inner, 2 * d_inner + 2 * n], axis=-1)
+    return z, xbc, dt                                   # xbc = (x|B|C)
+
+
+def _causal_conv(xbc, w, b, state=None):
+    """Depthwise causal conv, kernel K.  xbc: (B,S,C); w: (K,C).
+
+    If ``state`` (B,K-1,C) is given (decode), prepend it; returns
+    (out, new_state)."""
+    K = w.shape[0]
+    if state is not None:
+        xp = jnp.concatenate([state, xbc], axis=1)
+    else:
+        xp = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    new_state = xp[:, xp.shape[1] - (K - 1):] if K > 1 else \
+        jnp.zeros((xbc.shape[0], 0, xbc.shape[2]), xbc.dtype)
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i] for i in range(K)) + b
+    return jax.nn.silu(out), new_state
+
+
+def mamba2_apply(params: Params, x: jnp.ndarray, cfg, *,
+                 cache: Params | None = None, want_cache: bool = False,
+                 chunk: int = 128) -> tuple[jnp.ndarray, Params | None]:
+    """Pre-norm Mamba2 block.  Returns (residual output, new cache).
+
+    ``cache`` given  => single-token decode step.
+    ``want_cache``   => prefill: also return the decode-ready cache.
+    """
+    Bb, S, D = x.shape
+    d_inner, nheads = _dims(cfg)
+    n, P = cfg.ssm_state, cfg.ssm_headdim
+    h = common.rmsnorm(params["norm"], x, cfg.norm_eps)
+    z, xbc, dt_raw = _split_proj(cfg, h @ params["in_proj"])
+
+    new_cache: Params | None = None
+    if cache is not None:   # single-token decode
+        xbc, conv_state = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                       state=cache["conv"])
+        xs, B_, C_ = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+        dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                             + params["dt_bias"].astype(jnp.float32))  # (B,H)
+        A = -jnp.exp(params["A_log"].astype(jnp.float32))      # (H,)
+        xh = xs[:, 0].reshape(Bb, nheads, P).astype(jnp.float32)
+        Bv = B_[:, 0].astype(jnp.float32)                      # (B,N)
+        Cv = C_[:, 0].astype(jnp.float32)
+        decay = jnp.exp(dt * A)                                # (B,H)
+        upd = (dt[..., None] * xh)[..., None] * Bv[:, None, None, :]
+        ssm = cache["ssm"] * decay[..., None, None] + upd      # (B,H,P,N)
+        y = jnp.einsum("bhpn,bn->bhp", ssm, Cv)
+        y = y + params["D"][None, :, None] * xh
+        y = y.reshape(Bb, 1, d_inner).astype(h.dtype)
+        new_cache = {"conv": conv_state.astype(h.dtype), "ssm": ssm}
+    else:
+        xbc, conv_state = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+        xs, B_, C_ = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+        y, ssm_final = _ssd_chunked(cfg, xs, B_, C_, dt_raw, params, chunk)
+        y = y.astype(h.dtype)
+        if want_cache:
+            new_cache = {"conv": conv_state.astype(h.dtype), "ssm": ssm_final}
+
+    y = common.rmsnorm(params["out_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return x + y @ params["out_proj"], new_cache
+
+
+def _ssd_chunked(cfg, xs, B_, C_, dt_raw, params, chunk):
+    """Chunked SSD via one scan over chunks.
+
+    xs: (B,S,d_inner); B_,C_: (B,S,N); dt_raw: (B,S,H).
+    Returns (y (B,S,d_inner) f32, final_state (B,H,P,N) f32).
+    """
+    Bb, S, _ = xs.shape
+    d_inner, H = _dims(cfg)
+    N, P = cfg.ssm_state, cfg.ssm_headdim
+    Q = min(chunk, S)
+    while S % Q:
+        Q -= 1
+    nc = S // Q
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))          # (B,S,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))                      # (H,)
+    dA = dt * A
+    xh = xs.reshape(Bb, nc, Q, H, P).astype(jnp.float32).transpose(1, 0, 2, 3, 4)
+    Bv = B_.reshape(Bb, nc, Q, N).astype(jnp.float32).transpose(1, 0, 2, 3)
+    Cv = C_.reshape(Bb, nc, Q, N).astype(jnp.float32).transpose(1, 0, 2, 3)
+    dtc = dt.reshape(Bb, nc, Q, H).transpose(1, 0, 2, 3)
+    dAc = dA.reshape(Bb, nc, Q, H).transpose(1, 0, 2, 3)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    Dp = params["D"].astype(jnp.float32)
+
+    def step(state, inp):
+        xc, bc, cc, dtq, daq = inp               # per-chunk slices
+        cs = jnp.cumsum(daq, axis=1)             # (B,Q,H)
+        total = cs[:, -1]                        # (B,H)
+        # intra-chunk
+        seg = cs[:, :, None, :] - cs[:, None, :, :]      # (B,Qi,Qj,H)
+        L = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)
+        cb = jnp.einsum("bin,bjn->bij", cc, bc)          # (B,Q,Q)
+        scores = cb[..., None] * L * dtq[:, None, :, :]  # (B,Qi,Qj,H)
+        y = jnp.einsum("bijh,bjhp->bihp", scores, xc)
+        # inter-chunk from carried state
+        y = y + jnp.einsum("bin,bhpn,bih->bihp", cc, state, jnp.exp(cs))
+        y = y + Dp[None, None, :, None] * xc
+        # state update
+        decay_out = jnp.exp(total[:, None, :] - cs) * dtq          # (B,Q,H)
+        upd = jnp.einsum("bjh,bjn,bjhp->bhpn", decay_out, bc, xc)  # (B,H,P,N)
+        state = state * jnp.exp(total)[..., None, None] + upd
+        return state, y
+
+    init = jnp.zeros((Bb, H, P, N), jnp.float32)
+    final, ys = jax.lax.scan(step, init, (xh, Bv, Cv, dtc, dAc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bb, S, d_inner)
+    return y, final
+
+
+def mamba2_cache_spec(cfg, batch: int) -> dict[str, jax.ShapeDtypeStruct]:
+    d_inner, nheads = _dims(cfg)
+    conv_ch = d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, conv_ch),
+                                     common.dt(cfg.compute_dtype)),
+        "ssm": jax.ShapeDtypeStruct((batch, nheads, cfg.ssm_headdim,
+                                     cfg.ssm_state), jnp.float32),
+    }

@@ -1,0 +1,293 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked-parallel) and sLSTM
+(scalar memory, sequential scan with head-wise recurrence).
+
+mLSTM follows the stabilized chunkwise formulation: a scan over chunks
+carries (C, n, m) with the running max folded into the state scale, so the
+parallel intra-chunk term stays numerically safe in f32.  sLSTM is
+inherently sequential (the xLSTM paper says as much) — a lax.scan over
+time with block-diagonal per-head recurrent kernels.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def _mlstm_dims(cfg):
+    d_inner = int(cfg.mlstm_proj_factor * cfg.d_model)
+    nh = cfg.n_heads
+    return d_inner, nh, d_inner // nh
+
+
+def mlstm_init(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    d_inner, nh, dh = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": common.rmsnorm_init(d, dtype),
+        "up": common.dense_init(ks[0], d, 2 * d_inner, dtype),
+        "conv_w": (jax.random.normal(ks[1], (4, d_inner), jnp.float32) * 0.1
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "wq": common.dense_init(ks[2], d_inner, d_inner, dtype),
+        "wk": common.dense_init(ks[3], d_inner, d_inner, dtype),
+        "wv": common.dense_init(ks[4], d_inner, d_inner, dtype),
+        "wi": common.dense_init(ks[5], d_inner, nh, jnp.float32),
+        "bi": jnp.zeros((nh,), jnp.float32),
+        "wf": common.dense_init(ks[6], d_inner, nh, jnp.float32),
+        "bf": jnp.full((nh,), 3.0, jnp.float32),   # forget-gate bias init
+        "hnorm": common.rmsnorm_init(d_inner, dtype),
+        "down": common.dense_init(ks[7], d_inner, d, dtype),
+    }
+
+
+def mlstm_apply(params: Params, x: jnp.ndarray, cfg, *,
+                cache: Params | None = None, want_cache: bool = False,
+                chunk: int = 128) -> tuple[jnp.ndarray, Params | None]:
+    B, S, D = x.shape
+    d_inner, nh, dh = _mlstm_dims(cfg)
+    h = common.rmsnorm(params["norm"], x, cfg.norm_eps)
+    up = h @ params["up"]
+    xin, zgate = jnp.split(up, 2, axis=-1)
+
+    from repro.parallel import act_sharding as act
+    conv_state = cache["conv"] if cache is not None else None
+    xc, new_conv = _conv4(xin, params["conv_w"], params["conv_b"], conv_state)
+    # keep the recurrent cell batch-sharded: GSPMD otherwise replicates the
+    # whole scan over the model axis (xLSTM cells do not tensor-parallelize;
+    # the model axis serves the up/down projections + embedding/loss)
+    q = act.constrain((xc @ params["wq"]).reshape(B, S, nh, dh), "data")
+    k = act.constrain((xc @ params["wk"]).reshape(B, S, nh, dh), "data")
+    v = act.constrain((xin @ params["wv"]).reshape(B, S, nh, dh), "data")
+    logi = act.constrain(
+        xc.astype(jnp.float32) @ params["wi"] + params["bi"], "data")  # (B,S,NH)
+    logf = act.constrain(jax.nn.log_sigmoid(
+        xc.astype(jnp.float32) @ params["wf"] + params["bf"]), "data")
+
+    if cache is not None:
+        hcell, new_cell = _mlstm_step(cache, q[:, 0], k[:, 0], v[:, 0],
+                                      logi[:, 0], logf[:, 0])
+        hcell = hcell[:, None]
+        new_cache: Params | None = {"conv": new_conv, **new_cell}
+    else:
+        # manual-SPMD (data-parallel) cell: GSPMD replicates the transposed
+        # nested scan otherwise (§Perf log, xlstm hillclimb)
+        cell = lambda *a: _mlstm_chunked(*a, chunk)  # noqa: E731
+        args = (q, k, v, logi, logf)
+        out_ex = jax.eval_shape(cell, *args)
+        cell = act.data_shard_map(cell, args, out_ex, B)
+        hcell, final = cell(*args)
+        new_cache = {"conv": new_conv, **final} if want_cache else None
+
+    hcell = hcell.reshape(B, -1, d_inner).astype(h.dtype)
+    out = common.rmsnorm(params["hnorm"], hcell, cfg.norm_eps) * jax.nn.silu(zgate)
+    return x + out @ params["down"], new_cache
+
+
+def _conv4(xin, w, b, state):
+    K = w.shape[0]
+    if state is not None:
+        xp = jnp.concatenate([state, xin], axis=1)
+    else:
+        xp = jnp.pad(xin, ((0, 0), (K - 1, 0), (0, 0)))
+    new_state = xp[:, xp.shape[1] - (K - 1):]
+    out = sum(xp[:, i:i + xin.shape[1]] * w[i] for i in range(K)) + b
+    return jax.nn.silu(out), new_state
+
+
+def _mlstm_step(cache, q, k, v, logi, logf):
+    """Single decode step.  q,k,v: (B,NH,dh); logi/logf: (B,NH)."""
+    dh = q.shape[-1]
+    qs = q.astype(jnp.float32) / math.sqrt(dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    m_new = jnp.maximum(logf + cache["m"], logi)
+    fs = jnp.exp(logf + cache["m"] - m_new)[..., None]
+    is_ = jnp.exp(logi - m_new)[..., None]
+    C = cache["C"] * fs[..., None] + is_[..., None] * kf[..., :, None] * vf[..., None, :]
+    n = cache["n"] * fs + is_ * kf
+    num = jnp.einsum("bhk,bhkv->bhv", qs, C)
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", qs, n))
+    hcell = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    return hcell.reshape(q.shape[0], -1), {"C": C, "n": n, "m": m_new}
+
+
+def _mlstm_chunked(q, k, v, logi, logf, chunk):
+    """Chunkwise-parallel stabilized mLSTM.
+
+    q,k,v: (B,S,NH,dh); logi/logf: (B,S,NH).
+    Returns (h (B,S,NH*dh), final {C,n,m}).
+    """
+    B, S, NH, dh = q.shape
+    Q = min(chunk, S)
+    while S % Q:
+        Q -= 1
+    nc = S // Q
+
+    def rsh(t):  # -> (nc, B, NH, Q, ...)
+        t = t.reshape(B, nc, Q, *t.shape[2:])
+        perm = (1, 0) + tuple(range(3, t.ndim)) + (2,)
+        # (B,nc,Q,NH,dh) -> (nc,B,NH,Q,dh); (B,nc,Q,NH) -> (nc,B,NH,Q)
+        if t.ndim == 5:
+            return t.transpose(1, 0, 3, 2, 4)
+        return t.transpose(1, 0, 3, 2)
+
+    qs = rsh(q.astype(jnp.float32) / math.sqrt(dh))
+    ks = rsh(k.astype(jnp.float32))
+    vs = rsh(v.astype(jnp.float32))
+    li = rsh(logi)
+    lf = rsh(logf)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    NEG = -1e30
+
+    def step(carry, inp):
+        C, n, m = carry                       # (B,NH,dh,dh), (B,NH,dh), (B,NH)
+        qc, kc, vc, lic, lfc = inp
+        b = jnp.cumsum(lfc, axis=-1)          # (B,NH,Q) inclusive
+        g = b[..., -1]                        # (B,NH)
+        a = lic - b                           # logi_j - b_j
+        m_local = b + jax.lax.cummax(a, axis=a.ndim - 1)
+        m_inter = m[..., None] + b
+        m_t = jnp.maximum(m_local, m_inter)   # (B,NH,Q)
+        # intra D matrix
+        logD = b[..., :, None] - b[..., None, :] + lic[..., None, :] - m_t[..., None]
+        logD = jnp.where(tri[None, None], logD, NEG)
+        Dm = jnp.exp(logD)                    # (B,NH,Q,Q)
+        sc = jnp.einsum("bhik,bhjk->bhij", qc, kc) * Dm
+        inter = jnp.exp(b + m[..., None] - m_t)          # (B,NH,Q)
+        num = jnp.einsum("bhij,bhjv->bhiv", sc, vc) \
+            + inter[..., None] * jnp.einsum("bhik,bhkv->bhiv", qc, C)
+        den = sc.sum(-1) + inter * jnp.einsum("bhik,bhk->bhi", qc, n)
+        hq = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # carry update
+        m_new = jnp.maximum(m + g, g + jax.lax.cummax(a, axis=a.ndim - 1)[..., -1])
+        wk = jnp.exp(g[..., None] + a - m_new[..., None])            # (B,NH,Q)
+        C = C * jnp.exp(m + g - m_new)[..., None, None] \
+            + jnp.einsum("bhj,bhjk,bhjv->bhkv", wk, kc, vc)
+        n = n * jnp.exp(m + g - m_new)[..., None] \
+            + jnp.einsum("bhj,bhjk->bhk", wk, kc)
+        return (C, n, m_new), hq
+
+    C0 = jnp.zeros((B, NH, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, NH, dh), jnp.float32)
+    m0 = jnp.full((B, NH), -1e30, jnp.float32)
+    (Cf, nf, mf), hs = jax.lax.scan(step, (C0, n0, m0), (qs, ks, vs, li, lf))
+    # hs: (nc,B,NH,Q,dh) -> (B,S,NH*dh)
+    h = hs.transpose(1, 0, 3, 2, 4).reshape(B, S, NH * dh)
+    return h, {"C": Cf, "n": nf, "m": mf}
+
+
+def mlstm_cache_spec(cfg, batch: int) -> dict[str, jax.ShapeDtypeStruct]:
+    d_inner, nh, dh = _mlstm_dims(cfg)
+    cdt = common.dt(cfg.compute_dtype)
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, 3, d_inner), cdt),
+        "C": jax.ShapeDtypeStruct((batch, nh, dh, dh), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, nh, dh), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, nh), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_init(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    ks = jax.random.split(key, 10)
+    f_ff = int(cfg.slstm_proj_factor * d)
+    p: Params = {"norm": common.rmsnorm_init(d, dtype),
+                 "hnorm": common.rmsnorm_init(d, dtype)}
+    for i, g in enumerate(("z", "i", "f", "o")):
+        p[f"w{g}"] = common.dense_init(ks[i], d, d, dtype)
+        p[f"r{g}"] = (jax.random.normal(ks[4 + i], (nh, dh, dh), jnp.float32)
+                      / math.sqrt(dh)).astype(dtype)
+        p[f"b{g}"] = jnp.full((d,), 1.0 if g == "f" else 0.0, jnp.float32)
+    # post up-projection (GeLU MLP, pf ~ 4/3)
+    p["ffn_wi"] = common.dense_init(ks[8], d, f_ff, dtype)
+    p["ffn_wo"] = common.dense_init(ks[9], f_ff, d, dtype)
+    return p
+
+
+def slstm_apply(params: Params, x: jnp.ndarray, cfg, *,
+                cache: Params | None = None, want_cache: bool = False,
+                ) -> tuple[jnp.ndarray, Params | None]:
+    B, S, D = x.shape
+    nh = cfg.n_heads
+    dh = D // nh
+    from repro.parallel import act_sharding as act
+    xn = common.rmsnorm(params["norm"], x, cfg.norm_eps)
+    # input contributions, all timesteps at once (batch-sharded: see mlstm)
+    pre = {g: act.constrain((xn @ params[f"w{g}"]).astype(jnp.float32)
+                            + params[f"b{g}"], "data")
+           for g in ("z", "i", "f", "o")}
+
+    rparams = {g: params[f"r{g}"] for g in ("z", "i", "f", "o")}
+
+    def cell(state, t_pre, rp=None):
+        rp = rp if rp is not None else rparams
+        c, n, m, hprev = state                          # (b,D) x4 (b = local)
+        b = hprev.shape[0]
+        hh = hprev.reshape(b, nh, dh)
+        rec = {g: jnp.einsum("bhk,hkv->bhv", hh,
+                             rp[g].astype(jnp.float32)).reshape(b, D)
+               for g in ("z", "i", "f", "o")}
+        zt = jnp.tanh(t_pre["z"] + rec["z"])
+        it = t_pre["i"] + rec["i"]
+        ft = t_pre["f"] + rec["f"]
+        ot = jax.nn.sigmoid(t_pre["o"] + rec["o"])
+        m_new = jnp.maximum(ft + m, it)
+        fp = jnp.exp(ft + m - m_new)
+        ip = jnp.exp(it - m_new)
+        c_new = fp * c + ip * zt
+        n_new = fp * n + ip
+        h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    if cache is not None:
+        state = (cache["c"], cache["n"], cache["m"], cache["h"])
+        t_pre = {g: pre[g][:, 0] for g in pre}
+        state, h_seq = cell(state, t_pre)
+        h_seq = h_seq[:, None]
+        new_cache: Params | None = dict(zip("cnmh", state))
+    else:
+        def scan_cell(pre_bmajor, rp):
+            b = pre_bmajor["z"].shape[0]
+            state0 = (jnp.zeros((b, D), jnp.float32),
+                      jnp.zeros((b, D), jnp.float32),
+                      jnp.full((b, D), -1e30, jnp.float32),
+                      jnp.zeros((b, D), jnp.float32))
+            xs = {g: pre_bmajor[g].transpose(1, 0, 2) for g in pre_bmajor}
+            state, hs = jax.lax.scan(lambda s, t: cell(s, t, rp), state0, xs)
+            return state, hs.transpose(1, 0, 2)
+
+        # manual-SPMD recurrence (see mlstm_apply / §Perf log)
+        out_ex = jax.eval_shape(scan_cell, pre, rparams)
+        smcell = act.data_shard_map(scan_cell, (pre,), out_ex, B,
+                                    repl_args=(rparams,))
+        state, h_seq = smcell(pre, rparams)
+        new_cache = dict(zip("cnmh", state)) if want_cache else None
+
+    h_seq = h_seq.astype(x.dtype)
+    y = x + h_seq
+    # post up-projection MLP
+    hn = common.rmsnorm(params["hnorm"], y, cfg.norm_eps)
+    y = y + jax.nn.gelu(hn @ params["ffn_wi"], approximate=True) @ params["ffn_wo"]
+    return y, new_cache
+
+
+def slstm_cache_spec(cfg, batch: int) -> dict[str, jax.ShapeDtypeStruct]:
+    d = cfg.d_model
+    f32 = jnp.float32
+    return {k: jax.ShapeDtypeStruct((batch, d), f32) for k in "cnmh"}

@@ -1,0 +1,5 @@
+from repro.optim.adamw import (AdamWConfig, apply_updates, init_state,
+                               lr_at, make_train_step)
+
+__all__ = ["AdamWConfig", "apply_updates", "init_state", "lr_at",
+           "make_train_step"]

@@ -1,0 +1,108 @@
+"""AdamW + LR schedules, pure JAX (no optax dependency).
+
+Paper settings (§3.1): AdamW β1=0.9 β2=0.99, weight decay 0.1, gradient
+clipping at global-norm 0.1.  Experts: linear warmup → cosine decay.
+Routers: linear warmup → constant (App. A.1 — only *relative* router
+quality matters, so constant LR removes a tuning knob).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 5e-4
+    warmup_steps: int = 3000
+    total_steps: int = 256_000
+    schedule: str = "cosine"        # cosine|constant
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.99
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 0.1
+    opt_dtype: str = "float32"      # dtype of m/v moments
+
+
+def lr_at(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / jnp.maximum(cfg.warmup_steps, 1)
+    if cfg.schedule == "constant":
+        post = jnp.float32(cfg.peak_lr)
+    else:
+        t = (step - cfg.warmup_steps) / jnp.maximum(
+            cfg.total_steps - cfg.warmup_steps, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        post = cfg.peak_lr * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+    return jnp.where(step < cfg.warmup_steps, warm, post)
+
+
+def init_state(params: Params, cfg: AdamWConfig) -> dict:
+    odt = jnp.dtype(cfg.opt_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, odt)  # noqa: E731
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def clip_by_global_norm(grads: Params, max_norm: float) -> tuple[Params, jnp.ndarray]:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), gnorm
+
+
+def apply_updates(params: Params, grads: Params, state: dict,
+                  cfg: AdamWConfig) -> tuple[Params, dict, dict]:
+    """One AdamW step.  Returns (new_params, new_state, info)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    sf = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** sf
+    bc2 = 1.0 - cfg.b2 ** sf
+    odt = jnp.dtype(cfg.opt_dtype)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * cfg.b1 + gf * (1 - cfg.b1)
+        v32 = v.astype(jnp.float32) * cfg.b2 + jnp.square(gf) * (1 - cfg.b2)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), m32.astype(odt), v32.astype(odt)
+
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    gflat = treedef.flatten_up_to(grads)
+    mflat = treedef.flatten_up_to(state["m"])
+    vflat = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat, gflat, mflat, vflat)]
+    newp = treedef.unflatten([o[0] for o in out])
+    newm = treedef.unflatten([o[1] for o in out])
+    newv = treedef.unflatten([o[2] for o in out])
+    return newp, {"m": newm, "v": newv, "step": step}, {"lr": lr, "gnorm": gnorm}
+
+
+def make_train_step(loss_fn: Callable, cfg: AdamWConfig):
+    """loss_fn(params, batch) -> (loss, metrics).  Returns jit-able step."""
+    def train_step(params, state, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        params, state, info = apply_updates(params, grads, state, cfg)
+        metrics = dict(metrics, loss=loss, **info)
+        return params, state, metrics
+    return train_step

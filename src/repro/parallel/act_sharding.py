@@ -1,0 +1,177 @@
+"""Activation sharding constraints.
+
+GSPMD propagates parameter shardings well through matmuls but gives up on
+the attention head reshape when ``n_heads % model_size != 0`` (qwen2-1.5b:
+12 heads on a 16-way model axis) — it silently REPLICATES attention over
+the model axis, a 16x FLOP explosion we caught in the dry-run roofline.
+
+This module lets model code request activation constraints without knowing
+about meshes: the launch layer enables a context (axis sizes) around
+tracing; outside of it (unit tests, single-host training) every helper is
+an identity.
+
+Head-sharding policy for attention:
+  * heads divide the model axis      -> shard heads ("megatron");
+  * otherwise                        -> shard the query SEQUENCE over the
+    model axis ("context parallel"): q_chunks live on different devices,
+    k/v are replicated over model (cheap for GQA), scores stay local.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STATE = {"sizes": None, "mesh": None, "data_axes": ("data",),
+          "model_axes": ("model",)}
+
+
+@contextmanager
+def use(mesh, *, dp_only: bool = False, data_axes: tuple | None = None):
+    """Enable activation constraints for tracing under ``mesh``.
+
+    ``dp_only``: the model axis joins data parallelism (small archs where
+    16-way tensor parallelism is all-reduce-bound — §Perf hillclimb 3);
+    logical axis "data" maps to the physical ("data","model") pair and
+    "model" maps to nothing.
+
+    Set REPRO_BASELINE_SHARDING=1 to no-op (pure-GSPMD baseline — used by
+    the §Perf before/after measurements)."""
+    import os
+    if os.environ.get("REPRO_BASELINE_SHARDING"):
+        yield
+        return
+    prev = (_STATE["sizes"], _STATE["mesh"], _STATE["data_axes"],
+            _STATE["model_axes"])
+    _STATE["sizes"] = dict(zip(mesh.axis_names, mesh.devices.shape))
+    _STATE["mesh"] = mesh
+    if data_axes is not None:
+        _STATE["data_axes"] = tuple(data_axes)      # e.g. ("pod","data")
+    else:
+        _STATE["data_axes"] = ("data", "model") if dp_only else ("data",)
+    _STATE["model_axes"] = () if dp_only else ("model",)
+    try:
+        yield
+    finally:
+        (_STATE["sizes"], _STATE["mesh"], _STATE["data_axes"],
+         _STATE["model_axes"]) = prev
+
+
+def current_mesh():
+    """Concrete mesh for manual-SPMD (shard_map) regions, or None."""
+    return _STATE["mesh"]
+
+
+def data_shard_map(fn, sharded_args, example_out, batch: int,
+                   repl_args=()):
+    """Wrap ``fn(*sharded_args, *repl_args)`` in a data-parallel shard_map
+    if a mesh is active.
+
+    Used for recurrent cells (sLSTM/mLSTM scans): GSPMD's sharding
+    propagation gives up inside transposed nested scans and replicates the
+    whole recurrence; manual SPMD keeps it local by construction.  Sharded
+    tensors (args and outputs) must be batch-major; ``repl_args`` (e.g.
+    recurrent weights) are replicated inside the region and their
+    gradients psum-reduced by the shard_map transpose.
+    """
+    import jax
+    from jax.sharding import PartitionSpec as P
+    mesh = current_mesh()
+    if mesh is None or batch % _size("data") != 0:
+        return fn
+
+    daxes = _resolve("data")
+    dax = daxes[0] if len(daxes) == 1 else daxes
+
+    def bspec(x):
+        return P(dax, *([None] * (x.ndim - 1)))
+
+    def rspec(x):
+        return P(*([None] * x.ndim))
+
+    in_specs = (jax.tree_util.tree_map(bspec, sharded_args)
+                + jax.tree_util.tree_map(rspec, repl_args))
+    out_specs = jax.tree_util.tree_map(bspec, example_out)
+    return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+
+
+def enabled() -> bool:
+    return _STATE["sizes"] is not None
+
+
+def _resolve(name: str) -> tuple[str, ...]:
+    """Map a logical axis name to physical mesh axes."""
+    if name == "data":
+        return _STATE["data_axes"]
+    if name == "model":
+        return _STATE["model_axes"]
+    return (name,)
+
+
+def _size(name: str) -> int:
+    s = _STATE["sizes"]
+    if not s:
+        return 1
+    n = 1
+    for a in _resolve(name):
+        n *= s.get(a, 1)
+    return n
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint if enabled; axes longer than ndim trimmed,
+    non-divisible axes dropped.  Logical axis names resolve through the
+    dp_only mapping (see :func:`use`)."""
+    if not enabled():
+        return x
+    parts = []
+    for i, dim in enumerate(x.shape):
+        ax = axes[i] if i < len(axes) else None
+        if ax is None or _size(ax) <= 1 or dim % _size(ax) != 0:
+            parts.append(None)
+        else:
+            phys = _resolve(ax)
+            parts.append(phys[0] if len(phys) == 1 else phys)
+    if all(p is None for p in parts):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*parts))
+
+
+def attn_mode(n_heads: int) -> str:
+    """'heads' | 'ctx' | 'off' — how attention activations are sharded."""
+    if not enabled():
+        return "off"
+    return "heads" if n_heads % _size("model") == 0 else "ctx"
+
+
+def shard_attn_q(q):
+    """q: (B, S, Hq, hd)."""
+    mode = attn_mode(q.shape[2])
+    if mode == "heads":
+        return constrain(q, "data", None, "model", None)
+    if mode == "ctx":
+        return constrain(q, "data", "model", None, None)
+    return q
+
+
+def shard_attn_kv(k):
+    """k/v: (B, S, Hkv, hd) — replicated over model unless heads divide."""
+    if attn_mode(k.shape[2]) == "heads":
+        return constrain(k, "data", None, "model", None)
+    return constrain(k, "data", None, None, None)
+
+
+def shard_tokens(x):
+    """(B, S, D) residual-stream activations."""
+    return constrain(x, "data", None, None)
+
+
+def shard_moe_buffer(buf):
+    """(E, C, D) expert dispatch buffer."""
+    if not enabled():
+        return buf
+    if buf.shape[0] % _size("model") == 0:
+        return constrain(buf, "model", None, None)
+    return constrain(buf, None, "data", None)

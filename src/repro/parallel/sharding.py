@@ -1,0 +1,215 @@
+"""Logical-axis sharding rules: param/batch/cache pytrees -> PartitionSpec.
+
+Mesh layout (launch/mesh.py):
+  single-pod: (data=16, model=16)
+  multi-pod : (pod=2, data=16, model=16)
+
+Compute specs are Megatron-style tensor parallelism over ``model``
+(attention heads / FFN hidden / vocab) with batch over ``data``.  Storage
+specs (master params + AdamW moments) optionally extend the compute spec
+with ``data`` on the largest unsharded axis (ZeRO-3) for archs in
+``FSDP_ARCHS`` — required to fit the >=27B models in 16 GB/chip.
+
+The ``pod`` axis never appears in *intra-expert* specs: in SmallTalk mode
+it shards the leading expert-stack axis (see core/mixture.py), which is
+exactly the paper's claim — no collectives cross the pod boundary.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Tree = Any
+
+
+def _axis(mesh_sizes: dict[str, int], name: str, dim: int) -> str | None:
+    """Use mesh axis ``name`` for a dim if it divides evenly."""
+    n = mesh_sizes.get(name, 1)
+    return name if n > 1 and dim % n == 0 else None
+
+
+def mesh_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+_COL = {"wq", "wk", "wv", "wi", "wg", "up", "in_proj", "img_proj",
+        "ffn_wi", "wz", "wf_", }          # (in, out): shard out
+_ROW = {"wo", "down", "out_proj", "ffn_wo"}  # (in, out): shard in
+_VOCAB = {"embed", "lm_head"}
+
+
+def _param_leaf_spec(path: tuple, shape: tuple[int, ...],
+                     ms: dict[str, int]) -> P:
+    names = [_pname(p) for p in path]
+    leaf = names[-1]
+    stacked = "stages" in names
+    pre = (None,) if stacked else ()
+    body = shape[1:] if stacked else shape
+
+    def spec(*axes):
+        return P(*pre, *axes)
+
+    in_moe = "moe" in names and "dense" not in names
+    if leaf in _VOCAB:
+        return spec(_axis(ms, "model", body[0]), None)
+    if leaf == "router":                                  # moe gate: replicate
+        return spec(*([None] * len(body)))
+    if in_moe and leaf in ("wi", "wg"):                    # (E, D, F)
+        if _axis(ms, "model", body[0]):
+            return spec("model", None, None)
+        return spec(None, None, _axis(ms, "model", body[2]))
+    if in_moe and leaf == "wo":                            # (E, F, D)
+        if _axis(ms, "model", body[0]):
+            return spec("model", None, None)
+        return spec(None, _axis(ms, "model", body[1]), None)
+    if leaf in ("wz", "wi_", "wf", "wo_") and len(body) == 2 and "slstm" in names:
+        return spec(None, _axis(ms, "model", body[1]))
+    if "slstm" in names and leaf.startswith("r") and len(body) == 3:
+        return spec(None, None, _axis(ms, "model", body[2]))
+    if "mlstm" in names and leaf in ("wi", "wf"):          # gate proj (di, NH)
+        return spec(None, _axis(ms, "model", body[1]))
+    if leaf in _ROW and len(body) == 2:
+        return spec(_axis(ms, "model", body[0]), None)
+    if leaf in _COL and len(body) == 2:
+        return spec(None, _axis(ms, "model", body[1]))
+    if "slstm" in names and len(body) == 2 and leaf[0] == "w":
+        return spec(None, _axis(ms, "model", body[1]))
+    if leaf == "conv_w":                                   # (K, ch)
+        return spec(None, _axis(ms, "model", body[1]))
+    if leaf in ("conv_b", "bq", "bk", "bv") and len(body) == 1:
+        return spec(_axis(ms, "model", body[0]))
+    # scales, small per-head vectors, biases: replicate
+    return spec(*([None] * len(body)))
+
+
+def _pname(p) -> str:
+    return str(getattr(p, "key", getattr(p, "idx", p)))
+
+
+def param_specs(params_shape: Tree, mesh: Mesh, *, fsdp: bool = False) -> Tree:
+    ms = mesh_sizes(mesh)
+
+    def one(path, leaf):
+        sp = _param_leaf_spec(path, tuple(leaf.shape), ms)
+        if fsdp:
+            sp = storage_extend(sp, tuple(leaf.shape), ms)
+        return sp
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def storage_extend(spec: P, shape: tuple[int, ...], ms: dict[str, int],
+                   axes: tuple[str, ...] = ("data",)) -> P:
+    """ZeRO: extend a compute spec with ``axes`` on the largest free axis."""
+    n = 1
+    for a in axes:
+        n *= ms.get(a, 1)
+    if n <= 1:
+        return spec
+    if any(set(axes) & set((a,) if isinstance(a, str) else tuple(a or ()))
+           for a in spec):
+        return spec                      # already ZeRO-extended
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if parts[i] is None and shape[i] % n == 0 and shape[i] >= 2 * n:
+            parts[i] = axes[0] if len(axes) == 1 else axes
+            return P(*parts)
+    return spec
+
+
+def param_specs_dp(params_shape: Tree, mesh: Mesh, *, zero: bool = True) -> Tree:
+    """Pure data parallelism (model axis joins data): weights replicated
+    for compute; master/opt state ZeRO-sharded over (data x model)."""
+    ms = mesh_sizes(mesh)
+
+    def one(path, leaf):
+        sp = P(*([None] * leaf.ndim))
+        if zero:
+            sp = storage_extend(sp, tuple(leaf.shape), ms,
+                                axes=("data", "model"))
+        return sp
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def opt_state_specs(pspecs: Tree, ms_mesh: Mesh, *, fsdp: bool,
+                    params_shape: Tree,
+                    axes: tuple[str, ...] = ("data",)) -> Tree:
+    """AdamW moments follow the (possibly ZeRO-extended) param specs."""
+    ms = mesh_sizes(ms_mesh)
+
+    def one(sp, leaf):
+        return storage_extend(sp, tuple(leaf.shape), ms, axes=axes) \
+            if fsdp else sp
+
+    mspec = jax.tree_util.tree_map(one, pspecs, params_shape)
+    return {"m": mspec, "v": mspec, "step": P()}
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+def batch_specs(batch_shape: Tree, mesh: Mesh,
+                batch_axis: str | tuple[str, ...] = "data") -> Tree:
+    ms = mesh_sizes(mesh)
+    n = 1
+    for a in ((batch_axis,) if isinstance(batch_axis, str) else batch_axis):
+        n *= ms.get(a, 1)
+
+    def one(path, leaf):
+        name = _pname(path[-1]) if path else ""
+        if name == "cache_index" or leaf.ndim == 0:
+            return P()
+        if leaf.shape[0] % n == 0 and leaf.shape[0] >= n:
+            return P(batch_axis, *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(one, batch_shape)
+
+
+def _cache_leaf_spec(name: str, shape: tuple[int, ...],
+                     ms: dict[str, int]) -> P:
+    """shape includes the leading per-stage stack axis (rep)."""
+    rep, B = shape[0], shape[1]
+    bax = _axis(ms, "data", B)
+    rest = shape[2:]
+    if name in ("k", "v"):                                # (rep,B,S,hkv,hd)
+        sax = None if bax else _axis(ms, "data", rest[0])
+        hax = _axis(ms, "model", rest[1])
+        dax = None if hax else _axis(ms, "model", rest[2])
+        return P(None, bax, sax, hax, dax)
+    if name == "pos":                                     # (rep,B,S)
+        sax = None if bax else _axis(ms, "data", rest[0])
+        return P(None, bax, sax)
+    if name == "conv":                                    # (rep,B,K-1,ch)
+        return P(None, bax, None, _axis(ms, "model", rest[1]))
+    if name == "ssm":                                     # (rep,B,H,P,N)
+        return P(None, bax, _axis(ms, "model", rest[0]), None, None)
+    if name == "C" and len(rest) == 3:                    # (rep,B,NH,dh,dh)
+        return P(None, bax, None, None, _axis(ms, "model", rest[2]))
+    if name == "n" and len(rest) == 2:                    # (rep,B,NH,dh)
+        return P(None, bax, None, _axis(ms, "model", rest[1]))
+    if len(rest) == 1 and name in ("c", "n", "m", "h"):   # slstm (rep,B,D) / (rep,B,NH)
+        return P(None, bax, _axis(ms, "model", rest[0]))
+    return P(None, bax, *([None] * len(rest)))
+
+
+def cache_tree_specs(cache_shape: Tree, mesh: Mesh) -> Tree:
+    ms = mesh_sizes(mesh)
+
+    def one(path, leaf):
+        return _cache_leaf_spec(_pname(path[-1]), tuple(leaf.shape), ms)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def named(tree_specs: Tree, mesh: Mesh) -> Tree:
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+                                  tree_specs,
+                                  is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,80 @@
+"""Property tests for balanced assignment (paper §2.2, Fig. 1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.assignment import (argmax_assignment, balanced_assignment,
+                                   balanced_assignment_np, default_capacity,
+                                   sequential_assignment_np)
+
+
+def _scores(n, e, seed):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(n, e)).astype(np.float32) * 10
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(1, 64), e=st.integers(1, 8), seed=st.integers(0, 999),
+       cf=st.floats(1.0, 2.0))
+def test_capacity_respected_and_total(n, e, seed, cf):
+    cap = default_capacity(n, e, cf)
+    out = balanced_assignment_np(_scores(n, e, seed), cap)
+    assert out.min() >= 0 and out.max() < e
+    counts = np.bincount(out, minlength=e)
+    assert counts.max() <= cap
+    assert counts.sum() == n
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 48), e=st.integers(1, 6), seed=st.integers(0, 999))
+def test_jax_matches_numpy(n, e, seed):
+    s = _scores(n, e, seed)
+    cap = default_capacity(n, e)
+    got = np.asarray(balanced_assignment(s, cap))
+    want = balanced_assignment_np(s, cap)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_unconstrained_equals_argmax():
+    s = _scores(100, 4, 0)
+    out = balanced_assignment_np(s, capacity=100)
+    np.testing.assert_array_equal(out, s.argmax(1))
+    np.testing.assert_array_equal(np.asarray(argmax_assignment(s)), s.argmax(1))
+
+
+def test_figure1_example():
+    """Paper Fig. 1: sorted-by-confidence beats sequential assignment."""
+    # 3 sequences, 3 experts, capacity 1.  Sequential assigns row0->e0,
+    # row1 wants e0 (full) -> e1; row2 wants e0/e1 (full) -> e2 at a big
+    # loss.  Balanced assigns the confident rows first.
+    scores = np.array([
+        [-1.0, -9.0, -9.5],    # weak preference for e0
+        [-0.5, -0.6, -9.5],    # nearly indifferent e0/e1
+        [-0.1, -8.0, -9.9],    # STRONG preference for e0
+    ])
+    seq = sequential_assignment_np(scores, capacity=1)
+    bal = balanced_assignment_np(scores, capacity=1)
+
+    def total(assign):
+        return sum(scores[i, a] for i, a in enumerate(assign))
+
+    assert total(bal) > total(seq)
+    assert bal[2] == 0                       # the confident row got e0
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(2, 32), e=st.integers(2, 4), seed=st.integers(0, 99))
+def test_most_confident_sequence_gets_its_argmax(n, e, seed):
+    """The guarantee balanced assignment actually provides (Fig. 1b): the
+    highest-likelihood sequence is assigned first, so it always receives
+    its argmax expert."""
+    s = _scores(n, e, seed)
+    cap = default_capacity(n, e)
+    bal = balanced_assignment_np(s, cap)
+    top = int(s.max(1).argmax())
+    assert bal[top] == s[top].argmax()
+
+
+def test_capacity_too_small_raises():
+    with pytest.raises(ValueError):
+        balanced_assignment_np(_scores(10, 2, 0), capacity=3)

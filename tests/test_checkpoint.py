@@ -1,0 +1,37 @@
+"""Checkpoint roundtrip incl. bf16 leaves and stage-stacked trees."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore, save
+from repro.configs import get_config, smoke_variant
+from repro.models import model as modellib
+
+
+def test_roundtrip_simple(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16) * 1.5,
+                  "d": jnp.int32(7)}}
+    p = str(tmp_path / "ckpt")
+    save(p, tree)
+    zero = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    back = restore(p, zero)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(back)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_roundtrip_model_params(tmp_path):
+    cfg = smoke_variant(get_config("zamba2-1.2b"))
+    params = modellib.init_params(jax.random.PRNGKey(0), cfg)
+    p = str(tmp_path / "model")
+    save(p, params)
+    back = restore(p, jax.tree_util.tree_map(jnp.zeros_like, params))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+    l1, _ = modellib.loss_and_metrics(params, cfg, batch)
+    l2, _ = modellib.loss_and_metrics(back, cfg, batch)
+    assert float(jnp.abs(l1 - l2)) < 1e-6

@@ -1,0 +1,83 @@
+"""Unit tests for the trip-count-aware HLO analyzer on crafted modules."""
+import textwrap
+
+from repro.launch import hlo_cost, hlo_stats
+
+MODULE = textwrap.dedent("""\
+    HloModule test
+
+    %body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+      %p = (s32[], f32[8,8]) parameter(0)
+      %c = s32[] get-tuple-element(%p), index=0
+      %x = f32[8,8] get-tuple-element(%p), index=1
+      %w = f32[8,8] constant({...})
+      %d = f32[8,8] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,8] all-reduce(%d), replica_groups={{0,1,2,3}}, to_apply=%sum
+      %one = s32[] constant(1)
+      %nc = s32[] add(%c, %one)
+      ROOT %t = (s32[], f32[8,8]) tuple(%nc, %ar)
+    }
+
+    %cond (p: (s32[], f32[8,8])) -> pred[] {
+      %p = (s32[], f32[8,8]) parameter(0)
+      %c = s32[] get-tuple-element(%p), index=0
+      %n = s32[] constant(5)
+      ROOT %lt = pred[] compare(%c, %n), direction=LT
+    }
+
+    ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+      %a = f32[8,8] parameter(0)
+      %zero = s32[] constant(0)
+      %init = (s32[], f32[8,8]) tuple(%zero, %a)
+      %w = (s32[], f32[8,8]) while(%init), condition=%cond, body=%body
+      ROOT %out = f32[8,8] get-tuple-element(%w), index=1
+    }
+""")
+
+
+def test_while_trip_count_multiplies():
+    c = hlo_cost.analyze(MODULE)
+    # dot: 2*8*8*8 = 1024 flops, x5 trips
+    assert c.flops == 5 * 1024, c.flops
+    # all-reduce 8x8 f32 = 256B, ring factor 2*(4-1)/4 = 1.5 -> 384 x5
+    assert abs(c.coll_bytes - 5 * 256 * 1.5) < 1e-6, c.coll_bytes
+    assert c.coll_count == 5
+
+
+def test_backend_config_trip_count_preferred():
+    mod = MODULE.replace(
+        "condition=%cond, body=%body",
+        'condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"7"}}')
+    c = hlo_cost.analyze(mod)
+    assert c.flops == 7 * 1024
+
+
+def test_groups_parsers():
+    g = hlo_stats._parse_groups("{{0,1},{2,3}}")
+    assert g == [[0, 1], [2, 3]]
+    g = hlo_stats._parse_groups("[2,4]<=[8]")
+    assert g == [[0, 1, 2, 3], [4, 5, 6, 7]]
+    g = hlo_stats._parse_groups("[4,2]<=[2,4]T(1,0)")
+    assert g == [[0, 4], [1, 5], [2, 6], [3, 7]]
+
+
+def test_pod_crossing_detection():
+    mod = MODULE.replace("replica_groups={{0,1,2,3}}",
+                         "replica_groups={{0,1,256,257}}")
+    c = hlo_cost.analyze(mod, pod_boundary=256)
+    assert c.coll_pod_bytes > 0
+    c2 = hlo_cost.analyze(MODULE, pod_boundary=256)
+    assert c2.coll_pod_bytes == 0
+
+
+def test_dynamic_slice_counts_slice_only():
+    mod = textwrap.dedent("""\
+        HloModule m
+        ENTRY %main (a: f32[128,64]) -> f32[1,64] {
+          %a = f32[128,64] parameter(0)
+          %i = s32[] constant(3)
+          ROOT %s = f32[1,64] dynamic-slice(%a, %i, %i), dynamic_slice_sizes={1,64}
+        }
+    """)
+    c = hlo_cost.analyze(mod)
+    assert c.hbm_bytes == 2 * 64 * 4      # slice rw, not the 128x64 operand

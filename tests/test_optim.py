@@ -1,0 +1,78 @@
+"""AdamW vs an independent numpy reference; schedules; clipping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import AdamWConfig, adamw
+
+
+def _np_adamw(params, grads, m, v, step, cfg, clip=True):
+    gflat = np.concatenate([g.ravel() for g in grads])
+    gnorm = np.sqrt((gflat ** 2).sum())
+    scale = min(1.0, cfg.clip_norm / max(gnorm, 1e-12)) if clip else 1.0
+    lr = cfg.peak_lr * step / cfg.warmup_steps if step < cfg.warmup_steps \
+        else cfg.peak_lr
+    out_p, out_m, out_v = [], [], []
+    for p, g in zip(params, grads):
+        g = g * scale
+        m_n = cfg.b1 * m[len(out_m)] + (1 - cfg.b1) * g
+        v_n = cfg.b2 * v[len(out_v)] + (1 - cfg.b2) * g ** 2
+        mh = m_n / (1 - cfg.b1 ** step)
+        vh = v_n / (1 - cfg.b2 ** step)
+        upd = mh / (np.sqrt(vh) + cfg.eps) + cfg.weight_decay * p
+        out_p.append(p - lr * upd)
+        out_m.append(m_n)
+        out_v.append(v_n)
+    return out_p, out_m, out_v
+
+
+def test_adamw_matches_numpy_reference():
+    cfg = AdamWConfig(peak_lr=1e-2, warmup_steps=2, total_steps=100,
+                      schedule="constant", clip_norm=0.5, weight_decay=0.1)
+    rng = np.random.default_rng(0)
+    params = {"a": jnp.asarray(rng.normal(size=(4, 3)), jnp.float32),
+              "b": jnp.asarray(rng.normal(size=(7,)), jnp.float32)}
+    state = adamw.init_state(params, cfg)
+    np_p = [np.asarray(params["a"]), np.asarray(params["b"])]
+    np_m = [np.zeros_like(x) for x in np_p]
+    np_v = [np.zeros_like(x) for x in np_p]
+    for step in range(1, 5):
+        grads = {"a": jnp.asarray(rng.normal(size=(4, 3)), jnp.float32),
+                 "b": jnp.asarray(rng.normal(size=(7,)), jnp.float32)}
+        params, state, info = adamw.apply_updates(params, grads, state, cfg)
+        np_p, np_m, np_v = _np_adamw(
+            np_p, [np.asarray(grads["a"]), np.asarray(grads["b"])],
+            np_m, np_v, step, cfg)
+        np.testing.assert_allclose(np.asarray(params["a"]), np_p[0],
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(params["b"]), np_p[1],
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_schedules():
+    cos = AdamWConfig(peak_lr=1.0, warmup_steps=10, total_steps=110,
+                      schedule="cosine", min_lr_ratio=0.1)
+    assert float(adamw.lr_at(cos, jnp.int32(0))) == 0.0
+    assert abs(float(adamw.lr_at(cos, jnp.int32(10))) - 1.0) < 1e-6
+    assert abs(float(adamw.lr_at(cos, jnp.int32(110))) - 0.1) < 1e-6
+    mid = float(adamw.lr_at(cos, jnp.int32(60)))
+    assert 0.5 < mid < 0.6
+    const = AdamWConfig(peak_lr=0.5, warmup_steps=4, schedule="constant")
+    assert abs(float(adamw.lr_at(const, jnp.int32(1000))) - 0.5) < 1e-7
+
+
+def test_clip_by_global_norm():
+    g = {"x": jnp.full((10,), 3.0)}
+    clipped, norm = adamw.clip_by_global_norm(g, 0.1)
+    assert abs(float(norm) - 3.0 * np.sqrt(10)) < 1e-4
+    cn = float(jnp.sqrt((clipped["x"] ** 2).sum()))
+    assert abs(cn - 0.1) < 1e-5
+    small = {"x": jnp.full((4,), 0.001)}
+    out, _ = adamw.clip_by_global_norm(small, 0.1)
+    np.testing.assert_allclose(np.asarray(out["x"]), 0.001, rtol=1e-6)
+
+
+def test_paper_hyperparameters_default():
+    cfg = AdamWConfig()
+    assert cfg.b1 == 0.9 and cfg.b2 == 0.99
+    assert cfg.weight_decay == 0.1 and cfg.clip_norm == 0.1
