@@ -1,0 +1,143 @@
+"""Serving bench: continuous-batching engine vs the old serial path.
+
+Workload: a mixed-length batch (equal prompt lengths — the old path cannot
+mix them — but per-request completion budgets spread over [min,max]) routed
+across >= 2 experts.  The baseline serves each expert group serially and
+decodes every request to the group maximum; the engine keeps a fixed
+number of decode lanes per expert full, admitting queued requests as
+lanes free up.  Both paths are greedy and must produce byte-identical
+tokens — the bench asserts that, then compares useful-token throughput.
+
+Both paths are warmed first (same shapes as the timed run) so jit compile
+time is excluded.  The model is sized so per-step compute, not dispatch
+overhead, dominates — wasted lane-tokens then cost real wall time, which
+is exactly what continuous batching reclaims.
+
+  PYTHONPATH=src python benchmarks/serve_bench.py
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import router as routerlib
+from repro.data import DataConfig, SyntheticCorpus
+from repro.models import model as modellib
+from repro.serving import EngineConfig, MixtureServeEngine, baseline
+
+EXPERT = ModelConfig(name="bench-expert", n_layers=4, d_model=256, n_heads=8,
+                     n_kv_heads=8, d_ff=1024, vocab_size=512,
+                     ffn_type="gelu", loss_chunk=128,
+                     compute_dtype="float32", param_dtype="float32")
+ROUTER = ModelConfig(name="bench-router", n_layers=1, d_model=64, n_heads=4,
+                     n_kv_heads=4, d_ff=256, vocab_size=512,
+                     ffn_type="gelu", loss_chunk=128,
+                     compute_dtype="float32", param_dtype="float32")
+
+
+def build(n_experts: int, seed: int):
+    key = jax.random.PRNGKey(seed)
+    router_params = routerlib.init_ensemble(key, ROUTER, n_experts)
+    expert_params = [modellib.init_params(jax.random.fold_in(key, e), EXPERT)
+                     for e in range(n_experts)]
+    return expert_params, router_params
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--experts", type=int, default=2)
+    ap.add_argument("--lanes", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--min-new", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, help="write results to this file")
+    ap.add_argument("--no-check", action="store_true",
+                    help="skip the engine-beats-baseline exit check")
+    args = ap.parse_args()
+    assert args.requests >= 8 and args.experts >= 2, "workload too small"
+
+    expert_params, router_params = build(args.experts, args.seed)
+    corpus = SyntheticCorpus(DataConfig(vocab_size=EXPERT.vocab_size,
+                                        seq_len=args.prompt_len,
+                                        n_domains=args.experts))
+    prompts, _ = corpus.sequences(np.arange(args.requests) + 555_000)
+    rng = np.random.default_rng(args.seed)
+    n_new = rng.integers(args.min_new, args.max_new + 1, size=args.requests)
+    max_len = args.prompt_len + args.max_new
+    prefix_len = args.prompt_len
+
+    # ---- baseline: old serial per-group path -----------------------------
+    # warm every shape the timed run will hit (per-group prefill + decode)
+    eids = baseline.route(ROUTER, router_params, prompts, prefix_len)
+    for e in np.unique(eids):
+        n_group = int((eids == e).sum())
+        baseline.generate(EXPERT, expert_params[int(e)],
+                          jnp.asarray(prompts[:n_group]), 2,
+                          cache_len=max_len)
+    serial = baseline.serve_serial(EXPERT, ROUTER, expert_params,
+                                   router_params, prompts, n_new,
+                                   prefix_len=prefix_len, cache_len=max_len)
+
+    # ---- engine: continuous batching -------------------------------------
+    eng = MixtureServeEngine(
+        EXPERT, ROUTER, expert_params, router_params,
+        EngineConfig(lanes_per_expert=args.lanes, max_len=max_len,
+                     prefix_len=prefix_len, min_prefill_bucket=args.prompt_len))
+    for i in range(3):                       # warmup: compile all shapes
+        eng.submit(prompts[i], 2, arrival_tick=0)
+    eng.run()
+    timed = [eng.submit(prompts[i], int(n_new[i]), arrival_tick=eng.tick)
+             for i in range(args.requests)]  # timed: all arrive at once
+    uid0 = timed[0].uid
+    res = eng.run()
+
+    # ---- identity + report ------------------------------------------------
+    mismatches = []
+    for r in res["requests"]:
+        i = r.uid - uid0
+        if r.expert != serial["routes"][i] or \
+                not np.array_equal(np.asarray(r.tokens), serial["tokens"][i]):
+            mismatches.append(i)
+    speedup = res["tokens_per_s"] / serial["tokens_per_s"]
+    report = {
+        "workload": {"requests": args.requests, "experts": args.experts,
+                     "lanes": args.lanes, "prompt_len": args.prompt_len,
+                     "new_tokens": [int(x) for x in n_new]},
+        "serial": {"wall_s": round(serial["wall_s"], 3),
+                   "tokens_per_s": round(serial["tokens_per_s"], 1),
+                   "useful_tokens": serial["useful_tokens"],
+                   "wasted_tokens": serial["wasted_tokens"]},
+        "engine": {"wall_s": round(res["wall_s"], 3),
+                   "tokens_per_s": round(res["tokens_per_s"], 1),
+                   "useful_tokens": res["useful_tokens"],
+                   "occupancy": round(res["occupancy"], 3),
+                   "ticks": res["ticks"]},
+        "speedup": round(speedup, 2),
+        "tokens_identical": not mismatches,
+    }
+    print(json.dumps(report, indent=1))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=1)
+    if mismatches:
+        print(f"FAIL: token mismatch on requests {mismatches[:8]}")
+        return 1
+    print(f"engine {res['tokens_per_s']:.1f} tok/s vs serial "
+          f"{serial['tokens_per_s']:.1f} tok/s -> {speedup:.2f}x "
+          f"({serial['wasted_tokens']} wasted baseline tokens reclaimed)")
+    if not args.no_check and speedup <= 1.0:
+        print("FAIL: engine did not beat the serial baseline")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

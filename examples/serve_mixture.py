@@ -1,15 +1,70 @@
-"""Serving example (deliverable b): batched requests through the routed
-mixture — prefix scoring by E tiny routers, argmax routing, per-expert
-batched prefill + multi-token decode.
+"""Quickstart: continuous-batching mixture serving.
+
+Builds a tiny 2-expert SmallTalk mixture (random weights — swap in a
+``launch/train.py`` checkpoint via repro.launch.serve for trained ones),
+submits a staggered stream of mixed-length requests, and drives the
+engine: the router ensemble scores each prompt prefix, argmax picks ONE
+expert, and requests join that expert's fixed-lane decode batch as soon
+as a lane frees up — no recompiles, no waiting for the batch to drain.
 
     PYTHONPATH=src python examples/serve_mixture.py
-    PYTHONPATH=src python examples/serve_mixture.py --ckpt results/train
+
+For the full CLI (presets, checkpoints, the old serial baseline):
+
+    PYTHONPATH=src python -m repro.launch.serve --help
 """
 import sys
 
 sys.path.insert(0, "src")
 
-from repro.launch.serve import main
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import router as routerlib
+from repro.data import DataConfig, SyntheticCorpus
+from repro.models import model as modellib
+from repro.serving import EngineConfig, MixtureServeEngine
+
+
+def main() -> None:
+    # 1. a tiny mixture: E experts + E prefix routers (stacked for vmap)
+    n_experts = 2
+    ecfg = ModelConfig(name="qs-expert", n_layers=2, d_model=128, n_heads=4,
+                       n_kv_heads=4, d_ff=512, vocab_size=256,
+                       ffn_type="gelu", loss_chunk=64)
+    rcfg = ModelConfig(name="qs-router", n_layers=1, d_model=64, n_heads=4,
+                       n_kv_heads=4, d_ff=256, vocab_size=256,
+                       ffn_type="gelu", loss_chunk=64)
+    key = jax.random.PRNGKey(0)
+    router_params = routerlib.init_ensemble(key, rcfg, n_experts)
+    expert_params = [modellib.init_params(jax.random.fold_in(key, e), ecfg)
+                     for e in range(n_experts)]
+
+    # 2. the engine: 4 decode lanes per expert, 96-token KV budget per lane
+    engine = MixtureServeEngine(
+        ecfg, rcfg, expert_params, router_params,
+        EngineConfig(lanes_per_expert=4, max_len=96, prefix_len=16))
+
+    # 3. a staggered stream of requests with mixed prompt/completion lengths
+    corpus = SyntheticCorpus(DataConfig(vocab_size=256, seq_len=64,
+                                        n_domains=n_experts))
+    prompts, _ = corpus.sequences(np.arange(12))
+    rng = np.random.default_rng(0)
+    for i in range(12):
+        engine.submit(prompts[i, :int(rng.integers(16, 48))],
+                      max_new_tokens=int(rng.integers(4, 32)),
+                      arrival_tick=i // 3)        # 3 arrivals per tick
+
+    # 4. drive it (engine.step() works too, for one tick at a time)
+    res = engine.run()
+    print(f"served {len(res['requests'])} requests in {res['ticks']} ticks: "
+          f"{res['useful_tokens']} tokens at {res['tokens_per_s']:.1f} tok/s, "
+          f"lane occupancy {res['occupancy']:.2f}")
+    for r in res["requests"]:
+        print(f"  req{r.uid}: expert {r.expert}, prompt {len(r.prompt)} tok, "
+              f"+{len(r.tokens)} new, queued {r.queue_ticks} ticks")
+
 
 if __name__ == "__main__":
     main()

@@ -1,10 +1,12 @@
-"""SmallTalk serving: batched requests -> prefix routing -> per-expert
-batched prefill + decode.
+"""SmallTalk serving CLI: a thin front-end over the continuous-batching
+engine in :mod:`repro.serving`.
 
 The serving path is the paper's inference story (§2.2): score the request
 prefix with all E tiny routers, ``argmax`` (no balancing), then run ONLY
 the selected expert — 1/E of mixture parameters active, router overhead
-<3% FLOPs.  Requests routed to the same expert are batched together.
+<3% FLOPs.  The engine keeps each expert's fixed decode lanes full by
+admitting and evicting requests mid-decode (``--baseline`` runs the old
+one-shot serial per-group loop instead, for comparison).
 
 Usage (demo on synthetic prompts with randomly-initialized weights, or on
 checkpoints produced by launch/train.py):
@@ -15,57 +17,32 @@ from __future__ import annotations
 
 import argparse
 import os
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import restore
-from repro.core import assignment as asg
 from repro.core import router as routerlib
 from repro.data import SyntheticCorpus
 from repro.launch.train import PRESETS
 from repro.models import model as modellib
+from repro.serving import EngineConfig, MixtureServeEngine, baseline
 
 
-def generate(cfg, params, prompts: jnp.ndarray, n_new: int,
-             greedy: bool = True, key=None) -> np.ndarray:
-    """Batched prefill + decode loop for one expert."""
-    B, S = prompts.shape
-    logits, caches = modellib.prefill(params, cfg, {"tokens": prompts},
-                                      cache_len=S + n_new)
-    outs = []
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    step = jax.jit(lambda p, b, c: modellib.decode_step(p, cfg, b, c))
-    for t in range(n_new):
-        outs.append(np.asarray(tok[:, 0]))
-        lg, caches = step(params, {
-            "tokens": tok,
-            "positions": jnp.full((B, 1), S + t, jnp.int32),
-            "cache_index": jnp.int32(S + t)}, caches)
-        tok = jnp.argmax(lg[:, 0], -1)[:, None].astype(jnp.int32)
-    return np.stack(outs, 1)                      # (B, n_new)
-
-
-def serve_batch(ecfg, rcfg, expert_params: list, router_params,
-                prompts: np.ndarray, *, prefix_len: int, n_new: int) -> dict:
-    """Route a request batch and generate per expert group."""
-    t0 = time.time()
-    scores = routerlib.ensemble_scores(router_params, rcfg,
-                                       jnp.asarray(prompts[:, :prefix_len]))
-    eids = np.asarray(asg.argmax_assignment(scores))
-    t_route = time.time() - t0
-    out = np.zeros((prompts.shape[0], n_new), np.int32)
-    per_expert = {}
-    for e in np.unique(eids):
-        sel = np.nonzero(eids == e)[0]
-        t1 = time.time()
-        out[sel] = generate(ecfg, expert_params[int(e)],
-                            jnp.asarray(prompts[sel]), n_new)
-        per_expert[int(e)] = {"n": len(sel), "s": round(time.time() - t1, 2)}
-    return {"tokens": out, "routes": eids, "route_s": round(t_route, 3),
-            "per_expert": per_expert}
+def build_mixture(preset: str, n_experts: int, ckpt: str | None, seed: int = 0):
+    """(ecfg, rcfg, expert_params, router_params) for a preset, random or
+    restored from a launch/train.py output directory."""
+    p = PRESETS[preset]
+    ecfg, rcfg = p["expert"], p["router"]
+    key = jax.random.PRNGKey(seed)
+    router_params = routerlib.init_ensemble(key, rcfg, n_experts)
+    expert_params = [modellib.init_params(jax.random.fold_in(key, e), ecfg)
+                     for e in range(n_experts)]
+    if ckpt:
+        router_params = restore(os.path.join(ckpt, "routers"), router_params)
+        expert_params = [restore(os.path.join(ckpt, f"expert_{e}"), ep)
+                         for e, ep in enumerate(expert_params)]
+    return ecfg, rcfg, expert_params, router_params
 
 
 def main() -> None:
@@ -75,32 +52,54 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prefix-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--lanes", type=int, default=4,
+                    help="decode lanes per expert (engine batch width)")
+    ap.add_argument("--arrive-every", type=int, default=2,
+                    help="simulated arrival: one request per N ticks")
     ap.add_argument("--ckpt", default=None,
                     help="directory from launch/train.py (else random init)")
+    ap.add_argument("--baseline", action="store_true",
+                    help="run the old one-shot serial per-group path")
     args = ap.parse_args()
 
-    p = PRESETS[args.preset]
-    ecfg, rcfg = p["expert"], p["router"]
-    key = jax.random.PRNGKey(0)
-    router_params = routerlib.init_ensemble(key, rcfg, args.experts)
-    expert_params = [modellib.init_params(jax.random.fold_in(key, e), ecfg)
-                     for e in range(args.experts)]
-    if args.ckpt:
-        router_params = restore(os.path.join(args.ckpt, "routers"),
-                                router_params)
-        expert_params = [restore(os.path.join(args.ckpt, f"expert_{e}"), ep)
-                         for e, ep in enumerate(expert_params)]
-
-    corpus = SyntheticCorpus(p["data"])
+    ecfg, rcfg, expert_params, router_params = build_mixture(
+        args.preset, args.experts, args.ckpt)
+    corpus = SyntheticCorpus(PRESETS[args.preset]["data"])
     prompts, doms = corpus.sequences(np.arange(args.requests) + 777_000)
     prompts = prompts[:, :max(args.prefix_len, 8)]
-    res = serve_batch(ecfg, rcfg, expert_params, router_params, prompts,
-                      prefix_len=args.prefix_len, n_new=args.new_tokens)
-    print("routes:", res["routes"].tolist(), " domains:", doms.tolist())
-    print("routing time:", res["route_s"], "s; per-expert:", res["per_expert"])
-    for i in range(min(4, args.requests)):
-        print(f"req{i} -> expert {res['routes'][i]}: "
-              f"{res['tokens'][i][:12].tolist()}")
+
+    if args.baseline:
+        res = baseline.serve_batch(ecfg, rcfg, expert_params, router_params,
+                                   prompts, prefix_len=args.prefix_len,
+                                   n_new=args.new_tokens)
+        print("routes:", res["routes"].tolist(), " domains:", doms.tolist())
+        print("routing time:", res["route_s"], "s; per-expert:",
+              res["per_expert"])
+        for i in range(min(4, args.requests)):
+            print(f"req{i} -> expert {res['routes'][i]}: "
+                  f"{res['tokens'][i][:12].tolist()}")
+        return
+
+    eng = MixtureServeEngine(ecfg, rcfg, expert_params, router_params,
+                             EngineConfig(lanes_per_expert=args.lanes,
+                                          max_len=prompts.shape[1]
+                                          + args.new_tokens,
+                                          prefix_len=args.prefix_len))
+    for i in range(args.requests):
+        eng.submit(prompts[i], args.new_tokens,
+                   arrival_tick=i // max(args.arrive_every, 1))
+    res = eng.run()
+    print(f"{args.requests} requests, {args.experts} experts, "
+          f"{args.lanes} lanes: {res['useful_tokens']} tokens in "
+          f"{res['wall_s']:.2f}s = {res['tokens_per_s']:.1f} tok/s, "
+          f"occupancy {res['occupancy']:.2f}, "
+          f"mean TTFT {res['mean_ttft_s'] * 1e3:.0f}ms")
+    print("per-expert:", res["per_expert"])
+    print("routes:", [r.expert for r in res["requests"]],
+          " domains:", doms.tolist())
+    for r in res["requests"][:4]:
+        print(f"req{r.uid} -> expert {r.expert} "
+              f"(queued {r.queue_ticks} ticks): {r.tokens[:12]}")
 
 
 if __name__ == "__main__":

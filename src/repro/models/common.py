@@ -130,7 +130,9 @@ def attn_apply(params: Params, x: jnp.ndarray, cfg, *,
     ``cache_index`` is not None, meaning "materialize cache please").
     Decode: ``x`` is (B, 1, D); ``cache`` holds k/v (B, Skv, Hkv, hd) plus
     ``pos`` (B, Skv) int32 slot positions (-1 = empty); ``cache_index`` is
-    the scalar write slot.
+    the write slot — a scalar (all rows at the same index, the one-shot
+    decode loop) or a (B,) vector (per-row slots, the continuous-batching
+    serving engine where every lane is at a different sequence length).
     """
     from repro.kernels.flash_attention import ops as fa
 
@@ -164,10 +166,18 @@ def attn_apply(params: Params, x: jnp.ndarray, cfg, *,
         # rotating buffer of `window` slots (slot = pos % size)
         size = cache["k"].shape[1]
         idx = cache_index % size
-        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, idx, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, idx, axis=1)
-        cpos = jax.lax.dynamic_update_slice_in_dim(
-            cache["pos"], q_pos.astype(cache["pos"].dtype), idx, axis=1)
+        if jnp.ndim(idx) == 0:
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, idx, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, idx, axis=1)
+            cpos = jax.lax.dynamic_update_slice_in_dim(
+                cache["pos"], q_pos.astype(cache["pos"].dtype), idx, axis=1)
+        else:
+            # per-row write slots: row b writes its token at idx[b]
+            bidx = jnp.arange(B)
+            ck = cache["k"].at[bidx, idx].set(k[:, 0])
+            cv = cache["v"].at[bidx, idx].set(v[:, 0])
+            cpos = cache["pos"].at[bidx, idx].set(
+                q_pos[:, 0].astype(cache["pos"].dtype))
         new_cache = {"k": ck, "v": cv, "pos": cpos}
         out = fa.decode_attention(q, ck, cv, q_pos=q_pos, kv_pos=cpos,
                                   window=window, softcap=cfg.attn_softcap)

@@ -274,20 +274,38 @@ def _logits(params, cfg, h):
     return common.softcap(logits, cfg.final_softcap)
 
 
-def prefill(params: Params, cfg, batch: dict, cache_len: int | None = None):
+def prefill(params: Params, cfg, batch: dict, cache_len: int | None = None,
+            last_index=None):
     """Full-sequence forward; returns (last-position logits (B,V), caches).
 
     ``cache_len`` reserves decode budget in attention caches (defaults to
-    the prefill length, i.e. no room for new tokens)."""
+    the prefill length, i.e. no room for new tokens).  ``last_index``
+    ((B,) int32) selects each row's logit position instead of the final
+    one — for right-padded prompts (the serving engine buckets prompt
+    lengths to bound prefill recompiles) the causal mask makes positions
+    < true length independent of the padding, so the true-last-token
+    logits are exact; the caller is responsible for masking the padded
+    cache slots (see ``repro.serving.cache.insert_request``)."""
     params = cast_params(params, cfg)
     x, positions = embed_inputs(params, cfg, batch)
     h, caches, _ = forward(params, cfg, x, positions, want_cache=True,
                            cache_index=0, cache_len=cache_len)
-    return _logits(params, cfg, h[:, -1:])[:, 0], caches
+    if last_index is None:
+        hl = h[:, -1:]
+    else:
+        li = jnp.asarray(last_index, jnp.int32)
+        hl = h[jnp.arange(h.shape[0]), li][:, None]
+    return _logits(params, cfg, hl)[:, 0], caches
 
 
 def decode_step(params: Params, cfg, batch: dict, caches):
-    """One-token decode.  batch: tokens (B,1) (+ positions), cache_index scalar.
+    """One-token decode.  batch: tokens (B,1) (+ positions), cache_index.
+
+    ``cache_index`` is the KV write slot: a scalar when every row sits at
+    the same sequence length (the one-shot demo loop), or a (B,) int32
+    vector for per-slot decode where each batch lane is an independent
+    request at its own length (the continuous-batching serving engine;
+    pair it with per-row ``positions``).
 
     Returns (logits (B,1,V), new_caches)."""
     params = cast_params(params, cfg)

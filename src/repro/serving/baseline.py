@@ -1,0 +1,116 @@
+"""The original one-shot serving path (serial per-expert groups).
+
+This is the pre-engine demo loop kept as (a) the numerical oracle the
+continuous-batching engine must match token-for-token and (b) the
+baseline ``benchmarks/serve_bench.py`` measures against: route the whole
+batch up front, then for each expert group run one prefill + a fixed
+number of decode steps — every request in a group decodes to the group
+maximum even if it asked for fewer tokens, and groups run one after
+another, so lanes sit idle exactly the way continuous batching avoids.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import assignment as asg
+from repro.core import router as routerlib
+from repro.models import model as modellib
+
+
+@functools.lru_cache(maxsize=None)
+def _decode_step(cfg):
+    """One jitted decode step per config — NOT per generate() call, so a
+    warmup run genuinely removes compiles from later timed runs."""
+    return jax.jit(lambda p, b, c: modellib.decode_step(p, cfg, b, c))
+
+
+def generate(cfg, params, prompts: jnp.ndarray, n_new: int,
+             cache_len: int | None = None) -> np.ndarray:
+    """Batched greedy prefill + decode loop for one expert.
+
+    ``cache_len`` pads the KV budget beyond the required ``S + n_new``
+    (extra slots are position-masked, so logits are unchanged); the bench
+    uses it to hold cache shapes identical to the engine's lanes.
+    """
+    B, S = prompts.shape
+    cache_len = cache_len if cache_len else S + n_new
+    assert cache_len >= S + n_new, (cache_len, S, n_new)
+    logits, caches = modellib.prefill(params, cfg, {"tokens": prompts},
+                                      cache_len=cache_len)
+    outs = []
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    step = _decode_step(cfg)
+    for t in range(n_new):
+        outs.append(np.asarray(tok[:, 0]))
+        if t == n_new - 1:
+            break                                 # last logits would be unused
+        lg, caches = step(params, {
+            "tokens": tok,
+            "positions": jnp.full((B, 1), S + t, jnp.int32),
+            "cache_index": jnp.int32(S + t)}, caches)
+        tok = jnp.argmax(lg[:, 0], -1)[:, None].astype(jnp.int32)
+    return np.stack(outs, 1)                      # (B, n_new)
+
+
+def route(rcfg, router_params, prompts: np.ndarray, prefix_len: int) -> np.ndarray:
+    """Prefix-likelihood routing: argmax over the router ensemble (§2.2)."""
+    scores = routerlib.ensemble_scores(router_params, rcfg,
+                                       jnp.asarray(prompts[:, :prefix_len]))
+    return np.asarray(asg.argmax_assignment(scores))
+
+
+def serve_batch(ecfg, rcfg, expert_params: list, router_params,
+                prompts: np.ndarray, *, prefix_len: int, n_new: int,
+                cache_len: int | None = None) -> dict:
+    """Route a request batch and generate per expert group, serially."""
+    t0 = time.time()
+    eids = route(rcfg, router_params, prompts, prefix_len)
+    t_route = time.time() - t0
+    out = np.zeros((prompts.shape[0], n_new), np.int32)
+    per_expert = {}
+    for e in np.unique(eids):
+        sel = np.nonzero(eids == e)[0]
+        t1 = time.time()
+        out[sel] = generate(ecfg, expert_params[int(e)],
+                            jnp.asarray(prompts[sel]), n_new,
+                            cache_len=cache_len)
+        per_expert[int(e)] = {"n": len(sel), "s": round(time.time() - t1, 2)}
+    return {"tokens": out, "routes": eids, "route_s": round(t_route, 3),
+            "per_expert": per_expert}
+
+
+def serve_serial(ecfg, rcfg, expert_params: list, router_params,
+                 prompts: np.ndarray, n_new: np.ndarray, *,
+                 prefix_len: int, cache_len: int | None = None) -> dict:
+    """The old path on a mixed-completion-length workload.
+
+    Per-request token budgets are honoured the only way the one-shot loop
+    can: each expert group decodes to its *maximum* requested length and
+    the surplus is thrown away.  Returns per-request ragged token lists
+    plus the wasted-token count (the quantity continuous batching
+    reclaims).  Prompts must share one length — the old path re-pads
+    whole groups and cannot mix prompt lengths.
+    """
+    n_new = np.asarray(n_new, np.int64)
+    t0 = time.time()
+    eids = route(rcfg, router_params, prompts, prefix_len)
+    tokens: list[np.ndarray | None] = [None] * len(prompts)
+    wasted = 0
+    for e in np.unique(eids):
+        sel = np.nonzero(eids == e)[0]
+        n_max = int(n_new[sel].max())
+        outs = generate(ecfg, expert_params[int(e)], jnp.asarray(prompts[sel]),
+                        n_max, cache_len=cache_len)
+        for row, i in enumerate(sel):
+            tokens[i] = outs[row, :n_new[i]]
+            wasted += n_max - int(n_new[i])
+    wall = time.time() - t0
+    useful = int(n_new.sum())
+    return {"tokens": tokens, "routes": eids, "wall_s": wall,
+            "useful_tokens": useful, "wasted_tokens": wasted,
+            "tokens_per_s": useful / max(wall, 1e-9)}

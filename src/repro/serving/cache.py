@@ -1,0 +1,79 @@
+"""Slotted lane caches for continuous batching.
+
+A *lane* is one row of a fixed-shape decode cache pytree (leading axes
+``(rep, lanes, ...)`` — the same layout :func:`repro.models.model.cache_specs`
+describes, with ``lanes`` as the batch axis).  The serving engine keeps one
+lane pytree per expert and mutates it with three jit-stable operations:
+
+  * :func:`init_lane_caches` — allocate empty lanes (``pos`` leaves = -1,
+    i.e. every KV slot is masked);
+  * :func:`insert_request`  — copy a freshly prefilled single-request cache
+    into one lane, masking any prompt-padding slots back to empty;
+  * :func:`release_slots`   — evict finished lanes by marking their ``pos``
+    rows empty so the slots can be reused by the free list.
+
+All three are shape-stable in ``lanes``/``max_len`` so the per-expert
+``decode_step`` jit-compiles exactly once and keeps serving as requests
+come and go mid-decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as modellib
+
+
+def _is_pos_leaf(path) -> bool:
+    """True for attention-cache ``pos`` leaves (slot-position bookkeeping)."""
+    last = path[-1]
+    return isinstance(last, jax.tree_util.DictKey) and last.key == "pos"
+
+
+def init_lane_caches(cfg, lanes: int, max_len: int):
+    """Empty decode caches for ``lanes`` slots of budget ``max_len`` tokens."""
+    specs = modellib.cache_specs(cfg, lanes, max_len)
+
+    def alloc(path, s):
+        if _is_pos_leaf(path):
+            return jnp.full(s.shape, -1, s.dtype)
+        return jnp.zeros(s.shape, s.dtype)
+
+    return jax.tree_util.tree_map_with_path(alloc, specs)
+
+
+def insert_request(lane_caches, request_cache, slot, true_len):
+    """Copy a prefilled batch-of-1 cache into lane ``slot``.
+
+    ``request_cache`` leaves are ``(rep, 1, ...)`` from a prefill with
+    ``cache_len`` equal to the lane budget, so shapes line up with one lane
+    row.  ``true_len`` is the un-padded prompt length: any KV slot the
+    padded prefill wrote with position >= true_len is masked back to -1 so
+    bucketed (padded) prompts never leak pad keys into decode attention.
+
+    ``slot``/``true_len`` are traced, so admission never recompiles.
+    """
+    def ins(path, lane, req):
+        row = req[:, 0]
+        if _is_pos_leaf(path):
+            row = jnp.where((row >= 0) & (row < true_len), row, -1)
+        return lane.at[:, slot].set(row)
+
+    return jax.tree_util.tree_map_with_path(ins, lane_caches, request_cache)
+
+
+def release_slots(lane_caches, freed_mask):
+    """Evict lanes where ``freed_mask`` (bool (lanes,)) is True.
+
+    Only position bookkeeping needs clearing — k/v payloads of a freed lane
+    are unreachable once every ``pos`` entry is -1 (decode attention masks
+    them), and :func:`insert_request` fully overwrites the lane on reuse.
+    Recurrent-state leaves are left untouched for the same reason: the
+    next admission replaces them wholesale.
+    """
+    def rel(path, lane):
+        if _is_pos_leaf(path):
+            return jnp.where(freed_mask[None, :, None], -1, lane)
+        return lane
+
+    return jax.tree_util.tree_map_with_path(rel, lane_caches)

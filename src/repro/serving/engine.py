@@ -1,0 +1,279 @@
+"""Continuous-batching serving engine for the routed mixture (paper §2.2).
+
+The paper's inference story is that a tiny router ensemble scores the
+request prefix and exactly ONE expert serves the request — so the mixture
+costs 1/E of its parameters at inference.  That only pays off at scale if
+the serving path keeps every expert's decode lanes full.  This engine
+does that with the classic continuous-batching loop:
+
+  submit -> [router scores prefix, argmax expert]      (batched, padded)
+         -> per-expert FIFO until a decode lane frees
+         -> prefill into a slotted lane cache           (bucketed lengths)
+         -> joined into that expert's fixed-lane decode batch mid-flight
+
+Every tick runs ONE jitted ``decode_step`` per expert with active lanes,
+over stable shapes ``(lanes, 1)`` — finished sequences are evicted and
+queued requests admitted between ticks without ever recompiling.  Decode
+is greedy and matches the one-shot :func:`repro.serving.baseline.generate`
+token-for-token: the first token comes from the prefill logits, each
+decode feeds the previous token at its lane's own position (per-slot
+``positions`` / ``cache_index`` vectors, see ``models/model.decode_step``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base as cfglib
+from repro.core import assignment as asg
+from repro.core import router as routerlib
+from repro.models import model as modellib
+from repro.serving import cache as cachelib
+from repro.serving.scheduler import Request, RequestQueue, SlotAllocator
+
+PAD_SAFE_KINDS = (cfglib.ATTN, cfglib.ATTN_SHARED)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Shape/scheduling knobs (all static: they define the compiled shapes)."""
+    lanes_per_expert: int = 4     # fixed decode-batch width per expert
+    max_len: int = 128            # per-lane KV budget (prompt + new tokens)
+    prefix_len: int = 32          # router scoring prefix M
+    route_batch: int = 8          # router calls are padded to this many rows
+    min_prefill_bucket: int = 16  # smallest power-of-2 prompt bucket
+
+
+@dataclasses.dataclass
+class _Expert:
+    """Mutable per-expert serving state (host side + one device cache tree)."""
+    caches: object
+    alloc: SlotAllocator
+    pending: deque
+    tok: np.ndarray               # (lanes,) last emitted token per lane
+    pos: np.ndarray               # (lanes,) next decode position per lane
+    active: np.ndarray            # (lanes,) bool
+    req: list                     # slot -> Request | None
+    n_served: int = 0
+    decode_calls: int = 0
+    prefill_calls: int = 0
+    occupied_lane_steps: int = 0  # sum of active lanes over decode calls
+
+
+class MixtureServeEngine:
+    """Queue + scheduler + per-expert continuous decode batches."""
+
+    def __init__(self, ecfg, rcfg, expert_params: list, router_params,
+                 eng: EngineConfig = EngineConfig()):
+        if not ecfg.causal:
+            raise ValueError("serving needs a causal (decoder) expert config")
+        self.ecfg, self.rcfg, self.eng = ecfg, rcfg, eng
+        self.expert_params = list(expert_params)
+        self.router_params = router_params
+        self.n_experts = len(self.expert_params)
+        # prompt-length bucketing pads on the right; that is exact for full
+        # attention (causal mask hides the future) but would pollute
+        # rotating-window KV buffers and recurrent (SSM/xLSTM) states, so
+        # those archs fall back to exact-length prefill compiles.
+        self.pad_safe = all(k in PAD_SAFE_KINDS for k in ecfg.layer_pattern)
+
+        L, M = eng.lanes_per_expert, eng.max_len
+        self._experts = [
+            _Expert(caches=cachelib.init_lane_caches(ecfg, L, M),
+                    alloc=SlotAllocator(L), pending=deque(),
+                    tok=np.zeros(L, np.int32), pos=np.zeros(L, np.int32),
+                    active=np.zeros(L, bool), req=[None] * L)
+            for _ in range(self.n_experts)]
+        self.queue = RequestQueue()
+        self.tick = 0
+        self._uid = 0
+        self._t0: float | None = None
+
+        self._decode_fn = jax.jit(
+            lambda p, toks, pos, ci, c: modellib.decode_step(
+                p, ecfg, {"tokens": toks, "positions": pos,
+                          "cache_index": ci}, c))
+        self._prefill_fn = jax.jit(
+            lambda p, toks, last: modellib.prefill(
+                p, ecfg, {"tokens": toks}, cache_len=M, last_index=last))
+        self._score_fn = jax.jit(
+            lambda rp, toks: routerlib.ensemble_scores(rp, rcfg, toks))
+        self._insert_fn = jax.jit(cachelib.insert_request)
+        self._release_fn = jax.jit(cachelib.release_slots)
+
+    # -- request intake ----------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int,
+               arrival_tick: int | None = None) -> Request:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if len(prompt) < self.eng.prefix_len:
+            raise ValueError(f"prompt shorter than routing prefix "
+                             f"({len(prompt)} < {self.eng.prefix_len})")
+        if len(prompt) + max_new_tokens > self.eng.max_len:
+            raise ValueError(f"prompt {len(prompt)} + {max_new_tokens} new "
+                             f"tokens exceeds lane budget {self.eng.max_len}")
+        req = Request(uid=self._uid, prompt=prompt,
+                      max_new_tokens=max_new_tokens,
+                      arrival_tick=self.tick if arrival_tick is None
+                      else arrival_tick)
+        self._uid += 1
+        self.queue.push(req)
+        return req
+
+    # -- routing -----------------------------------------------------------
+    def _route(self, reqs: list[Request]) -> None:
+        """Score prefixes in padded fixed-width batches, argmax an expert."""
+        pl, rb = self.eng.prefix_len, self.eng.route_batch
+        prefixes = np.stack([r.prompt[:pl] for r in reqs])
+        for i in range(0, len(reqs), rb):
+            chunk = prefixes[i:i + rb]
+            n = len(chunk)
+            if n < rb:        # pad with copies of row 0; scores are per-row
+                chunk = np.concatenate([chunk, np.repeat(chunk[:1],
+                                                         rb - n, 0)])
+            scores = np.asarray(self._score_fn(self.router_params,
+                                               jnp.asarray(chunk)))
+            eids = np.asarray(asg.argmax_assignment(scores[:n]))
+            for r, e in zip(reqs[i:i + n], eids):
+                r.expert = int(e)
+                r.route_tick = self.tick
+                self._experts[r.expert].pending.append(r)
+
+    # -- lane lifecycle ----------------------------------------------------
+    def _bucket(self, n: int) -> int:
+        if not self.pad_safe:
+            return n
+        b = self.eng.min_prefill_bucket
+        while b < n:
+            b *= 2
+        return min(b, self.eng.max_len)
+
+    def _admit(self, e: int, st: _Expert, completed: list[Request]) -> None:
+        params = self.expert_params[e]
+        while st.pending and st.alloc.n_free:
+            req = st.pending.popleft()
+            slot = st.alloc.alloc()
+            n = len(req.prompt)
+            padded = np.zeros(self._bucket(n), np.int32)
+            padded[:n] = req.prompt
+            logits, rcache = self._prefill_fn(
+                params, jnp.asarray(padded[None]),
+                jnp.full((1,), n - 1, jnp.int32))
+            st.prefill_calls += 1
+            st.caches = self._insert_fn(st.caches, rcache,
+                                        np.int32(slot), np.int32(n))
+            first = int(np.argmax(np.asarray(logits[0])))
+            req.tokens.append(first)
+            req.admit_tick = self.tick
+            req.t_first = time.perf_counter() - self._t0
+            st.tok[slot], st.pos[slot] = first, n
+            st.active[slot], st.req[slot] = True, req
+            if req.max_new_tokens == 1:
+                self._finish(st, slot, completed)
+
+    def _finish(self, st: _Expert, slot: int, completed: list[Request]) -> None:
+        req = st.req[slot]
+        req.finish_tick = self.tick
+        req.t_done = time.perf_counter() - self._t0
+        st.active[slot] = False
+        st.req[slot] = None
+        st.tok[slot] = st.pos[slot] = 0
+        st.alloc.free(slot)
+        st.n_served += 1
+        completed.append(req)
+
+    def _decode(self, e: int, st: _Expert, completed: list[Request]) -> None:
+        if not st.active.any():
+            return
+        # inactive lanes decode at position -1: every KV slot is masked for
+        # them and their writes land as empty (-1) markers, so a free lane
+        # can ride along in the fixed-shape batch at zero correctness cost
+        pos = np.where(st.active, st.pos, -1).astype(np.int32)
+        logits, st.caches = self._decode_fn(
+            self.expert_params[e], jnp.asarray(st.tok[:, None]),
+            jnp.asarray(pos[:, None]), jnp.asarray(pos), st.caches)
+        st.decode_calls += 1
+        st.occupied_lane_steps += int(st.active.sum())
+        nxt = np.asarray(jnp.argmax(logits[:, 0], -1)).astype(np.int32)
+        freed = np.zeros(len(st.active), bool)
+        for slot in np.nonzero(st.active)[0]:
+            req = st.req[slot]
+            req.tokens.append(int(nxt[slot]))
+            st.tok[slot] = nxt[slot]
+            st.pos[slot] += 1
+            if len(req.tokens) >= req.max_new_tokens:
+                freed[slot] = True
+                self._finish(st, int(slot), completed)
+        if freed.any():
+            st.caches = self._release_fn(st.caches, jnp.asarray(freed))
+
+    # -- main loop ---------------------------------------------------------
+    def step(self) -> list[Request]:
+        """One scheduler tick: route arrivals, admit, decode every expert."""
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        arrived = self.queue.pop_arrived(self.tick)
+        if arrived:
+            self._route(arrived)
+        completed: list[Request] = []
+        for e, st in enumerate(self._experts):
+            self._admit(e, st, completed)
+            self._decode(e, st, completed)
+        self.tick += 1
+        return completed
+
+    @property
+    def busy(self) -> bool:
+        return bool(len(self.queue)) or any(
+            st.pending or st.active.any() for st in self._experts)
+
+    def run(self) -> dict:
+        """Drive ticks until drained; returns requests + aggregate stats.
+
+        Stats cover this run only (a warmup run on the same instance — which
+        shares the jit caches — does not pollute a later timed run).  When
+        some step() calls already ran, their time origin is kept so request
+        timestamps stay on one clock; a fresh run() restarts the origin."""
+        for st in self._experts:
+            st.n_served = st.decode_calls = st.prefill_calls = 0
+            st.occupied_lane_steps = 0
+        tick0 = self.tick
+        t_start = time.perf_counter()
+        if self._t0 is None:
+            self._t0 = t_start
+        completed: list[Request] = []
+        n_steps = 0
+        while self.busy:
+            # fast-forward idle gaps to the next simulated arrival
+            nxt = self.queue.next_arrival()
+            if nxt is not None and nxt > self.tick and not any(
+                    st.pending or st.active.any() for st in self._experts):
+                self.tick = nxt
+            completed += self.step()
+            n_steps += 1
+        jax.block_until_ready([st.caches for st in self._experts])
+        wall = time.perf_counter() - t_start
+        self._t0 = None
+        useful = sum(len(r.tokens) for r in completed)
+        decode_calls = sum(st.decode_calls for st in self._experts)
+        lane_steps = sum(st.occupied_lane_steps for st in self._experts)
+        return {
+            "requests": sorted(completed, key=lambda r: r.uid),
+            "ticks": self.tick - tick0,    # simulated span (incl. skipped gaps)
+            "steps": n_steps,              # scheduler iterations actually run
+            "wall_s": wall,
+            "useful_tokens": useful,
+            "tokens_per_s": useful / max(wall, 1e-9),
+            "mean_ttft_s": float(np.mean([r.t_first for r in completed]))
+            if completed else 0.0,
+            "occupancy": lane_steps / max(
+                decode_calls * self.eng.lanes_per_expert, 1),
+            "per_expert": {
+                e: {"served": st.n_served, "decode_calls": st.decode_calls,
+                    "prefills": st.prefill_calls}
+                for e, st in enumerate(self._experts)},
+        }

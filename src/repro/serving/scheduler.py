@@ -1,0 +1,94 @@
+"""Request bookkeeping for the continuous-batching engine.
+
+Host-side, pure-python: a :class:`Request` record per served sequence, a
+FIFO :class:`RequestQueue` with (simulated or wall-clock) arrival ticks,
+and a :class:`SlotAllocator` free list handing out decode-lane slots.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request and its lifecycle stats.
+
+    The engine fills in everything below ``arrival_tick``: the routed
+    expert, the greedily decoded tokens (the first one comes from the
+    prefill logits, like the one-shot ``generate`` path), and tick/wall
+    timestamps for latency accounting.
+    """
+    uid: int
+    prompt: np.ndarray                  # (L,) int32
+    max_new_tokens: int
+    arrival_tick: int = 0
+
+    expert: int = -1
+    tokens: list = dataclasses.field(default_factory=list)
+    route_tick: int = -1                # tick the router scored the prefix
+    admit_tick: int = -1                # tick a decode lane was acquired
+    finish_tick: int = -1
+    t_first: float = -1.0               # seconds from run start to first token
+    t_done: float = -1.0
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+
+    @property
+    def done(self) -> bool:
+        return self.finish_tick >= 0
+
+    @property
+    def queue_ticks(self) -> int:
+        """Ticks spent waiting between arrival and lane admission."""
+        return self.admit_tick - self.arrival_tick
+
+
+class RequestQueue:
+    """Arrival-ordered queue; requests become visible at their tick.
+
+    Kept sorted by ``arrival_tick`` on push (stable for equal ticks), so
+    submission order does not have to match simulated arrival order — a
+    late-submitted early arrival cannot head-of-line-block."""
+
+    def __init__(self):
+        self._q: list[Request] = []
+
+    def push(self, req: Request) -> None:
+        bisect.insort(self._q, req, key=lambda r: r.arrival_tick)
+
+    def pop_arrived(self, tick: int) -> list[Request]:
+        n = bisect.bisect_right(self._q, tick, key=lambda r: r.arrival_tick)
+        out, self._q = self._q[:n], self._q[n:]
+        return out
+
+    def next_arrival(self) -> int | None:
+        return self._q[0].arrival_tick if self._q else None
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+
+class SlotAllocator:
+    """LIFO free list over ``n`` decode-lane slots."""
+
+    def __init__(self, n: int):
+        self.n = n
+        self._free = list(range(n - 1, -1, -1))   # pop() hands out slot 0 first
+
+    def alloc(self) -> int | None:
+        return self._free.pop() if self._free else None
+
+    def free(self, slot: int) -> None:
+        if not 0 <= slot < self.n or slot in self._free:
+            raise ValueError(f"bad free of slot {slot}")
+        self._free.append(slot)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)

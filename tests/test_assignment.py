@@ -1,7 +1,7 @@
 """Property tests for balanced assignment (paper §2.2, Fig. 1)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.assignment import (argmax_assignment, balanced_assignment,
                                    balanced_assignment_np, default_capacity,
