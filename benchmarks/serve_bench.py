@@ -4,9 +4,12 @@ Workload: a mixed-length batch (equal prompt lengths — the old path cannot
 mix them — but per-request completion budgets spread over [min,max]) routed
 across >= 2 experts.  The baseline serves each expert group serially and
 decodes every request to the group maximum; the engine keeps a fixed
-number of decode lanes per expert full, admitting queued requests as
-lanes free up.  Both paths are greedy and must produce byte-identical
-tokens — the bench asserts that, then compares useful-token throughput.
+number of decode lanes per expert full, admitting queued requests in
+batched prefills as lanes free up, with full-attention KV in the paged
+block pool.  Both paths are greedy and must produce byte-identical
+tokens — the bench asserts that, then compares useful-token throughput
+and reports the paged-cache memory footprint (HBM bytes per lane vs the
+dense ``lanes * max_len`` slab) and the admission prefill-call count.
 
 Both paths are warmed first (same shapes as the timed run) so jit compile
 time is excluded.  The model is sized so per-step compute, not dispatch
@@ -14,6 +17,11 @@ overhead, dominates — wasted lane-tokens then cost real wall time, which
 is exactly what continuous batching reclaims.
 
   PYTHONPATH=src python benchmarks/serve_bench.py
+  PYTHONPATH=src python benchmarks/serve_bench.py --smoke   # CI gate
+
+``--smoke`` shrinks the models/workload so the token-identity gate (plus
+pool-pressure coverage) runs in CI on every push; the speedup exit check
+is skipped there because tiny models are dispatch-bound.
 """
 from __future__ import annotations
 
@@ -30,6 +38,7 @@ from repro.core import router as routerlib
 from repro.data import DataConfig, SyntheticCorpus
 from repro.models import model as modellib
 from repro.serving import EngineConfig, MixtureServeEngine, baseline
+from repro.serving import cache as cachelib
 
 EXPERT = ModelConfig(name="bench-expert", n_layers=4, d_model=256, n_heads=8,
                      n_kv_heads=8, d_ff=1024, vocab_size=512,
@@ -39,14 +48,25 @@ ROUTER = ModelConfig(name="bench-router", n_layers=1, d_model=64, n_heads=4,
                      n_kv_heads=4, d_ff=256, vocab_size=512,
                      ffn_type="gelu", loss_chunk=128,
                      compute_dtype="float32", param_dtype="float32")
+SMOKE_EXPERT = EXPERT.replace(name="smoke-expert", n_layers=2, d_model=64,
+                              n_heads=4, n_kv_heads=4, d_ff=128,
+                              vocab_size=128, loss_chunk=32)
+SMOKE_ROUTER = ROUTER.replace(name="smoke-router", d_model=32, n_heads=2,
+                              n_kv_heads=2, d_ff=64, vocab_size=128,
+                              loss_chunk=32)
 
 
-def build(n_experts: int, seed: int):
+def build(ecfg, rcfg, n_experts: int, seed: int):
     key = jax.random.PRNGKey(seed)
-    router_params = routerlib.init_ensemble(key, ROUTER, n_experts)
-    expert_params = [modellib.init_params(jax.random.fold_in(key, e), EXPERT)
+    router_params = routerlib.init_ensemble(key, rcfg, n_experts)
+    expert_params = [modellib.init_params(jax.random.fold_in(key, e), ecfg)
                      for e in range(n_experts)]
     return expert_params, router_params
+
+
+def dense_slab_bytes(ecfg, lanes: int, max_len: int) -> int:
+    """Bytes the replaced dense (lanes, max_len) per-lane layout would hold."""
+    return cachelib.kv_cache_bytes(modellib.cache_specs(ecfg, lanes, max_len))
 
 
 def main() -> int:
@@ -57,43 +77,65 @@ def main() -> int:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--min-new", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per paged KV block")
+    ap.add_argument("--blocks-per-expert", type=int, default=0,
+                    help="KV pool blocks per expert "
+                         "(0 = lanes*max_len/block_size, i.e. no pressure)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default=None, help="write results to this file")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI workload: identity gate incl. pool "
+                         "pressure, no speedup exit check")
     ap.add_argument("--no-check", action="store_true",
                     help="skip the engine-beats-baseline exit check")
     args = ap.parse_args()
+    if args.smoke:
+        ecfg, rcfg = SMOKE_EXPERT, SMOKE_ROUTER
+        args.requests = min(args.requests, 10)
+        args.lanes = min(args.lanes, 2)
+        args.max_new = min(args.max_new, 16)
+        if args.blocks_per_expert == 0:   # force block reuse under pressure
+            total = args.prompt_len + args.max_new
+            args.blocks_per_expert = -(-total // args.block_size) + 1
+    else:
+        ecfg, rcfg = EXPERT, ROUTER
     assert args.requests >= 8 and args.experts >= 2, "workload too small"
 
-    expert_params, router_params = build(args.experts, args.seed)
-    corpus = SyntheticCorpus(DataConfig(vocab_size=EXPERT.vocab_size,
+    expert_params, router_params = build(ecfg, rcfg, args.experts, args.seed)
+    corpus = SyntheticCorpus(DataConfig(vocab_size=ecfg.vocab_size,
                                         seq_len=args.prompt_len,
                                         n_domains=args.experts))
     prompts, _ = corpus.sequences(np.arange(args.requests) + 555_000)
     rng = np.random.default_rng(args.seed)
     n_new = rng.integers(args.min_new, args.max_new + 1, size=args.requests)
-    max_len = args.prompt_len + args.max_new
+    max_len = -(-(args.prompt_len + args.max_new) // args.block_size) \
+        * args.block_size                 # round lane budget up to blocks
     prefix_len = args.prompt_len
 
     # ---- baseline: old serial per-group path -----------------------------
     # warm every shape the timed run will hit (per-group prefill + decode)
-    eids = baseline.route(ROUTER, router_params, prompts, prefix_len)
+    eids = baseline.route(rcfg, router_params, prompts, prefix_len)
     for e in np.unique(eids):
         n_group = int((eids == e).sum())
-        baseline.generate(EXPERT, expert_params[int(e)],
+        baseline.generate(ecfg, expert_params[int(e)],
                           jnp.asarray(prompts[:n_group]), 2,
                           cache_len=max_len)
-    serial = baseline.serve_serial(EXPERT, ROUTER, expert_params,
+    serial = baseline.serve_serial(ecfg, rcfg, expert_params,
                                    router_params, prompts, n_new,
                                    prefix_len=prefix_len, cache_len=max_len)
 
-    # ---- engine: continuous batching -------------------------------------
+    # ---- engine: continuous batching over the paged pool ------------------
     eng = MixtureServeEngine(
-        EXPERT, ROUTER, expert_params, router_params,
+        ecfg, rcfg, expert_params, router_params,
         EngineConfig(lanes_per_expert=args.lanes, max_len=max_len,
-                     prefix_len=prefix_len, min_prefill_bucket=args.prompt_len))
-    for i in range(3):                       # warmup: compile all shapes
-        eng.submit(prompts[i], 2, arrival_tick=0)
-    eng.run()
+                     prefix_len=prefix_len,
+                     min_prefill_bucket=args.prompt_len,
+                     block_size=args.block_size,
+                     pool_blocks=args.blocks_per_expert))
+    # warmup: compile every admission batch width the timed run can hit
+    # (routing-independent — see MixtureServeEngine.warmup)
+    eng.warmup(args.prompt_len)
     timed = [eng.submit(prompts[i], int(n_new[i]), arrival_tick=eng.tick)
              for i in range(args.requests)]  # timed: all arrive at once
     uid0 = timed[0].uid
@@ -107,9 +149,11 @@ def main() -> int:
                 not np.array_equal(np.asarray(r.tokens), serial["tokens"][i]):
             mismatches.append(i)
     speedup = res["tokens_per_s"] / serial["tokens_per_s"]
+    dense = dense_slab_bytes(ecfg, args.lanes, max_len)
     report = {
         "workload": {"requests": args.requests, "experts": args.experts,
                      "lanes": args.lanes, "prompt_len": args.prompt_len,
+                     "max_len": max_len,
                      "new_tokens": [int(x) for x in n_new]},
         "serial": {"wall_s": round(serial["wall_s"], 3),
                    "tokens_per_s": round(serial["tokens_per_s"], 1),
@@ -119,7 +163,14 @@ def main() -> int:
                    "tokens_per_s": round(res["tokens_per_s"], 1),
                    "useful_tokens": res["useful_tokens"],
                    "occupancy": round(res["occupancy"], 3),
-                   "ticks": res["ticks"]},
+                   "ticks": res["ticks"],
+                   "prefill_calls": res["prefill_calls"]},
+        "paged_kv": {"block_size": args.block_size,
+                     "pool_blocks_per_expert": eng.pool_blocks,
+                     "peak_blocks": {e: s["peak_blocks"] for e, s in
+                                     res["per_expert"].items()},
+                     "hbm_bytes_per_lane": res["kv_bytes_per_lane"],
+                     "dense_slab_bytes_per_lane": dense // args.lanes},
         "speedup": round(speedup, 2),
         "tokens_identical": not mismatches,
     }
@@ -132,7 +183,43 @@ def main() -> int:
         return 1
     print(f"engine {res['tokens_per_s']:.1f} tok/s vs serial "
           f"{serial['tokens_per_s']:.1f} tok/s -> {speedup:.2f}x "
-          f"({serial['wasted_tokens']} wasted baseline tokens reclaimed)")
+          f"({serial['wasted_tokens']} wasted baseline tokens reclaimed); "
+          f"KV {res['kv_bytes_per_lane']} B/lane vs dense "
+          f"{dense // args.lanes} B/lane, "
+          f"{res['prefill_calls']} prefill calls for {args.requests} requests")
+    if args.smoke:
+        # the pressured pool above serializes admission, so the batching
+        # bound needs a second, full-pool engine: k_e simultaneous
+        # arrivals per expert must cost <= ceil(k_e / lanes) prefills
+        eng2 = MixtureServeEngine(
+            ecfg, rcfg, expert_params, router_params,
+            EngineConfig(lanes_per_expert=args.lanes, max_len=max_len,
+                         prefix_len=prefix_len,
+                         min_prefill_bucket=args.prompt_len,
+                         block_size=args.block_size))
+        eng2.warmup(args.prompt_len)
+        # uniform budget: lanes then free together, so admission drains
+        # `lanes` requests per prefill and the ceil bound is tight
+        uniform = args.min_new
+        reqs = [eng2.submit(prompts[i], uniform, arrival_tick=eng2.tick)
+                for i in range(args.requests)]
+        res2 = eng2.run()
+        for e, st in enumerate(eng2._experts):
+            k_e = sum(1 for r in reqs if r.expert == e)
+            if st.prefill_calls > -(-k_e // args.lanes):
+                print(f"FAIL: expert {e} took {st.prefill_calls} prefill "
+                      f"calls for {k_e} simultaneous arrivals "
+                      f"(bound ceil(k/lanes) = {-(-k_e // args.lanes)})")
+                return 1
+        if any(not np.array_equal(np.asarray(r.tokens),
+                                  serial["tokens"][i][:uniform])
+               for i, r in enumerate(reqs)):
+            print("FAIL: full-pool token mismatch")
+            return 1
+        print("smoke OK: token identity under pool pressure, batched "
+              f"admission within budget ({res2['prefill_calls']} prefills "
+              f"for {args.requests} requests)")
+        return 0
     if not args.no_check and speedup <= 1.0:
         print("FAIL: engine did not beat the serial baseline")
         return 1

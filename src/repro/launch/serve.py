@@ -54,6 +54,11 @@ def main() -> None:
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--lanes", type=int, default=4,
                     help="decode lanes per expert (engine batch width)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per paged KV block")
+    ap.add_argument("--blocks-per-expert", type=int, default=0,
+                    help="KV pool blocks per expert "
+                         "(0 = lanes*max_len/block_size)")
     ap.add_argument("--arrive-every", type=int, default=2,
                     help="simulated arrival: one request per N ticks")
     ap.add_argument("--ckpt", default=None,
@@ -80,11 +85,14 @@ def main() -> None:
                   f"{res['tokens'][i][:12].tolist()}")
         return
 
+    total = prompts.shape[1] + args.new_tokens
+    max_len = -(-total // args.block_size) * args.block_size
     eng = MixtureServeEngine(ecfg, rcfg, expert_params, router_params,
                              EngineConfig(lanes_per_expert=args.lanes,
-                                          max_len=prompts.shape[1]
-                                          + args.new_tokens,
-                                          prefix_len=args.prefix_len))
+                                          max_len=max_len,
+                                          prefix_len=args.prefix_len,
+                                          block_size=args.block_size,
+                                          pool_blocks=args.blocks_per_expert))
     for i in range(args.requests):
         eng.submit(prompts[i], args.new_tokens,
                    arrival_tick=i // max(args.arrive_every, 1))
@@ -94,6 +102,9 @@ def main() -> None:
           f"{res['wall_s']:.2f}s = {res['tokens_per_s']:.1f} tok/s, "
           f"occupancy {res['occupancy']:.2f}, "
           f"mean TTFT {res['mean_ttft_s'] * 1e3:.0f}ms")
+    print(f"paged KV: {eng.pool_blocks} blocks/expert x {args.block_size} "
+          f"tokens, {res['kv_bytes_per_lane']} B/lane, "
+          f"{res['prefill_calls']} prefill calls")
     print("per-expert:", res["per_expert"])
     print("routes:", [r.expert for r in res["requests"]],
           " domains:", doms.tolist())

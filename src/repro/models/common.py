@@ -123,7 +123,8 @@ def attn_apply(params: Params, x: jnp.ndarray, cfg, *,
                kind: str, positions: jnp.ndarray,
                cache: Params | None = None,
                cache_index: jnp.ndarray | None = None,
-               cache_len: int | None = None) -> tuple[jnp.ndarray, Params | None]:
+               cache_len: int | None = None,
+               block_tables: jnp.ndarray | None = None) -> tuple[jnp.ndarray, Params | None]:
     """Pre-norm attention block.  Returns (residual_output, new_cache).
 
     Train/prefill: ``cache`` is None (prefill returns a fresh cache when
@@ -133,6 +134,16 @@ def attn_apply(params: Params, x: jnp.ndarray, cfg, *,
     the write slot — a scalar (all rows at the same index, the one-shot
     decode loop) or a (B,) vector (per-row slots, the continuous-batching
     serving engine where every lane is at a different sequence length).
+
+    Paged decode (``block_tables`` given, full-attention kinds only):
+    ``cache`` is a shared block *pool* — k/v ``(P+1, bs, Hkv, hd)`` and
+    ``pos`` ``(P+1, bs)`` where row P is a scratch block absorbing writes
+    of inactive lanes.  ``block_tables`` (B, max_len//bs) int32 maps each
+    lane's position range [i*bs, (i+1)*bs) to a pool block (-1 = not
+    reserved).  The write scatters the new token at (table[p//bs], p%bs)
+    and the read gathers the lane's blocks back into a contiguous
+    (B, max_len, ...) view whose slot order equals the dense slab layout,
+    so decode attention is bit-identical to the unpaged path.
     """
     from repro.kernels.flash_attention import ops as fa
 
@@ -161,7 +172,31 @@ def attn_apply(params: Params, x: jnp.ndarray, cfg, *,
     q_pos = positions[..., 0] if positions.ndim == 3 else positions
 
     new_cache: Params | None = None
-    if cache is not None:
+    if cache is not None and block_tables is not None and kind == "attn":
+        # paged decode: cache leaves are the shared block pool
+        n_blocks, bs = cache["k"].shape[0], cache["k"].shape[1]
+        scratch = n_blocks - 1
+        nb = block_tables.shape[1]
+        p = jnp.broadcast_to(cache_index, (B,)).astype(jnp.int32)
+        bi = jnp.clip(jnp.where(p >= 0, p // bs, 0), 0, nb - 1)
+        blk = jnp.take_along_axis(block_tables, bi[:, None], axis=1)[:, 0]
+        wblk = jnp.where((p >= 0) & (blk >= 0), blk, scratch)
+        off = jnp.where(p >= 0, p % bs, 0)
+        ck = cache["k"].at[wblk, off].set(k[:, 0])
+        cv = cache["v"].at[wblk, off].set(v[:, 0])
+        cpos = cache["pos"].at[wblk, off].set(
+            q_pos[:, 0].astype(cache["pos"].dtype))
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+        # gather each lane's blocks into a contiguous view: position p of a
+        # lane lands at slot (p//bs)*bs + p%bs == p, the dense slab order
+        safe = jnp.where(block_tables >= 0, block_tables, scratch)
+        kl = ck[safe].reshape(B, nb * bs, hkv, hd)
+        vl = cv[safe].reshape(B, nb * bs, hkv, hd)
+        pl = jnp.where(block_tables[..., None] >= 0, cpos[safe],
+                       -1).reshape(B, nb * bs)
+        out = fa.decode_attention(q, kl, vl, q_pos=q_pos, kv_pos=pl,
+                                  window=window, softcap=cfg.attn_softcap)
+    elif cache is not None:
         # single-token decode against the cache; local layers use a
         # rotating buffer of `window` slots (slot = pos % size)
         size = cache["k"].shape[1]
@@ -227,6 +262,25 @@ def attn_cache_spec(cfg, batch: int, seq: int, kind: str) -> dict[str, jax.Shape
         "k": jax.ShapeDtypeStruct((batch, size, cfg.n_kv_heads, hd), cdt),
         "v": jax.ShapeDtypeStruct((batch, size, cfg.n_kv_heads, hd), cdt),
         "pos": jax.ShapeDtypeStruct((batch, size), jnp.int32),
+    }
+
+
+def attn_pool_spec(cfg, n_blocks: int, block_size: int) -> dict[str, jax.ShapeDtypeStruct]:
+    """Shape of the paged KV block pool for one full-attention layer.
+
+    ``n_blocks`` is the number of allocatable blocks; one extra scratch
+    block (index ``n_blocks``) is appended to absorb writes of inactive
+    lanes and of unreserved block-table rows, so every scatter index can
+    be clamped there instead of needing a drop mode.
+    """
+    hd = cfg.resolved_head_dim
+    cdt = dt(cfg.compute_dtype)
+    return {
+        "k": jax.ShapeDtypeStruct((n_blocks + 1, block_size,
+                                   cfg.n_kv_heads, hd), cdt),
+        "v": jax.ShapeDtypeStruct((n_blocks + 1, block_size,
+                                   cfg.n_kv_heads, hd), cdt),
+        "pos": jax.ShapeDtypeStruct((n_blocks + 1, block_size), jnp.int32),
     }
 
 

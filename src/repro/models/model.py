@@ -108,7 +108,7 @@ def cast_params(params: Params, cfg) -> Params:
 # ---------------------------------------------------------------------------
 def _apply_block(kind: str, bparams: Params, x, cfg, *, positions,
                  cache=None, cache_index=None, want_cache=False,
-                 shared=None, cache_len=None):
+                 shared=None, cache_len=None, block_tables=None):
     """Returns (x, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     if kind in ATTN_KINDS:
@@ -120,7 +120,8 @@ def _apply_block(kind: str, bparams: Params, x, cfg, *, positions,
             p["attn"], x, cfg,
             kind="attn_local" if kind == cfglib.ATTN_LOCAL else "attn",
             positions=positions, cache=cache,
-            cache_index=ci, cache_len=cache_len)
+            cache_index=ci, cache_len=cache_len,
+            block_tables=block_tables)
         if cfg.d_ff > 0:
             if cfg.moe is not None:
                 x, aux = moelib.moe_apply(p["moe"], x, cfg)
@@ -146,7 +147,8 @@ def _apply_block(kind: str, bparams: Params, x, cfg, *, positions,
 # Trunk
 # ---------------------------------------------------------------------------
 def forward(params: Params, cfg, x, positions, *, caches=None,
-            cache_index=None, want_cache=False, cache_len=None):
+            cache_index=None, want_cache=False, cache_len=None,
+            block_tables=None):
     """x: (B,S,D) embedded inputs.  Returns (hidden, new_caches, aux)."""
     mode = "decode" if caches is not None else (
         "prefill" if want_cache else "train")
@@ -171,7 +173,7 @@ def forward(params: Params, cfg, x, positions, *, caches=None,
                     kind, uparams[pos], xc, cfg, positions=positions,
                     cache=bc, cache_index=cache_index,
                     want_cache=(mode == "prefill"), shared=shared,
-                    cache_len=cache_len)
+                    cache_len=cache_len, block_tables=block_tables)
                 out_caches.append(c)
                 auxc = auxc + a
             ys = tuple(out_caches) if mode in ("decode", "prefill") else None
@@ -285,7 +287,7 @@ def prefill(params: Params, cfg, batch: dict, cache_len: int | None = None,
     lengths to bound prefill recompiles) the causal mask makes positions
     < true length independent of the padding, so the true-last-token
     logits are exact; the caller is responsible for masking the padded
-    cache slots (see ``repro.serving.cache.insert_request``)."""
+    cache slots (see ``repro.serving.cache.insert_requests``)."""
     params = cast_params(params, cfg)
     x, positions = embed_inputs(params, cfg, batch)
     h, caches, _ = forward(params, cfg, x, positions, want_cache=True,
@@ -307,11 +309,18 @@ def decode_step(params: Params, cfg, batch: dict, caches):
     request at its own length (the continuous-batching serving engine;
     pair it with per-row ``positions``).
 
+    ``batch["block_tables"]`` ((B, max_len//block_size) int32, optional)
+    switches full-attention layers to the paged KV pool layout: each
+    lane's KV lives in pool blocks resolved through its block-table row
+    (see :func:`repro.models.common.attn_apply`).  Sliding-window and
+    recurrent layers keep their per-lane caches either way.
+
     Returns (logits (B,1,V), new_caches)."""
     params = cast_params(params, cfg)
     x, positions = embed_inputs(params, cfg, batch)
     h, new_caches, _ = forward(params, cfg, x, positions, caches=caches,
-                               cache_index=batch["cache_index"])
+                               cache_index=batch["cache_index"],
+                               block_tables=batch.get("block_tables"))
     return _logits(params, cfg, h), new_caches
 
 
@@ -341,4 +350,30 @@ def cache_specs(cfg, batch: int, seq: int):
     for unit, rep in cfg.resolved_stages:
         out.append(tuple(stack(_block_cache_spec(k, cfg, batch, seq), rep)
                          for k in unit))
+    return tuple(out)
+
+
+def paged_cache_specs(cfg, lanes: int, n_blocks: int, block_size: int,
+                      max_len: int):
+    """Cache pytree specs for the paged serving layout.
+
+    Full-attention layers share one KV block pool per layer
+    ((n_blocks+1, block_size, ...) — see ``common.attn_pool_spec``);
+    sliding-window layers keep their per-lane rotating buffer (already
+    O(window), paging it buys nothing) and recurrent layers their O(1)
+    per-lane state.  The tree structure matches :func:`cache_specs`, only
+    the full-attention leaf shapes differ.
+    """
+    def spec(kind):
+        if kind in (cfglib.ATTN, cfglib.ATTN_SHARED):
+            return common.attn_pool_spec(cfg, n_blocks, block_size)
+        return _block_cache_spec(kind, cfg, lanes, max_len)
+
+    def stack(s, rep):
+        return jax.tree_util.tree_map(
+            lambda t: jax.ShapeDtypeStruct((rep,) + t.shape, t.dtype), s)
+
+    out = []
+    for unit, rep in cfg.resolved_stages:
+        out.append(tuple(stack(spec(k), rep) for k in unit))
     return tuple(out)

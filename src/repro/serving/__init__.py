@@ -1,12 +1,14 @@
 """Continuous-batching serving for the asynchronous mixture.
 
 :class:`MixtureServeEngine` is the production path: router-scored
-admission into per-expert fixed-lane decode batches with a slotted KV
-cache.  :mod:`repro.serving.baseline` keeps the original one-shot serial
-path as the numerical oracle and benchmark baseline.
+batched admission into per-expert fixed-lane decode batches over a paged
+block-pool KV cache (:mod:`repro.serving.cache`).
+:mod:`repro.serving.baseline` keeps the original one-shot serial path as
+the numerical oracle and benchmark baseline.
 """
 from repro.serving.engine import EngineConfig, MixtureServeEngine
-from repro.serving.scheduler import Request, RequestQueue, SlotAllocator
+from repro.serving.scheduler import (BlockAllocator, Request, RequestQueue,
+                                     SlotAllocator)
 
-__all__ = ["EngineConfig", "MixtureServeEngine", "Request", "RequestQueue",
-           "SlotAllocator"]
+__all__ = ["BlockAllocator", "EngineConfig", "MixtureServeEngine", "Request",
+           "RequestQueue", "SlotAllocator"]

@@ -1,38 +1,80 @@
-"""Slotted lane caches for continuous batching.
+"""Paged block-pool KV caches for continuous batching.
 
-A *lane* is one row of a fixed-shape decode cache pytree (leading axes
-``(rep, lanes, ...)`` — the same layout :func:`repro.models.model.cache_specs`
-describes, with ``lanes`` as the batch axis).  The serving engine keeps one
-lane pytree per expert and mutates it with three jit-stable operations:
+Device-side layout for the serving engine.  Per expert, each
+full-attention layer owns a shared *block pool* — k/v leaves shaped
+``(rep, n_blocks + 1, block_size, Hkv, hd)`` and a ``pos`` leaf
+``(rep, n_blocks + 1, block_size)`` — instead of one dense
+``(lanes, max_len)`` slab per lane.  A lane's KV lives in whatever pool
+blocks the host-side :class:`repro.serving.scheduler.BlockAllocator`
+reserved for it; the per-lane *block table* (``(lanes, max_len //
+block_size)`` int32, -1 = unreserved) maps position range
+``[i*block_size, (i+1)*block_size)`` to pool block ``table[i]``.  Row
+``n_blocks`` of every pool is a scratch block: writes whose table entry
+is -1 (inactive lanes, unreserved rows) are clamped there and reads mask
+its positions back to -1, so every gather/scatter stays shape-stable and
+the per-expert jitted ``decode_step`` compiles exactly once.
 
-  * :func:`init_lane_caches` — allocate empty lanes (``pos`` leaves = -1,
-    i.e. every KV slot is masked);
-  * :func:`insert_request`  — copy a freshly prefilled single-request cache
-    into one lane, masking any prompt-padding slots back to empty;
-  * :func:`release_slots`   — evict finished lanes by marking their ``pos``
-    rows empty so the slots can be reused by the free list.
+Sliding-window layers keep their per-lane rotating buffer (already
+O(window) — paging it saves nothing) and recurrent (SSM/xLSTM) layers
+their O(1) per-lane state; only full-attention KV is paged.
 
-All three are shape-stable in ``lanes``/``max_len`` so the per-expert
-``decode_step`` jit-compiles exactly once and keeps serving as requests
-come and go mid-decode.
+Three operations mutate the tree:
+
+  * :func:`init_paged_caches` — allocate empty pools/lanes (``pos``
+    leaves = -1, i.e. every KV slot is masked);
+  * :func:`insert_requests`  — one jitted scatter copying a *batch* of k
+    freshly prefilled caches into their reserved blocks (full-attention
+    leaves) and lane rows (everything else), masking prompt-padding
+    positions back to -1.  Rows padded up to the fixed batch width point
+    at the scratch block / an out-of-range lane slot, so admission of
+    1..lanes requests reuses one compiled scatter;
+  * eviction is free: a finished lane's blocks are simply returned to the
+    host free list.  No pool block is reachable except through a live
+    block table, and an insert overwrites a reused block's every slot
+    (the prefill cache spans the full ``max_len``), so no device-side
+    release scatter is needed.
+
+The paged read path gathers a lane's blocks back into dense-slab slot
+order (position p lands at gathered slot p), so engine decode stays
+bit-identical to the dense baseline — the fuzz suite in
+``tests/test_serving.py`` locks that down.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.configs import base as cfglib
 from repro.models import model as modellib
+
+POOL_KINDS = (cfglib.ATTN, cfglib.ATTN_SHARED)
 
 
 def _is_pos_leaf(path) -> bool:
-    """True for attention-cache ``pos`` leaves (slot-position bookkeeping)."""
+    """True for attention ``pos`` leaves (slot-position bookkeeping)."""
     last = path[-1]
     return isinstance(last, jax.tree_util.DictKey) and last.key == "pos"
 
 
-def init_lane_caches(cfg, lanes: int, max_len: int):
-    """Empty decode caches for ``lanes`` slots of budget ``max_len`` tokens."""
-    specs = modellib.cache_specs(cfg, lanes, max_len)
+def _kind_of(cfg, path) -> str:
+    """Block kind owning a cache leaf, recovered from its tree path.
+
+    Cache trees are ``tuple(stages) -> tuple(unit positions) -> dict``,
+    so ``path = (SequenceKey(stage), SequenceKey(unit_pos), DictKey(...))``
+    indexes straight into ``cfg.resolved_stages``.
+    """
+    return cfg.resolved_stages[path[0].idx][0][path[1].idx]
+
+
+def _is_pool_leaf(cfg, path) -> bool:
+    return _kind_of(cfg, path) in POOL_KINDS
+
+
+def init_paged_caches(cfg, lanes: int, n_blocks: int, block_size: int,
+                      max_len: int):
+    """Empty paged caches: full-attn block pools + per-lane other state."""
+    specs = modellib.paged_cache_specs(cfg, lanes, n_blocks, block_size,
+                                       max_len)
 
     def alloc(path, s):
         if _is_pos_leaf(path):
@@ -42,38 +84,55 @@ def init_lane_caches(cfg, lanes: int, max_len: int):
     return jax.tree_util.tree_map_with_path(alloc, specs)
 
 
-def insert_request(lane_caches, request_cache, slot, true_len):
-    """Copy a prefilled batch-of-1 cache into lane ``slot``.
+def insert_requests(cfg, caches, request_caches, block_rows, slots,
+                    true_lens):
+    """Scatter a prefilled batch of K requests into pools and lanes.
 
-    ``request_cache`` leaves are ``(rep, 1, ...)`` from a prefill with
-    ``cache_len`` equal to the lane budget, so shapes line up with one lane
-    row.  ``true_len`` is the un-padded prompt length: any KV slot the
-    padded prefill wrote with position >= true_len is masked back to -1 so
-    bucketed (padded) prompts never leak pad keys into decode attention.
+    ``request_caches`` leaves are ``(rep, K, ...)`` from one prefill with
+    ``cache_len == max_len``; K is a fixed batch width, so rows beyond
+    the really-admitted requests are padding.  ``block_rows`` is
+    ``(K, max_len // block_size)`` int32 — each request's reserved pool
+    blocks, -1 where unreserved (trailing rows past its reservation, and
+    every entry of a padding row).  ``slots`` is ``(K,)`` int32 lane ids,
+    with out-of-range values (>= lanes) on padding rows.  ``true_lens``
+    ``(K,)`` are un-padded prompt lengths.
 
-    ``slot``/``true_len`` are traced, so admission never recompiles.
+    Full-attention leaves: the request cache spans the whole ``max_len``
+    budget (data at positions < true_len, -1 markers beyond), so writing
+    all its ``max_len/block_size`` block-sized pieces through the block
+    row both installs the prompt KV and clears any stale positions a
+    previous tenant left in the reserved growth blocks; unreserved pieces
+    land in the scratch block.  Everything else scatters into lane rows,
+    with out-of-range padding slots dropped.
+
+    All index operands are traced, so admission never recompiles.
     """
-    def ins(path, lane, req):
-        row = req[:, 0]
+    block_rows = jnp.asarray(block_rows, jnp.int32)
+    slots = jnp.asarray(slots, jnp.int32)
+    true_lens = jnp.asarray(true_lens, jnp.int32)
+
+    def ins(path, pool, req):
+        if _is_pool_leaf(cfg, path):
+            rep, K, M = req.shape[:3]
+            bs = pool.shape[2]
+            scratch = pool.shape[1] - 1
+            if _is_pos_leaf(path):
+                req = jnp.where((req >= 0) & (req < true_lens[None, :, None]),
+                                req, -1)
+            vals = req.reshape((rep, K * (M // bs), bs) + req.shape[3:])
+            ids = jnp.where(block_rows >= 0, block_rows,
+                            scratch).reshape(-1)
+            return pool.at[:, ids].set(vals)
+        row = req
         if _is_pos_leaf(path):
-            row = jnp.where((row >= 0) & (row < true_len), row, -1)
-        return lane.at[:, slot].set(row)
+            row = jnp.where((row >= 0) & (row < true_lens[None, :, None]),
+                            row, -1)
+        return pool.at[:, slots].set(row, mode="drop")
 
-    return jax.tree_util.tree_map_with_path(ins, lane_caches, request_cache)
+    return jax.tree_util.tree_map_with_path(ins, caches, request_caches)
 
 
-def release_slots(lane_caches, freed_mask):
-    """Evict lanes where ``freed_mask`` (bool (lanes,)) is True.
-
-    Only position bookkeeping needs clearing — k/v payloads of a freed lane
-    are unreachable once every ``pos`` entry is -1 (decode attention masks
-    them), and :func:`insert_request` fully overwrites the lane on reuse.
-    Recurrent-state leaves are left untouched for the same reason: the
-    next admission replaces them wholesale.
-    """
-    def rel(path, lane):
-        if _is_pos_leaf(path):
-            return jnp.where(freed_mask[None, :, None], -1, lane)
-        return lane
-
-    return jax.tree_util.tree_map_with_path(rel, lane_caches)
+def kv_cache_bytes(caches) -> int:
+    """Total bytes held by a cache pytree (pools + lane state)."""
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(caches))

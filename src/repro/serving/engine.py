@@ -7,9 +7,22 @@ the serving path keeps every expert's decode lanes full.  This engine
 does that with the classic continuous-batching loop:
 
   submit -> [router scores prefix, argmax expert]      (batched, padded)
-         -> per-expert FIFO until a decode lane frees
-         -> prefill into a slotted lane cache           (bucketed lengths)
+         -> per-expert FIFO until a decode lane AND pool blocks free
+         -> batched prefill into the paged block-pool KV cache
          -> joined into that expert's fixed-lane decode batch mid-flight
+
+KV memory is *paged* (see :mod:`repro.serving.cache`): full-attention
+layers share a per-expert pool of ``block_size``-token blocks and each
+lane holds a block table instead of a dense ``max_len`` slab, so the
+pool can be sized below ``lanes * max_len`` and admission reserves only
+``ceil(len(prompt)+max_new-1) / block_size)`` blocks per request.
+
+Admission is *batched*: one tick drains up to ``lanes_per_expert``
+pending requests into a single prefill call padded to a fixed batch
+width and one shared prompt-length bucket (one compile per bucket, not
+per request), then inserts all of them with a single jitted scatter.
+Archs whose prefill is not right-pad-safe (sliding-window, SSM, xLSTM)
+fall back to exact-length one-request prefills.
 
 Every tick runs ONE jitted ``decode_step`` per expert with active lanes,
 over stable shapes ``(lanes, 1)`` — finished sequences are evicted and
@@ -17,11 +30,13 @@ queued requests admitted between ticks without ever recompiling.  Decode
 is greedy and matches the one-shot :func:`repro.serving.baseline.generate`
 token-for-token: the first token comes from the prefill logits, each
 decode feeds the previous token at its lane's own position (per-slot
-``positions`` / ``cache_index`` vectors, see ``models/model.decode_step``).
+``positions`` / ``cache_index`` vectors plus ``block_tables``, see
+``models/model.decode_step``).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from collections import deque
 
@@ -34,7 +49,8 @@ from repro.core import assignment as asg
 from repro.core import router as routerlib
 from repro.models import model as modellib
 from repro.serving import cache as cachelib
-from repro.serving.scheduler import Request, RequestQueue, SlotAllocator
+from repro.serving.scheduler import (BlockAllocator, Request, RequestQueue,
+                                     SlotAllocator)
 
 PAD_SAFE_KINDS = (cfglib.ATTN, cfglib.ATTN_SHARED)
 
@@ -47,6 +63,28 @@ class EngineConfig:
     prefix_len: int = 32          # router scoring prefix M
     route_batch: int = 8          # router calls are padded to this many rows
     min_prefill_bucket: int = 16  # smallest power-of-2 prompt bucket
+    block_size: int = 16          # tokens per paged KV block
+    pool_blocks: int = 0          # KV blocks per expert; 0 -> lanes*max_len/bs
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_fns(ecfg, rcfg, max_len: int):
+    """Jitted serving kernels, shared across engine instances.
+
+    Keyed on the (hashable, frozen) configs so fuzz suites building many
+    engines reuse one compile cache instead of re-jitting per instance.
+    """
+    decode = jax.jit(
+        lambda p, toks, pos, ci, bt, c: modellib.decode_step(
+            p, ecfg, {"tokens": toks, "positions": pos, "cache_index": ci,
+                      "block_tables": bt}, c))
+    prefill = jax.jit(
+        lambda p, toks, last: modellib.prefill(
+            p, ecfg, {"tokens": toks}, cache_len=max_len, last_index=last))
+    score = jax.jit(
+        lambda rp, toks: routerlib.ensemble_scores(rp, rcfg, toks))
+    insert = jax.jit(functools.partial(cachelib.insert_requests, ecfg))
+    return decode, prefill, score, insert
 
 
 @dataclasses.dataclass
@@ -54,11 +92,14 @@ class _Expert:
     """Mutable per-expert serving state (host side + one device cache tree)."""
     caches: object
     alloc: SlotAllocator
+    balloc: BlockAllocator
     pending: deque
     tok: np.ndarray               # (lanes,) last emitted token per lane
     pos: np.ndarray               # (lanes,) next decode position per lane
     active: np.ndarray            # (lanes,) bool
     req: list                     # slot -> Request | None
+    block_tables: np.ndarray      # (lanes, max_len // block_size) int32
+    blocks: list                  # slot -> list[int] reserved pool blocks
     n_served: int = 0
     decode_calls: int = 0
     prefill_calls: int = 0
@@ -81,35 +122,77 @@ class MixtureServeEngine:
         # rotating-window KV buffers and recurrent (SSM/xLSTM) states, so
         # those archs fall back to exact-length prefill compiles.
         self.pad_safe = all(k in PAD_SAFE_KINDS for k in ecfg.layer_pattern)
+        # only full-attention layers hold paged KV; pure-recurrent /
+        # sliding-window experts never touch the block pool
+        self.has_pool = any(k in cachelib.POOL_KINDS
+                            for k in ecfg.layer_pattern)
 
-        L, M = eng.lanes_per_expert, eng.max_len
+        L, M, bs = eng.lanes_per_expert, eng.max_len, eng.block_size
+        if self.has_pool and M % bs:
+            raise ValueError(f"max_len {M} not a multiple of "
+                             f"block_size {bs}")
+        self.lane_blocks = -(-M // bs)
+        pool = eng.pool_blocks or L * self.lane_blocks
+        if self.has_pool and pool < self.lane_blocks:
+            raise ValueError(
+                f"pool_blocks {pool} cannot hold one max-size request "
+                f"({self.lane_blocks} blocks) — the queue would deadlock")
+        self.pool_blocks = pool
         self._experts = [
-            _Expert(caches=cachelib.init_lane_caches(ecfg, L, M),
-                    alloc=SlotAllocator(L), pending=deque(),
+            _Expert(caches=cachelib.init_paged_caches(ecfg, L, pool, bs, M),
+                    alloc=SlotAllocator(L), balloc=BlockAllocator(pool),
+                    pending=deque(),
                     tok=np.zeros(L, np.int32), pos=np.zeros(L, np.int32),
-                    active=np.zeros(L, bool), req=[None] * L)
+                    active=np.zeros(L, bool), req=[None] * L,
+                    block_tables=np.full((L, self.lane_blocks), -1, np.int32),
+                    blocks=[[] for _ in range(L)])
             for _ in range(self.n_experts)]
         self.queue = RequestQueue()
         self.tick = 0
         self._uid = 0
         self._t0: float | None = None
+        (self._decode_fn, self._prefill_fn, self._score_fn,
+         self._insert_fn) = _jit_fns(ecfg, rcfg, M)
 
-        self._decode_fn = jax.jit(
-            lambda p, toks, pos, ci, c: modellib.decode_step(
-                p, ecfg, {"tokens": toks, "positions": pos,
-                          "cache_index": ci}, c))
-        self._prefill_fn = jax.jit(
-            lambda p, toks, last: modellib.prefill(
-                p, ecfg, {"tokens": toks}, cache_len=M, last_index=last))
-        self._score_fn = jax.jit(
-            lambda rp, toks: routerlib.ensemble_scores(rp, rcfg, toks))
-        self._insert_fn = jax.jit(cachelib.insert_request)
-        self._release_fn = jax.jit(cachelib.release_slots)
+    # -- warmup ------------------------------------------------------------
+    def warmup(self, prompt_len: int | None = None) -> None:
+        """Compile every serving shape up front, off the timed path.
+
+        Drives expert 0's admission/decode directly (bypassing routing,
+        which could scatter a warmup batch across experts and leave the
+        wider admission widths uncompiled) with synthetic requests at
+        every power-of-two admission width.  The jitted functions are
+        shared across experts, so one expert's shapes warm them all.
+        ``prompt_len`` selects which prefill bucket to warm (defaults to
+        the routing prefix length); call again for other buckets.
+        """
+        pl = min(prompt_len or self.eng.prefix_len, self.eng.max_len - 2)
+        L = self.eng.lanes_per_expert
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        # router scoring always runs on (route_batch, prefix_len) chunks
+        self._score_fn(self.router_params,
+                       jnp.zeros((self.eng.route_batch, self.eng.prefix_len),
+                                 jnp.int32))
+        st = self._experts[0]
+        for k in sorted({min(1 << (b - 1).bit_length(), L)
+                         for b in range(1, L + 1)}):
+            for _ in range(k):
+                st.pending.append(Request(uid=-1,
+                                          prompt=np.zeros(pl, np.int32),
+                                          max_new_tokens=2))
+            sink: list[Request] = []
+            while st.pending or st.active.any():
+                self._admit(0, st, sink)
+                self._decode(0, st, sink)
+        self._t0 = None
 
     # -- request intake ----------------------------------------------------
     def submit(self, prompt, max_new_tokens: int,
                arrival_tick: int | None = None) -> Request:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
         if len(prompt) < self.eng.prefix_len:
             raise ValueError(f"prompt shorter than routing prefix "
                              f"({len(prompt)} < {self.eng.prefix_len})")
@@ -133,8 +216,8 @@ class MixtureServeEngine:
             chunk = prefixes[i:i + rb]
             n = len(chunk)
             if n < rb:        # pad with copies of row 0; scores are per-row
-                chunk = np.concatenate([chunk, np.repeat(chunk[:1],
-                                                         rb - n, 0)])
+                chunk = np.concatenate([chunk, np.broadcast_to(
+                    chunk[:1], (rb - n,) + chunk.shape[1:])])
             scores = np.asarray(self._score_fn(self.router_params,
                                                jnp.asarray(chunk)))
             eids = np.asarray(asg.argmax_assignment(scores[:n]))
@@ -152,25 +235,88 @@ class MixtureServeEngine:
             b *= 2
         return min(b, self.eng.max_len)
 
+    def _blocks_needed(self, req: Request) -> int:
+        """Pool blocks covering every KV write the request will make.
+
+        Positions written: 0..len(prompt)-1 by prefill, then one per fed-
+        back token — the final emitted token is never written, so the
+        highest position is len(prompt) + max_new - 2.
+        """
+        if not self.has_pool:
+            return 0
+        used = len(req.prompt) + req.max_new_tokens - 1
+        return -(-used // self.eng.block_size)
+
     def _admit(self, e: int, st: _Expert, completed: list[Request]) -> None:
-        params = self.expert_params[e]
+        """Drain pending requests into free lanes with one batched prefill.
+
+        FIFO admission: take from the queue head while a decode lane and
+        (full-attention archs) enough pool blocks are available.  All
+        drained requests share one prefill call padded to the fixed lane
+        width and the largest prompt bucket among them (non-pad-safe archs
+        prefill one request at a time at exact length), then land in the
+        caches via one jitted scatter.
+        """
+        batch: list[tuple[Request, int, np.ndarray]] = []
         while st.pending and st.alloc.n_free:
-            req = st.pending.popleft()
+            req = st.pending[0]
+            blocks = st.balloc.alloc_n(self._blocks_needed(req))
+            if blocks is None:
+                break                       # pool full: wait, keep FIFO order
+            st.pending.popleft()
             slot = st.alloc.alloc()
-            n = len(req.prompt)
-            padded = np.zeros(self._bucket(n), np.int32)
-            padded[:n] = req.prompt
-            logits, rcache = self._prefill_fn(
-                params, jnp.asarray(padded[None]),
-                jnp.full((1,), n - 1, jnp.int32))
+            row = np.full(self.lane_blocks, -1, np.int32)
+            row[:len(blocks)] = blocks
+            st.blocks[slot] = blocks
+            batch.append((req, slot, row))
+        if not batch:
+            return
+
+        params = self.expert_params[e]
+        L = self.eng.lanes_per_expert
+        lens = np.array([len(r.prompt) for r, _, _ in batch])
+        if self.pad_safe:
+            # one (K, bucket) prefill for the whole drain: K is the batch
+            # width padded to the next power of two (bounded compile count,
+            # no full-lane-width compute for single admissions), bucket =
+            # the largest prompt bucket among the drained requests
+            K = min(1 << (len(batch) - 1).bit_length(), L)
+            bucket = max(self._bucket(int(n)) for n in lens)
+            toks = np.zeros((K, bucket), np.int32)
+            last = np.zeros(K, np.int32)
+            for i, (req, _, _) in enumerate(batch):
+                toks[i, :lens[i]] = req.prompt
+                last[i] = lens[i] - 1
+            logits, rcache = self._prefill_fn(params, jnp.asarray(toks),
+                                              jnp.asarray(last))
             st.prefill_calls += 1
-            st.caches = self._insert_fn(st.caches, rcache,
-                                        np.int32(slot), np.int32(n))
-            first = int(np.argmax(np.asarray(logits[0])))
+            rows = np.full((K, self.lane_blocks), -1, np.int32)
+            slots = np.full(K, L, np.int32)       # out-of-range -> dropped
+            true = np.zeros(K, np.int32)
+            for i, (_, slot, row) in enumerate(batch):
+                rows[i], slots[i], true[i] = row, slot, lens[i]
+            st.caches = self._insert_fn(st.caches, rcache, rows, slots, true)
+            firsts = np.asarray(jnp.argmax(logits[:len(batch)], -1))
+        else:
+            firsts = np.zeros(len(batch), np.int64)
+            for i, (req, slot, row) in enumerate(batch):
+                logits, rcache = self._prefill_fn(
+                    params, jnp.asarray(req.prompt[None]),
+                    jnp.full((1,), lens[i] - 1, jnp.int32))
+                st.prefill_calls += 1
+                st.caches = self._insert_fn(
+                    st.caches, rcache, row[None],
+                    np.full(1, slot, np.int32),
+                    np.full(1, lens[i], np.int32))
+                firsts[i] = int(np.argmax(np.asarray(logits[0])))
+
+        for i, (req, slot, row) in enumerate(batch):
+            first = int(firsts[i])
             req.tokens.append(first)
             req.admit_tick = self.tick
             req.t_first = time.perf_counter() - self._t0
-            st.tok[slot], st.pos[slot] = first, n
+            st.block_tables[slot] = row
+            st.tok[slot], st.pos[slot] = first, lens[i]
             st.active[slot], st.req[slot] = True, req
             if req.max_new_tokens == 1:
                 self._finish(st, slot, completed)
@@ -182,6 +328,9 @@ class MixtureServeEngine:
         st.active[slot] = False
         st.req[slot] = None
         st.tok[slot] = st.pos[slot] = 0
+        st.block_tables[slot] = -1
+        st.balloc.free_n(st.blocks[slot])
+        st.blocks[slot] = []
         st.alloc.free(slot)
         st.n_served += 1
         completed.append(req)
@@ -190,26 +339,24 @@ class MixtureServeEngine:
         if not st.active.any():
             return
         # inactive lanes decode at position -1: every KV slot is masked for
-        # them and their writes land as empty (-1) markers, so a free lane
-        # can ride along in the fixed-shape batch at zero correctness cost
+        # them and their writes are clamped to the pool scratch block (or
+        # land as -1 markers in lane buffers), so a free lane can ride
+        # along in the fixed-shape batch at zero correctness cost
         pos = np.where(st.active, st.pos, -1).astype(np.int32)
         logits, st.caches = self._decode_fn(
             self.expert_params[e], jnp.asarray(st.tok[:, None]),
-            jnp.asarray(pos[:, None]), jnp.asarray(pos), st.caches)
+            jnp.asarray(pos[:, None]), jnp.asarray(pos),
+            jnp.asarray(st.block_tables), st.caches)
         st.decode_calls += 1
         st.occupied_lane_steps += int(st.active.sum())
         nxt = np.asarray(jnp.argmax(logits[:, 0], -1)).astype(np.int32)
-        freed = np.zeros(len(st.active), bool)
         for slot in np.nonzero(st.active)[0]:
             req = st.req[slot]
             req.tokens.append(int(nxt[slot]))
             st.tok[slot] = nxt[slot]
             st.pos[slot] += 1
             if len(req.tokens) >= req.max_new_tokens:
-                freed[slot] = True
                 self._finish(st, int(slot), completed)
-        if freed.any():
-            st.caches = self._release_fn(st.caches, jnp.asarray(freed))
 
     # -- main loop ---------------------------------------------------------
     def step(self) -> list[Request]:
@@ -231,6 +378,10 @@ class MixtureServeEngine:
         return bool(len(self.queue)) or any(
             st.pending or st.active.any() for st in self._experts)
 
+    def kv_bytes_per_expert(self) -> int:
+        """Device bytes held by one expert's decode caches."""
+        return cachelib.kv_cache_bytes(self._experts[0].caches)
+
     def run(self) -> dict:
         """Drive ticks until drained; returns requests + aggregate stats.
 
@@ -241,6 +392,7 @@ class MixtureServeEngine:
         for st in self._experts:
             st.n_served = st.decode_calls = st.prefill_calls = 0
             st.occupied_lane_steps = 0
+            st.balloc.peak_in_use = st.balloc.n_in_use
         tick0 = self.tick
         t_start = time.perf_counter()
         if self._t0 is None:
@@ -272,8 +424,12 @@ class MixtureServeEngine:
             if completed else 0.0,
             "occupancy": lane_steps / max(
                 decode_calls * self.eng.lanes_per_expert, 1),
+            "prefill_calls": sum(st.prefill_calls for st in self._experts),
+            "kv_bytes_per_lane": self.kv_bytes_per_expert()
+            // self.eng.lanes_per_expert,
             "per_expert": {
                 e: {"served": st.n_served, "decode_calls": st.decode_calls,
-                    "prefills": st.prefill_calls}
+                    "prefills": st.prefill_calls,
+                    "peak_blocks": st.balloc.peak_in_use}
                 for e, st in enumerate(self._experts)},
         }

@@ -2,7 +2,9 @@
 
 Host-side, pure-python: a :class:`Request` record per served sequence, a
 FIFO :class:`RequestQueue` with (simulated or wall-clock) arrival ticks,
-and a :class:`SlotAllocator` free list handing out decode-lane slots.
+a :class:`SlotAllocator` free list handing out decode-lane slots, and a
+:class:`BlockAllocator` free list over the paged KV block pool (see
+:mod:`repro.serving.cache` for the device-side layout it indexes).
 """
 from __future__ import annotations
 
@@ -92,3 +94,53 @@ class SlotAllocator:
     @property
     def n_free(self) -> int:
         return len(self._free)
+
+
+class BlockAllocator:
+    """LIFO free list over ``n`` KV-pool blocks with atomic group alloc.
+
+    A lane's whole block reservation is taken with :meth:`alloc_n` (all
+    or nothing — a partially admitted request could deadlock the pool)
+    and returned with :meth:`free_n` when the lane finishes.  ``free`` of
+    a block that is not currently allocated raises, so scheduler bugs
+    surface as exceptions instead of silent cache corruption.
+    """
+
+    def __init__(self, n: int):
+        self.n = n
+        self._free = list(range(n - 1, -1, -1))   # pop() hands out block 0 first
+        self._owned: set[int] = set()
+        self.peak_in_use = 0
+
+    def alloc(self) -> int | None:
+        got = self.alloc_n(1)
+        return got[0] if got else None
+
+    def alloc_n(self, k: int) -> list[int] | None:
+        """Take ``k`` blocks atomically; None (and no change) if short."""
+        if k < 0:
+            raise ValueError(f"alloc_n({k})")
+        if len(self._free) < k:
+            return None
+        got = [self._free.pop() for _ in range(k)]
+        self._owned.update(got)
+        self.peak_in_use = max(self.peak_in_use, len(self._owned))
+        return got
+
+    def free(self, block: int) -> None:
+        if block not in self._owned:
+            raise ValueError(f"bad free of block {block}")
+        self._owned.remove(block)
+        self._free.append(block)
+
+    def free_n(self, blocks) -> None:
+        for b in blocks:
+            self.free(int(b))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_in_use(self) -> int:
+        return len(self._owned)

@@ -1,0 +1,180 @@
+"""Property/fuzz suite for the host-side serving schedulers.
+
+Allocator invariants under random alloc/free interleavings (never
+double-allocate, never leak, unowned frees raise) and RequestQueue
+arrival-ordering (a late-submitted early arrival pops first).  Each
+property runs twice: a hypothesis-driven version (skipped on minimal
+environments via ``_hypothesis_compat``) and a seeded-rng version that
+always runs, so the invariants stay covered even without hypothesis.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.serving.scheduler import (BlockAllocator, Request, RequestQueue,
+                                     SlotAllocator)
+
+
+# ---------------------------------------------------------------------------
+# Reference-model interleavings (shared by hypothesis and seeded drivers)
+# ---------------------------------------------------------------------------
+def _drive_slot_allocator(n, choices):
+    """choices: iterable of floats in [0,1) steering alloc-vs-free."""
+    a = SlotAllocator(n)
+    held = set()
+    for c in choices:
+        if c < 0.5:
+            if a.n_free == 0:
+                assert a.alloc() is None, "exhausted pool must hand out None"
+                continue
+            s = a.alloc()
+            assert s is not None and 0 <= s < n
+            assert s not in held, "double allocation"
+            held.add(s)
+        elif held:
+            s = sorted(held)[int(c * 100) % len(held)]
+            a.free(s)
+            held.remove(s)
+    assert a.n_free == n - len(held), "leaked or fabricated slots"
+    for s in sorted(held):
+        a.free(s)
+    assert a.n_free == n
+
+
+def _drive_block_allocator(n, choices):
+    a = BlockAllocator(n)
+    held: list[list[int]] = []
+    held_flat: set[int] = set()
+    for c in choices:
+        if c < 0.5:
+            k = int(c * 100) % (n + 2)            # may exceed what's free
+            got = a.alloc_n(k)
+            if len(held_flat) + k > n:
+                assert got is None, "allocated past capacity"
+            if got is None:
+                assert a.n_free == n - len(held_flat), \
+                    "failed alloc_n mutated the free list"
+                continue
+            assert len(got) == k and len(set(got)) == k
+            assert not (set(got) & held_flat), "double allocation"
+            held.append(got)
+            held_flat.update(got)
+        elif held:
+            grp = held.pop(int(c * 100) % len(held))
+            a.free_n(grp)
+            held_flat.difference_update(grp)
+    assert a.n_free == n - len(held_flat), "leaked or fabricated blocks"
+    assert a.n_in_use == len(held_flat)
+    assert a.peak_in_use <= n
+    for grp in held:
+        a.free_n(grp)
+    assert a.n_free == n and a.n_in_use == 0
+
+
+def _drive_queue(arrivals):
+    """arrivals: submission-ordered list of arrival ticks (arbitrary order)."""
+    q = RequestQueue()
+    reqs = [Request(uid=i, prompt=np.zeros(4, np.int32), max_new_tokens=1,
+                    arrival_tick=t) for i, t in enumerate(arrivals)]
+    for r in reqs:
+        q.push(r)
+    assert len(q) == len(reqs)
+    if reqs:
+        assert q.next_arrival() == min(arrivals)
+    popped = []
+    tick = -1
+    while len(q):
+        tick = q.next_arrival() if q.next_arrival() > tick else tick + 1
+        got = q.pop_arrived(tick)
+        assert all(r.arrival_tick <= tick for r in got)
+        assert q.next_arrival() is None or q.next_arrival() > tick
+        popped.extend(got)
+    # arrival-ordered overall, submission-ordered (stable) within a tick
+    want = [uid for uid, _ in sorted(enumerate(arrivals),
+                                     key=lambda p: (p[1], p[0]))]
+    assert [r.uid for r in popped] == want, "queue broke arrival ordering"
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis-driven properties (skip cleanly without hypothesis)
+# ---------------------------------------------------------------------------
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 8), st.lists(st.floats(0, 0.999), max_size=120))
+def test_prop_slot_allocator(n, choices):
+    _drive_slot_allocator(n, choices)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 32), st.lists(st.floats(0, 0.999), max_size=120))
+def test_prop_block_allocator(n, choices):
+    _drive_block_allocator(n, choices)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 20), max_size=40))
+def test_prop_request_queue_ordering(arrivals):
+    _drive_queue(arrivals)
+
+
+# ---------------------------------------------------------------------------
+# Seeded-rng versions: always run, same invariants
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", range(8))
+def test_fuzz_slot_allocator(seed):
+    rng = np.random.default_rng(seed)
+    _drive_slot_allocator(int(rng.integers(1, 9)), rng.random(200))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_fuzz_block_allocator(seed):
+    rng = np.random.default_rng(100 + seed)
+    _drive_block_allocator(int(rng.integers(1, 33)), rng.random(200))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_fuzz_request_queue(seed):
+    rng = np.random.default_rng(200 + seed)
+    _drive_queue([int(t) for t in rng.integers(0, 15,
+                                               size=rng.integers(0, 40))])
+
+
+# ---------------------------------------------------------------------------
+# Unowned / double frees must raise, not corrupt
+# ---------------------------------------------------------------------------
+def test_slot_allocator_bad_free_raises():
+    a = SlotAllocator(3)
+    s = a.alloc()
+    with pytest.raises(ValueError):
+        a.free(3)                       # out of range
+    with pytest.raises(ValueError):
+        a.free((s + 1) % 3)             # never allocated
+    a.free(s)
+    with pytest.raises(ValueError):
+        a.free(s)                       # double free
+
+
+def test_block_allocator_bad_free_raises():
+    a = BlockAllocator(4)
+    got = a.alloc_n(2)
+    with pytest.raises(ValueError):
+        a.free(99)                      # out of range / never allocated
+    other = ({0, 1, 2, 3} - set(got)).pop()
+    with pytest.raises(ValueError):
+        a.free(other)                   # not currently owned
+    a.free_n(got)
+    with pytest.raises(ValueError):
+        a.free(got[0])                  # double free
+    with pytest.raises(ValueError):
+        a.alloc_n(-1)
+    assert a.alloc_n(0) == []
+    assert a.alloc_n(5) is None and a.n_free == 4
+
+
+def test_block_allocator_atomic_under_shortage():
+    a = BlockAllocator(3)
+    first = a.alloc_n(2)
+    assert a.alloc_n(2) is None         # only 1 free: all-or-nothing
+    assert a.n_free == 1
+    assert a.alloc_n(1) is not None and a.n_free == 0
+    a.free_n(first)
+    assert a.n_free == 2

@@ -3,7 +3,11 @@
 The engine must be a pure throughput optimization — greedy tokens
 bit-identical to the one-shot ``baseline.generate`` path and routing
 decisions identical to ``baseline.serve_batch`` — while admitting and
-evicting requests mid-decode over fixed lane shapes."""
+evicting requests mid-decode over fixed lane shapes, with full-attention
+KV living in the paged block pool (``serving/cache.py``).  The fuzz
+section runs ~50 seeded random workloads (prompt lengths, token budgets,
+arrival ticks, pool pressure) against the baseline oracle.
+"""
 import dataclasses
 
 import jax
@@ -26,7 +30,8 @@ RCFG = ModelConfig(name="srv-router", n_layers=1, d_model=32, n_heads=2,
                    n_kv_heads=2, d_ff=64, vocab_size=128, ffn_type="gelu",
                    loss_chunk=32, compute_dtype="float32",
                    param_dtype="float32")
-E, PREFIX, MAXLEN = 2, 16, 48
+E, PREFIX, MAXLEN, BS = 2, 16, 48, 16
+FULL_POOL = 0          # EngineConfig: 0 -> lanes * max_len / block_size
 
 
 @pytest.fixture(scope="module")
@@ -38,19 +43,20 @@ def mixture():
     return expert_params, router_params
 
 
-def _engine(mixture, lanes=3, **kw):
+def _engine(mixture, lanes=3, ecfg=ECFG, **kw):
     expert_params, router_params = mixture
+    kw.setdefault("route_batch", 4)
     return MixtureServeEngine(
-        ECFG, RCFG, expert_params, router_params,
+        ecfg, RCFG, expert_params, router_params,
         EngineConfig(lanes_per_expert=lanes, max_len=MAXLEN,
-                     prefix_len=PREFIX, route_batch=4, **kw))
+                     prefix_len=PREFIX, block_size=BS, **kw))
 
 
-def _oracle(mixture, prompt, expert, n_new):
+def _oracle(mixture, prompt, expert, n_new, ecfg=ECFG):
     """One-shot greedy reference with KV budget matched to the lanes."""
     expert_params, _ = mixture
-    return baseline.generate(ECFG, expert_params[expert],
-                             jnp.asarray(prompt[None]), n_new,
+    return baseline.generate(ecfg, expert_params[expert],
+                             jnp.asarray(np.asarray(prompt)[None]), n_new,
                              cache_len=MAXLEN)[0]
 
 
@@ -92,8 +98,8 @@ def test_mixed_prompt_lengths_use_padded_prefill(mixture):
 
 
 def test_staggered_arrival_slot_reuse_and_eviction(mixture):
-    """More requests than lanes, arriving over time: slots must be
-    reused mid-decode and every request still decodes exactly."""
+    """More requests than lanes, arriving over time: slots and pool blocks
+    must be reused mid-decode and every request still decodes exactly."""
     rng = np.random.default_rng(2)
     R, lanes = 8, 2
     prompts = rng.integers(0, ECFG.vocab_size, size=(R, PREFIX)).astype(np.int32)
@@ -103,10 +109,12 @@ def test_staggered_arrival_slot_reuse_and_eviction(mixture):
         eng.submit(prompts[i], int(n_new[i]), arrival_tick=i // 3)
     res = eng.run()
     assert len(res["requests"]) == R
-    # every lane drained and returned to the free list
+    # every lane drained, block tables cleared, free lists whole again
     for st in eng._experts:
         assert not st.active.any() and not st.pending
         assert st.alloc.n_free == lanes
+        assert st.balloc.n_in_use == 0
+        assert (st.block_tables == -1).all()
     # with R > total lanes somebody had to wait for an eviction
     assert any(r.queue_ticks > 0 for r in res["requests"])
     served = sum(st.n_served for st in eng._experts)
@@ -142,33 +150,73 @@ def test_decode_step_vector_cache_index_matches_scalar():
             c_s, c_v)
 
 
-def test_lane_cache_insert_and_release():
-    """pos bookkeeping: empty lanes are -1, padded slots masked, release
-    evicts exactly the freed lanes."""
-    lanes, max_len, true_len = 3, 16, 5
-    caches = cachelib.init_lane_caches(ECFG, lanes, max_len)
-    pos_leaves = [l for p, l in jax.tree_util.tree_leaves_with_path(caches)
-                  if cachelib._is_pos_leaf(p)]
-    assert pos_leaves and all((np.asarray(l) == -1).all() for l in pos_leaves)
+def test_paged_decode_matches_dense_decode():
+    """Block-table decode must reproduce the dense-slab path bit-for-bit.
 
+    Two requests prefilled into (a) a dense per-lane cache driven with
+    vector cache_index and (b) the paged pool via insert_requests +
+    block_tables; one decode step must give identical logits, and the
+    token written through the block table must land in the mapped block.
+    """
+    lanes, n_blocks = 2, 7
     params = modellib.init_params(jax.random.PRNGKey(5), ECFG)
-    padded = jnp.zeros((1, 8), jnp.int32)             # 5 real + 3 pad tokens
-    _, rcache = modellib.prefill(params, ECFG, {"tokens": padded},
-                                 cache_len=max_len)
-    caches = cachelib.insert_request(caches, rcache, 1, true_len)
-    for pl in [l for p, l in jax.tree_util.tree_leaves_with_path(caches)
-               if cachelib._is_pos_leaf(p)]:
-        pl = np.asarray(pl)
-        want = np.concatenate([np.arange(true_len),
-                               np.full(max_len - true_len, -1)])
-        assert (pl[:, 1] == want).all()               # pad slots masked
-        assert (pl[:, [0, 2]] == -1).all()            # other lanes untouched
+    toks = jax.random.randint(jax.random.PRNGKey(6), (lanes, 12), 0,
+                              ECFG.vocab_size)
+    _, dense = modellib.prefill(params, ECFG, {"tokens": toks},
+                                cache_len=MAXLEN)
+    _, reqc = modellib.prefill(params, ECFG, {"tokens": toks},
+                               cache_len=MAXLEN)
+    paged = cachelib.init_paged_caches(ECFG, lanes, n_blocks, BS, MAXLEN)
+    # non-contiguous, per-lane-disjoint block reservations
+    rows = np.array([[2, 5, 0], [4, 1, 6]], np.int32)
+    paged = cachelib.insert_requests(
+        ECFG, paged, reqc, rows, np.arange(lanes, dtype=np.int32),
+        np.full(lanes, 12, np.int32))
+    nxt = jnp.array([[3], [5]], jnp.int32)
+    pos = jnp.full((lanes, 1), 12, jnp.int32)
+    ci = jnp.full((lanes,), 12, jnp.int32)
+    lg_d, _ = modellib.decode_step(params, ECFG, {
+        "tokens": nxt, "positions": pos, "cache_index": ci}, dense)
+    lg_p, newp = modellib.decode_step(params, ECFG, {
+        "tokens": nxt, "positions": pos, "cache_index": ci,
+        "block_tables": jnp.asarray(rows)}, paged)
+    np.testing.assert_array_equal(np.asarray(lg_d), np.asarray(lg_p))
+    # position 12 of lane 0 lives in block rows[0][12 // BS] at offset 12
+    for path, leaf in jax.tree_util.tree_leaves_with_path(newp):
+        if cachelib._is_pos_leaf(path):
+            leaf = np.asarray(leaf)
+            assert (leaf[:, rows[0][0], 12] == 12).all()
+            assert (leaf[:, rows[1][0], 12] == 12).all()
 
-    freed = np.array([False, True, False])
-    caches = cachelib.release_slots(caches, jnp.asarray(freed))
-    for pl in [l for p, l in jax.tree_util.tree_leaves_with_path(caches)
-               if cachelib._is_pos_leaf(p)]:
-        assert (np.asarray(pl) == -1).all()
+
+def test_insert_requests_masks_padding_and_isolates_blocks():
+    """Pool pos bookkeeping: prompt-pad slots masked to -1, reserved growth
+    blocks cleared, unreserved rows land in scratch, other blocks kept."""
+    lanes, n_blocks, true_len = 2, 5, 5
+    caches = cachelib.init_paged_caches(ECFG, lanes, n_blocks, BS, MAXLEN)
+    params = modellib.init_params(jax.random.PRNGKey(7), ECFG)
+    padded = jnp.zeros((1, 16), jnp.int32)            # 5 real + 11 pad tokens
+    _, rcache = modellib.prefill(params, ECFG, {"tokens": padded},
+                                 cache_len=MAXLEN)
+    # poison block 3 so we can verify untouched blocks stay untouched and
+    # a reused block is fully overwritten by the next insert
+    caches = jax.tree_util.tree_map_with_path(
+        lambda p, l: l.at[:, 3].set(7) if cachelib._is_pos_leaf(p) else l,
+        caches)
+    rows = np.array([[1, 4, -1]], np.int32)           # 2 reserved of 3 rows
+    caches = cachelib.insert_requests(ECFG, caches, rcache, rows,
+                                      np.zeros(1, np.int32),
+                                      np.full(1, true_len, np.int32))
+    for path, leaf in jax.tree_util.tree_leaves_with_path(caches):
+        if not cachelib._is_pos_leaf(path):
+            continue
+        leaf = np.asarray(leaf)
+        want = np.concatenate([np.arange(true_len),
+                               np.full(BS - true_len, -1)])
+        assert (leaf[:, 1] == want).all()             # data block, pads masked
+        assert (leaf[:, 4] == -1).all()               # growth block cleared
+        assert (leaf[:, 3] == 7).all()                # unrelated block kept
+        assert (leaf[:, [0, 2]] == -1).all()
 
 
 def test_slot_allocator():
@@ -198,7 +246,179 @@ def test_out_of_order_arrival_ticks(mixture):
 
 def test_submit_validation(mixture):
     eng = _engine(mixture)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(np.zeros((0,), np.int32), 4)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit([], 4)
     with pytest.raises(ValueError):                   # prompt < routing prefix
         eng.submit(np.zeros(PREFIX - 1, np.int32), 4)
     with pytest.raises(ValueError):                   # exceeds lane budget
         eng.submit(np.zeros(PREFIX, np.int32), MAXLEN)
+
+
+def test_engine_config_validation(mixture):
+    expert_params, router_params = mixture
+    with pytest.raises(ValueError, match="multiple"):
+        MixtureServeEngine(ECFG, RCFG, expert_params, router_params,
+                           EngineConfig(max_len=MAXLEN + 1, block_size=BS,
+                                        prefix_len=PREFIX))
+    with pytest.raises(ValueError, match="deadlock"):
+        # pool cannot hold even one max-size request
+        MixtureServeEngine(ECFG, RCFG, expert_params, router_params,
+                           EngineConfig(max_len=MAXLEN, block_size=BS,
+                                        prefix_len=PREFIX,
+                                        pool_blocks=MAXLEN // BS - 1))
+    # archs with no full-attention KV have no pool: block alignment is
+    # irrelevant and must not be enforced
+    key = jax.random.PRNGKey(13)
+    ssm_params = [modellib.init_params(jax.random.fold_in(key, e), SSM_CFG)
+                  for e in range(E)]
+    eng = MixtureServeEngine(SSM_CFG, RCFG, ssm_params, router_params,
+                             EngineConfig(max_len=MAXLEN + 1, block_size=BS,
+                                          prefix_len=PREFIX))
+    assert not eng.has_pool
+
+
+def test_route_batch_one_skips_padding(mixture):
+    """route_batch=1 must route identically without the padded-copies path."""
+    expert_params, router_params = mixture
+    rng = np.random.default_rng(4)
+    prompts = rng.integers(0, ECFG.vocab_size, size=(3, PREFIX)).astype(np.int32)
+    want = baseline.route(RCFG, router_params, prompts, PREFIX)
+    eng = _engine(mixture, lanes=2, route_batch=1)
+    reqs = [eng.submit(p, 2) for p in prompts]
+    eng.run()
+    assert [r.expert for r in reqs] == want.tolist()
+
+
+def test_batched_admission_prefill_call_budget(mixture):
+    """k simultaneous arrivals must cost <= ceil(k_e / lanes) prefill calls
+    per expert — batched admission, not one prefill per request."""
+    lanes, R, n_new = 2, 8, 4
+    rng = np.random.default_rng(5)
+    prompts = rng.integers(0, ECFG.vocab_size, size=(R, PREFIX)).astype(np.int32)
+    eng = _engine(mixture, lanes=lanes)
+    for i in range(R):
+        eng.submit(prompts[i], n_new, arrival_tick=0)  # all arrive at once
+    res = eng.run()
+    assert len(res["requests"]) == R
+    total = 0
+    for e, st in enumerate(eng._experts):
+        k_e = sum(1 for r in res["requests"] if r.expert == e)
+        assert st.prefill_calls <= -(-k_e // lanes), (e, k_e, st.prefill_calls)
+        total += st.prefill_calls
+    assert res["prefill_calls"] == total
+    for r in res["requests"]:
+        want = _oracle(mixture, prompts[r.uid], r.expert, n_new)
+        np.testing.assert_array_equal(np.asarray(r.tokens), want)
+
+
+def test_paged_pool_uses_less_memory_than_dense_slab(mixture):
+    """At pool utilization < 1 the paged cache must hold strictly less KV
+    than the dense (lanes, max_len) slab layout."""
+    lanes = 3
+    dense_bytes = cachelib.kv_cache_bytes(
+        modellib.cache_specs(ECFG, lanes, MAXLEN))
+    full = lanes * MAXLEN // BS
+    eng = _engine(mixture, lanes=lanes, pool_blocks=full - 2)
+    assert eng.kv_bytes_per_expert() < dense_bytes
+    # and the pool still serves a full workload exactly
+    rng = np.random.default_rng(6)
+    prompts = rng.integers(0, ECFG.vocab_size, size=(5, PREFIX)).astype(np.int32)
+    for i in range(5):
+        eng.submit(prompts[i], 4)
+    res = eng.run()
+    assert len(res["requests"]) == 5
+    for r in res["requests"]:
+        want = _oracle(mixture, prompts[r.uid], r.expert, 4)
+        np.testing.assert_array_equal(np.asarray(r.tokens), want)
+    peak = max(st.balloc.peak_in_use for st in eng._experts)
+    assert peak <= full - 2
+
+
+# ---------------------------------------------------------------------------
+# Randomized fuzz oracle: ~50 seeded trials vs the one-shot baseline
+# ---------------------------------------------------------------------------
+N_FUZZ_TRIALS = 50
+
+
+@pytest.mark.parametrize("seed", range(N_FUZZ_TRIALS))
+def test_fuzz_engine_matches_baseline(mixture, seed):
+    """Random prompt lengths, token budgets, and arrival ticks: engine
+    tokens, routing, and per-request expert assignment must be
+    bit-identical to the serial baseline — including under deliberate
+    block-pool pressure (pool < lanes * max_len / block_size)."""
+    rng = np.random.default_rng(1000 + seed)
+    lanes = 2
+    full = lanes * MAXLEN // BS
+    # half the trials squeeze the pool to force admission to wait on blocks
+    pool = FULL_POOL if seed % 2 == 0 else MAXLEN // BS + 1
+    R = int(rng.integers(3, 6))
+    prompts = [rng.integers(0, ECFG.vocab_size,
+                            size=int(rng.integers(PREFIX, 33))).astype(np.int32)
+               for _ in range(R)]
+    n_new = [int(rng.integers(1, 7)) for _ in range(R)]
+    arrivals = [int(rng.integers(0, 7)) for _ in range(R)]
+    eng = _engine(mixture, lanes=lanes, pool_blocks=pool)
+    for i in range(R):
+        eng.submit(prompts[i], n_new[i], arrival_tick=arrivals[i])
+    res = eng.run()
+    assert len(res["requests"]) == R
+    if pool != FULL_POOL:
+        assert max(st.balloc.peak_in_use
+                   for st in eng._experts) <= pool < full
+    expert_params, router_params = mixture
+    want_routes = baseline.route(
+        RCFG, router_params,
+        np.stack([p[:PREFIX] for p in prompts]), PREFIX)
+    for r in res["requests"]:
+        assert r.expert == want_routes[r.uid], (seed, r.uid)
+        want = _oracle(mixture, prompts[r.uid], r.expert, n_new[r.uid])
+        np.testing.assert_array_equal(
+            np.asarray(r.tokens), want,
+            err_msg=f"seed {seed} uid {r.uid} pool {pool}")
+    for st in eng._experts:                   # no leaks, trial after trial
+        assert st.balloc.n_in_use == 0 and st.alloc.n_free == lanes
+
+
+# ---------------------------------------------------------------------------
+# Non-pad-safe archs: exact-length prefill fallback (SSM / xLSTM)
+# ---------------------------------------------------------------------------
+_NPS_BASE = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                 vocab_size=128, ffn_type="gelu", loss_chunk=32,
+                 compute_dtype="float32", param_dtype="float32")
+SSM_CFG = ModelConfig(name="srv-ssm", stages=((("mamba2",), 2),),
+                      ssm_headdim=32, ssm_state=16, **_NPS_BASE)
+XLSTM_CFG = ModelConfig(name="srv-xlstm", stages=((("slstm",), 2),),
+                        **_NPS_BASE)
+HYBRID_CFG = ModelConfig(name="srv-hybrid", stages=((("attn", "mamba2"), 1),),
+                         ssm_headdim=32, ssm_state=16, **_NPS_BASE)
+
+
+@pytest.mark.parametrize("ecfg", [SSM_CFG, XLSTM_CFG, HYBRID_CFG],
+                         ids=["mamba2", "slstm", "hybrid"])
+def test_non_pad_safe_archs_match_baseline(mixture, ecfg):
+    """SSM and xLSTM lane state cannot absorb right-padding: the engine
+    must fall back to exact-length prefill and still match the one-shot
+    baseline token-for-token (the hybrid case also exercises paged
+    full-attention KV next to recurrent lane state in one cache tree)."""
+    _, router_params = mixture
+    key = jax.random.PRNGKey(11)
+    expert_params = [modellib.init_params(jax.random.fold_in(key, e), ecfg)
+                     for e in range(E)]
+    mix = (expert_params, router_params)
+    rng = np.random.default_rng(12)
+    lens = rng.integers(PREFIX, 30, size=5)           # ragged: forces fallback
+    prompts = [rng.integers(0, ecfg.vocab_size, size=l).astype(np.int32)
+               for l in lens]
+    n_new = rng.integers(1, 6, size=5)
+    eng = _engine(mix, lanes=2, ecfg=ecfg)
+    assert not eng.pad_safe
+    for i in range(5):
+        eng.submit(prompts[i], int(n_new[i]), arrival_tick=i // 2)
+    res = eng.run()
+    assert len(res["requests"]) == 5
+    for r in res["requests"]:
+        want = _oracle(mix, prompts[r.uid], r.expert, int(n_new[r.uid]),
+                       ecfg=ecfg)
+        np.testing.assert_array_equal(np.asarray(r.tokens), want)
