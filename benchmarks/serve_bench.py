@@ -6,22 +6,30 @@ across >= 2 experts.  The baseline serves each expert group serially and
 decodes every request to the group maximum; the engine keeps a fixed
 number of decode lanes per expert full, admitting queued requests in
 batched prefills as lanes free up, with full-attention KV in the paged
-block pool.  Both paths are greedy and must produce byte-identical
-tokens — the bench asserts that, then compares useful-token throughput
-and reports the paged-cache memory footprint (HBM bytes per lane vs the
+block pool.  Both paths must produce byte-identical tokens — greedy by
+default, or ``--mode sampled`` for a temperature/top-k/top-p workload
+with a shared stop-token set (early stops free engine lanes mid-flight,
+while the serial path still decodes each group to its maximum and throws
+the surplus away — exactly the waste continuous batching reclaims).  The
+bench asserts identity, then compares useful-token throughput and
+reports the paged-cache memory footprint (HBM bytes per lane vs the
 dense ``lanes * max_len`` slab) and the admission prefill-call count.
 
 Both paths are warmed first (same shapes as the timed run) so jit compile
 time is excluded.  The model is sized so per-step compute, not dispatch
-overhead, dominates — wasted lane-tokens then cost real wall time, which
-is exactly what continuous batching reclaims.
+overhead, dominates — wasted lane-tokens then cost real wall time.
 
   PYTHONPATH=src python benchmarks/serve_bench.py
-  PYTHONPATH=src python benchmarks/serve_bench.py --smoke   # CI gate
+  PYTHONPATH=src python benchmarks/serve_bench.py --mode sampled
+  PYTHONPATH=src python benchmarks/serve_bench.py --smoke \
+      --json BENCH_serve.json                             # CI gate
 
-``--smoke`` shrinks the models/workload so the token-identity gate (plus
-pool-pressure coverage) runs in CI on every push; the speedup exit check
-is skipped there because tiny models are dispatch-bound.
+``--smoke`` shrinks the models/workload so the token-identity gates
+(greedy under pool pressure, batched-admission prefill budget, AND a
+sampled + early-stop gate) run in CI on every push; the speedup exit
+check is skipped there because tiny models are dispatch-bound.  The
+``--json`` report follows the ``BENCH_serve/v1`` schema, persisted as a
+CI artifact so the perf trajectory accumulates.
 """
 from __future__ import annotations
 
@@ -37,7 +45,8 @@ from repro.configs.base import ModelConfig
 from repro.core import router as routerlib
 from repro.data import DataConfig, SyntheticCorpus
 from repro.models import model as modellib
-from repro.serving import EngineConfig, MixtureServeEngine, baseline
+from repro.serving import (EngineConfig, MixtureServeEngine, SamplingParams,
+                           baseline)
 from repro.serving import cache as cachelib
 
 EXPERT = ModelConfig(name="bench-expert", n_layers=4, d_model=256, n_heads=8,
@@ -83,10 +92,22 @@ def main() -> int:
                     help="KV pool blocks per expert "
                          "(0 = lanes*max_len/block_size, i.e. no pressure)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mode", choices=["greedy", "sampled"], default="greedy",
+                    help="sampled: temperature/top-k/top-p decoding plus a "
+                         "random stop-token set (early-stop workload)")
+    ap.add_argument("--temperature", type=float, default=0.8,
+                    help="sampled-mode temperature")
+    ap.add_argument("--top-k", type=int, default=32)
+    ap.add_argument("--top-p", type=float, default=0.95)
+    ap.add_argument("--sample-seed", type=int, default=0)
+    ap.add_argument("--n-stops", type=int, default=-1,
+                    help="random stop-token ids shared by all requests "
+                         "(-1: vocab/16 in sampled mode, 0 in greedy)")
     ap.add_argument("--json", default=None, help="write results to this file")
     ap.add_argument("--smoke", action="store_true",
-                    help="small CI workload: identity gate incl. pool "
-                         "pressure, no speedup exit check")
+                    help="small CI workload: identity gates (greedy pool "
+                         "pressure, admission budget, sampled early-stop), "
+                         "no speedup exit check")
     ap.add_argument("--no-check", action="store_true",
                     help="skip the engine-beats-baseline exit check")
     args = ap.parse_args()
@@ -113,17 +134,30 @@ def main() -> int:
         * args.block_size                 # round lane budget up to blocks
     prefix_len = args.prompt_len
 
+    # ---- generation recipe (shared by both paths) -------------------------
+    sampling = SamplingParams(
+        temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
+        seed=args.sample_seed) if args.mode == "sampled" else SamplingParams()
+    n_stops = args.n_stops if args.n_stops >= 0 else (
+        ecfg.vocab_size // 16 if args.mode == "sampled" else 0)
+    stop_tokens = frozenset(
+        int(t) for t in rng.choice(ecfg.vocab_size, size=n_stops,
+                                   replace=False)) if n_stops else frozenset()
+
     # ---- baseline: old serial per-group path -----------------------------
-    # warm every shape the timed run will hit (per-group prefill + decode)
+    # warm every shape the timed run will hit (per-group prefill + decode
+    # + the per-group-width sampler when sampling)
     eids = baseline.route(rcfg, router_params, prompts, prefix_len)
     for e in np.unique(eids):
         n_group = int((eids == e).sum())
         baseline.generate(ecfg, expert_params[int(e)],
                           jnp.asarray(prompts[:n_group]), 2,
-                          cache_len=max_len)
+                          cache_len=max_len, sampling=sampling,
+                          uids=np.arange(n_group))
     serial = baseline.serve_serial(ecfg, rcfg, expert_params,
                                    router_params, prompts, n_new,
-                                   prefix_len=prefix_len, cache_len=max_len)
+                                   prefix_len=prefix_len, cache_len=max_len,
+                                   sampling=sampling, stop_tokens=stop_tokens)
 
     # ---- engine: continuous batching over the paged pool ------------------
     eng = MixtureServeEngine(
@@ -134,9 +168,11 @@ def main() -> int:
                      block_size=args.block_size,
                      pool_blocks=args.blocks_per_expert))
     # warmup: compile every admission batch width the timed run can hit
-    # (routing-independent — see MixtureServeEngine.warmup)
-    eng.warmup(args.prompt_len)
-    timed = [eng.submit(prompts[i], int(n_new[i]), arrival_tick=eng.tick)
+    # (routing-independent — see MixtureServeEngine.warmup); greedy mode
+    # skips the sampled warmup pass it would never use
+    eng.warmup(args.prompt_len, sampled=args.mode == "sampled")
+    timed = [eng.submit(prompts[i], int(n_new[i]), sampling=sampling,
+                        stop_tokens=stop_tokens, arrival_tick=eng.tick)
              for i in range(args.requests)]  # timed: all arrive at once
     uid0 = timed[0].uid
     res = eng.run()
@@ -151,10 +187,17 @@ def main() -> int:
     speedup = res["tokens_per_s"] / serial["tokens_per_s"]
     dense = dense_slab_bytes(ecfg, args.lanes, max_len)
     report = {
+        "schema": "BENCH_serve/v1",
+        "mode": args.mode,
         "workload": {"requests": args.requests, "experts": args.experts,
                      "lanes": args.lanes, "prompt_len": args.prompt_len,
                      "max_len": max_len,
-                     "new_tokens": [int(x) for x in n_new]},
+                     "new_tokens": [int(x) for x in n_new],
+                     "sampling": {"temperature": sampling.temperature,
+                                  "top_k": sampling.top_k,
+                                  "top_p": sampling.top_p,
+                                  "seed": sampling.seed},
+                     "n_stop_tokens": len(stop_tokens)},
         "serial": {"wall_s": round(serial["wall_s"], 3),
                    "tokens_per_s": round(serial["tokens_per_s"], 1),
                    "useful_tokens": serial["useful_tokens"],
@@ -162,6 +205,7 @@ def main() -> int:
         "engine": {"wall_s": round(res["wall_s"], 3),
                    "tokens_per_s": round(res["tokens_per_s"], 1),
                    "useful_tokens": res["useful_tokens"],
+                   "early_stops": res["early_stops"],
                    "occupancy": round(res["occupancy"], 3),
                    "ticks": res["ticks"],
                    "prefill_calls": res["prefill_calls"]},
@@ -174,16 +218,21 @@ def main() -> int:
         "speedup": round(speedup, 2),
         "tokens_identical": not mismatches,
     }
-    print(json.dumps(report, indent=1))
-    if args.json:
-        with open(args.json, "w") as f:
-            json.dump(report, f, indent=1)
+    def emit(code: int) -> int:
+        """Print/persist the report (CI keeps it as BENCH_serve.json)."""
+        print(json.dumps(report, indent=1))
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(report, f, indent=1)
+        return code
+
     if mismatches:
         print(f"FAIL: token mismatch on requests {mismatches[:8]}")
-        return 1
+        return emit(1)
     print(f"engine {res['tokens_per_s']:.1f} tok/s vs serial "
           f"{serial['tokens_per_s']:.1f} tok/s -> {speedup:.2f}x "
-          f"({serial['wasted_tokens']} wasted baseline tokens reclaimed); "
+          f"({serial['wasted_tokens']} wasted baseline tokens reclaimed, "
+          f"{res['early_stops']} early stops); "
           f"KV {res['kv_bytes_per_lane']} B/lane vs dense "
           f"{dense // args.lanes} B/lane, "
           f"{res['prefill_calls']} prefill calls for {args.requests} requests")
@@ -197,10 +246,16 @@ def main() -> int:
                          prefix_len=prefix_len,
                          min_prefill_bucket=args.prompt_len,
                          block_size=args.block_size))
-        eng2.warmup(args.prompt_len)
+        eng2.warmup(args.prompt_len, sampled=False)
         # uniform budget: lanes then free together, so admission drains
         # `lanes` requests per prefill and the ceil bound is tight
+        # (greedy, no stops: the budget must stay tight, so the reference
+        # is its own greedy serial run, independent of --mode)
         uniform = args.min_new
+        ref2 = baseline.serve_serial(
+            ecfg, rcfg, expert_params, router_params, prompts,
+            np.full(args.requests, uniform), prefix_len=prefix_len,
+            cache_len=max_len)
         reqs = [eng2.submit(prompts[i], uniform, arrival_tick=eng2.tick)
                 for i in range(args.requests)]
         res2 = eng2.run()
@@ -210,20 +265,59 @@ def main() -> int:
                 print(f"FAIL: expert {e} took {st.prefill_calls} prefill "
                       f"calls for {k_e} simultaneous arrivals "
                       f"(bound ceil(k/lanes) = {-(-k_e // args.lanes)})")
-                return 1
-        if any(not np.array_equal(np.asarray(r.tokens),
-                                  serial["tokens"][i][:uniform])
+                return emit(1)
+        if any(not np.array_equal(np.asarray(r.tokens), ref2["tokens"][i])
                for i, r in enumerate(reqs)):
             print("FAIL: full-pool token mismatch")
-            return 1
+            return emit(1)
+
+        # sampled + early-stop gate: same pressured pool, random stop set;
+        # engine must stay token-identical to the serial sampler AND
+        # reclaim lanes/blocks at stop tokens
+        sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                            top_p=args.top_p, seed=args.sample_seed)
+        stops3 = frozenset(int(t) for t in rng.choice(
+            ecfg.vocab_size, size=max(ecfg.vocab_size // 16, 4),
+            replace=False))
+        serial3 = baseline.serve_serial(
+            ecfg, rcfg, expert_params, router_params, prompts, n_new,
+            prefix_len=prefix_len, cache_len=max_len, sampling=sp,
+            stop_tokens=stops3)
+        eng3 = MixtureServeEngine(
+            ecfg, rcfg, expert_params, router_params,
+            EngineConfig(lanes_per_expert=args.lanes, max_len=max_len,
+                         prefix_len=prefix_len,
+                         min_prefill_bucket=args.prompt_len,
+                         block_size=args.block_size,
+                         pool_blocks=args.blocks_per_expert))
+        eng3.warmup(args.prompt_len)
+        reqs3 = [eng3.submit(prompts[i], int(n_new[i]), sampling=sp,
+                             stop_tokens=stops3, arrival_tick=eng3.tick)
+                 for i in range(args.requests)]
+        res3 = eng3.run()
+        bad3 = [i for i, r in enumerate(reqs3)
+                if not np.array_equal(np.asarray(r.tokens),
+                                      serial3["tokens"][i])]
+        report["smoke_sampled"] = {
+            "sampling": {"temperature": sp.temperature, "top_k": sp.top_k,
+                         "top_p": sp.top_p, "seed": sp.seed},
+            "n_stop_tokens": len(stops3),
+            "early_stops": res3["early_stops"],
+            "useful_tokens": res3["useful_tokens"],
+            "tokens_identical": not bad3,
+        }
+        if bad3:
+            print(f"FAIL: sampled-mode token mismatch on requests {bad3[:8]}")
+            return emit(1)
         print("smoke OK: token identity under pool pressure, batched "
               f"admission within budget ({res2['prefill_calls']} prefills "
-              f"for {args.requests} requests)")
-        return 0
+              f"for {args.requests} requests), sampled+early-stop identity "
+              f"({res3['early_stops']} early stops)")
+        return emit(0)
     if not args.no_check and speedup <= 1.0:
         print("FAIL: engine did not beat the serial baseline")
-        return 1
-    return 0
+        return emit(1)
+    return emit(0)
 
 
 if __name__ == "__main__":

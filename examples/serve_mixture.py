@@ -1,15 +1,28 @@
-"""Quickstart: continuous-batching mixture serving.
+"""Quickstart: continuous-batching mixture serving with sampling + streaming.
 
 Builds a tiny 2-expert SmallTalk mixture (random weights — swap in a
-``launch/train.py`` checkpoint via repro.launch.serve for trained ones),
-submits a staggered stream of mixed-length requests, and drives the
-engine: the router ensemble scores each prompt prefix, argmax picks ONE
-expert, and requests join that expert's fixed-lane decode batch as soon
-as a lane frees up — no recompiles, no waiting for the batch to drain.
+``launch/train.py`` checkpoint via repro.launch.serve for trained ones)
+and drives the engine's generation API end to end:
+
+* every request carries a frozen ``SamplingParams`` recipe —
+  ``temperature`` / ``top_k`` / ``top_p`` / ``seed``, with
+  ``temperature=0.0`` meaning exact greedy argmax — plus per-request
+  stop conditions (a ``stop_tokens`` set and ``max_new_tokens``);
+* the router ensemble scores each prompt prefix, argmax picks ONE
+  expert (§2.2), and the request joins that expert's fixed-lane decode
+  batch as soon as a lane and KV pool blocks free up — sampling runs
+  inside the per-expert jitted decode step with counter-based RNG
+  (``fold_in(seed, uid, step)``), so a request's tokens don't depend on
+  lane placement and mixed greedy/sampled batches never recompile;
+* ``engine.stream()`` yields a ``TokenDelta`` per decoded token (request,
+  token, index, done), so callers consume output as it decodes; a stop
+  token ends the request immediately and recycles its KV blocks the same
+  tick (``engine.run()`` is the drain-everything batch alternative).
 
     PYTHONPATH=src python examples/serve_mixture.py
 
-For the full CLI (presets, checkpoints, the old serial baseline):
+For the full CLI (presets, checkpoints, sampling flags, the old serial
+baseline):
 
     PYTHONPATH=src python -m repro.launch.serve --help
 """
@@ -24,7 +37,7 @@ from repro.configs.base import ModelConfig
 from repro.core import router as routerlib
 from repro.data import DataConfig, SyntheticCorpus
 from repro.models import model as modellib
-from repro.serving import EngineConfig, MixtureServeEngine
+from repro.serving import EngineConfig, MixtureServeEngine, SamplingParams
 
 
 def main() -> None:
@@ -46,24 +59,35 @@ def main() -> None:
         ecfg, rcfg, expert_params, router_params,
         EngineConfig(lanes_per_expert=4, max_len=96, prefix_len=16))
 
-    # 3. a staggered stream of requests with mixed prompt/completion lengths
+    # 3. a staggered stream of requests: mixed prompt/completion lengths,
+    #    mixed recipes (greedy + sampled), and per-request stop tokens
     corpus = SyntheticCorpus(DataConfig(vocab_size=256, seq_len=64,
                                         n_domains=n_experts))
     prompts, _ = corpus.sequences(np.arange(12))
     rng = np.random.default_rng(0)
+    recipes = [
+        SamplingParams(),                                       # greedy
+        SamplingParams(temperature=0.7, top_k=40, seed=1),
+        SamplingParams(temperature=1.0, top_p=0.9, seed=2),
+    ]
     for i in range(12):
         engine.submit(prompts[i, :int(rng.integers(16, 48))],
                       max_new_tokens=int(rng.integers(4, 32)),
-                      arrival_tick=i // 3)        # 3 arrivals per tick
-
-    # 4. drive it (engine.step() works too, for one tick at a time)
-    res = engine.run()
-    print(f"served {len(res['requests'])} requests in {res['ticks']} ticks: "
-          f"{res['useful_tokens']} tokens at {res['tokens_per_s']:.1f} tok/s, "
-          f"lane occupancy {res['occupancy']:.2f}")
-    for r in res["requests"]:
-        print(f"  req{r.uid}: expert {r.expert}, prompt {len(r.prompt)} tok, "
-              f"+{len(r.tokens)} new, queued {r.queue_ticks} ticks")
+                      sampling=recipes[i % len(recipes)],
+                      stop_tokens={0, 1},          # ids that end a sequence
+                      arrival_tick=i // 3)         # 3 arrivals per tick
+    # 4. stream tokens as they decode (engine.run() drains in batch mode)
+    n_tokens = 0
+    for delta in engine.stream():
+        n_tokens += 1
+        if delta.done:
+            r = delta.request
+            print(f"req{r.uid}: expert {r.expert}, "
+                  f"T={r.sampling.temperature}, prompt {len(r.prompt)} tok, "
+                  f"+{len(r.tokens)}/{r.max_new_tokens} new "
+                  f"({r.finish_reason}, queued {r.queue_ticks} ticks): "
+                  f"{r.tokens[:8]}{'...' if len(r.tokens) > 8 else ''}")
+    print(f"streamed {n_tokens} tokens over {engine.tick} ticks")
 
 
 if __name__ == "__main__":

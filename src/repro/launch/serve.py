@@ -6,12 +6,16 @@ prefix with all E tiny routers, ``argmax`` (no balancing), then run ONLY
 the selected expert — 1/E of mixture parameters active, router overhead
 <3% FLOPs.  The engine keeps each expert's fixed decode lanes full by
 admitting and evicting requests mid-decode (``--baseline`` runs the old
-one-shot serial per-group loop instead, for comparison).
+one-shot serial per-group loop instead, for comparison).  Generation is
+controlled per request by ``SamplingParams`` — ``--temperature`` /
+``--top-k`` / ``--top-p`` / ``--sample-seed`` (temperature 0 = greedy)
+— and optional ``--stop-tokens`` ids that end a sequence early and hand
+its KV blocks to the next queued request the same tick.
 
 Usage (demo on synthetic prompts with randomly-initialized weights, or on
 checkpoints produced by launch/train.py):
   PYTHONPATH=src python -m repro.launch.serve --preset tiny --requests 8 \
-      --ckpt results/train
+      --ckpt results/train --temperature 0.8 --top-k 40 --stop-tokens 0,1
 """
 from __future__ import annotations
 
@@ -26,7 +30,8 @@ from repro.core import router as routerlib
 from repro.data import SyntheticCorpus
 from repro.launch.train import PRESETS
 from repro.models import model as modellib
-from repro.serving import EngineConfig, MixtureServeEngine, baseline
+from repro.serving import (EngineConfig, MixtureServeEngine, SamplingParams,
+                           baseline)
 
 
 def build_mixture(preset: str, n_experts: int, ckpt: str | None, seed: int = 0):
@@ -61,11 +66,26 @@ def main() -> None:
                          "(0 = lanes*max_len/block_size)")
     ap.add_argument("--arrive-every", type=int, default=2,
                     help="simulated arrival: one request per N ticks")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k highest logits (0 = disabled)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1 = disabled)")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="RNG root; tokens are a pure function of "
+                         "(seed, request uid, step)")
+    ap.add_argument("--stop-tokens", default="",
+                    help="comma-separated token ids that end a request "
+                         "early (the stop token is kept)")
     ap.add_argument("--ckpt", default=None,
                     help="directory from launch/train.py (else random init)")
     ap.add_argument("--baseline", action="store_true",
                     help="run the old one-shot serial per-group path")
     args = ap.parse_args()
+    sampling = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                              top_p=args.top_p, seed=args.sample_seed)
+    stop_tokens = frozenset(int(t) for t in args.stop_tokens.split(",") if t)
 
     ecfg, rcfg, expert_params, router_params = build_mixture(
         args.preset, args.experts, args.ckpt)
@@ -74,15 +94,17 @@ def main() -> None:
     prompts = prompts[:, :max(args.prefix_len, 8)]
 
     if args.baseline:
-        res = baseline.serve_batch(ecfg, rcfg, expert_params, router_params,
-                                   prompts, prefix_len=args.prefix_len,
-                                   n_new=args.new_tokens)
+        res = baseline.serve_serial(
+            ecfg, rcfg, expert_params, router_params, prompts,
+            np.full(args.requests, args.new_tokens),
+            prefix_len=args.prefix_len, sampling=sampling,
+            stop_tokens=stop_tokens)
         print("routes:", res["routes"].tolist(), " domains:", doms.tolist())
-        print("routing time:", res["route_s"], "s; per-expert:",
-              res["per_expert"])
+        print(f"{res['useful_tokens']} tokens in {res['wall_s']:.2f}s "
+              f"({res['wasted_tokens']} decoded then thrown away)")
         for i in range(min(4, args.requests)):
             print(f"req{i} -> expert {res['routes'][i]}: "
-                  f"{res['tokens'][i][:12].tolist()}")
+                  f"{np.asarray(res['tokens'][i])[:12].tolist()}")
         return
 
     total = prompts.shape[1] + args.new_tokens
@@ -94,14 +116,16 @@ def main() -> None:
                                           block_size=args.block_size,
                                           pool_blocks=args.blocks_per_expert))
     for i in range(args.requests):
-        eng.submit(prompts[i], args.new_tokens,
+        eng.submit(prompts[i], args.new_tokens, sampling=sampling,
+                   stop_tokens=stop_tokens,
                    arrival_tick=i // max(args.arrive_every, 1))
     res = eng.run()
     print(f"{args.requests} requests, {args.experts} experts, "
           f"{args.lanes} lanes: {res['useful_tokens']} tokens in "
           f"{res['wall_s']:.2f}s = {res['tokens_per_s']:.1f} tok/s, "
           f"occupancy {res['occupancy']:.2f}, "
-          f"mean TTFT {res['mean_ttft_s'] * 1e3:.0f}ms")
+          f"mean TTFT {res['mean_ttft_s'] * 1e3:.0f}ms, "
+          f"{res['early_stops']} early stops")
     print(f"paged KV: {eng.pool_blocks} blocks/expert x {args.block_size} "
           f"tokens, {res['kv_bytes_per_lane']} B/lane, "
           f"{res['prefill_calls']} prefill calls")
@@ -110,7 +134,8 @@ def main() -> None:
           " domains:", doms.tolist())
     for r in res["requests"][:4]:
         print(f"req{r.uid} -> expert {r.expert} "
-              f"(queued {r.queue_ticks} ticks): {r.tokens[:12]}")
+              f"(queued {r.queue_ticks} ticks, {r.finish_reason}): "
+              f"{r.tokens[:12]}")
 
 
 if __name__ == "__main__":

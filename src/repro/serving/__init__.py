@@ -2,13 +2,19 @@
 
 :class:`MixtureServeEngine` is the production path: router-scored
 batched admission into per-expert fixed-lane decode batches over a paged
-block-pool KV cache (:mod:`repro.serving.cache`).
-:mod:`repro.serving.baseline` keeps the original one-shot serial path as
-the numerical oracle and benchmark baseline.
+block-pool KV cache (:mod:`repro.serving.cache`), with per-request
+:class:`SamplingParams` (greedy by default) and stop-token conditions
+sampled inside the jitted decode step (:mod:`repro.serving.sampling`)
+and a streaming interface (:meth:`MixtureServeEngine.stream`) yielding
+:class:`TokenDelta` records as tokens decode.
+:mod:`repro.serving.baseline` keeps the original one-shot serial path —
+extended with the identical sampler — as the numerical oracle and
+benchmark baseline.
 """
-from repro.serving.engine import EngineConfig, MixtureServeEngine
+from repro.serving.engine import EngineConfig, MixtureServeEngine, TokenDelta
+from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import (BlockAllocator, Request, RequestQueue,
                                      SlotAllocator)
 
 __all__ = ["BlockAllocator", "EngineConfig", "MixtureServeEngine", "Request",
-           "RequestQueue", "SlotAllocator"]
+           "RequestQueue", "SamplingParams", "SlotAllocator", "TokenDelta"]

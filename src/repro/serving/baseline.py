@@ -1,12 +1,16 @@
 """The original one-shot serving path (serial per-expert groups).
 
 This is the pre-engine demo loop kept as (a) the numerical oracle the
-continuous-batching engine must match token-for-token and (b) the
+continuous-batching engine must match token-for-token — greedy AND
+sampled: :func:`generate` draws non-greedy tokens through the same
+row-wise :mod:`repro.serving.sampling` sampler, keyed by the same
+``(seed, uid, step)`` counters as the engine's lanes — and (b) the
 baseline ``benchmarks/serve_bench.py`` measures against: route the whole
 batch up front, then for each expert group run one prefill + a fixed
 number of decode steps — every request in a group decodes to the group
-maximum even if it asked for fewer tokens, and groups run one after
-another, so lanes sit idle exactly the way continuous batching avoids.
+maximum even if it asked for fewer tokens (stop-token surplus is
+truncated after the fact), and groups run one after another, so lanes
+sit idle exactly the way continuous batching avoids.
 """
 from __future__ import annotations
 
@@ -20,6 +24,8 @@ import numpy as np
 from repro.core import assignment as asg
 from repro.core import router as routerlib
 from repro.models import model as modellib
+from repro.serving import sampling as samplib
+from repro.serving.sampling import SamplingParams, truncate_at_stop
 
 
 @functools.lru_cache(maxsize=None)
@@ -30,8 +36,17 @@ def _decode_step(cfg):
 
 
 def generate(cfg, params, prompts: jnp.ndarray, n_new: int,
-             cache_len: int | None = None) -> np.ndarray:
-    """Batched greedy prefill + decode loop for one expert.
+             cache_len: int | None = None, *,
+             sampling: SamplingParams | None = None,
+             uids=None) -> np.ndarray:
+    """Batched prefill + decode loop for one expert.
+
+    Greedy by default (``sampling=None`` or ``temperature=0`` keep the
+    historical raw-argmax path, bit for bit).  With a non-greedy
+    ``sampling``, every row draws token ``t`` through the shared
+    counter-based sampler with key ``fold_in(PRNGKey(seed), uids[row])``
+    — pass the engine's request uids to reproduce its tokens exactly
+    (``uids`` defaults to ``0..B-1``).
 
     ``cache_len`` pads the KV budget beyond the required ``S + n_new``
     (extra slots are position-masked, so logits are unchanged); the bench
@@ -40,10 +55,28 @@ def generate(cfg, params, prompts: jnp.ndarray, n_new: int,
     B, S = prompts.shape
     cache_len = cache_len if cache_len else S + n_new
     assert cache_len >= S + n_new, (cache_len, S, n_new)
+    greedy = sampling is None or sampling.greedy
+    if not greedy:
+        uids = np.arange(B) if uids is None else np.asarray(uids)
+        assert uids.shape == (B,), (uids.shape, B)
+        keys = np.stack([samplib.request_key(sampling.seed, int(u))
+                         for u in uids])
+        temps = np.full(B, sampling.temperature, np.float32)
+        topks = np.full(B, sampling.top_k, np.int32)
+        topps = np.full(B, sampling.top_p, np.float32)
+        sample = samplib.sample_tokens_jit
+
+        def draw(lg, t):                          # token counter t, all rows
+            return sample(lg, keys, np.full(B, t, np.int32),
+                          temps, topks, topps)[:, None]
+    else:
+        def draw(lg, t):
+            return jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+
     logits, caches = modellib.prefill(params, cfg, {"tokens": prompts},
                                       cache_len=cache_len)
     outs = []
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    tok = draw(logits, 0)
     step = _decode_step(cfg)
     for t in range(n_new):
         outs.append(np.asarray(tok[:, 0]))
@@ -53,8 +86,21 @@ def generate(cfg, params, prompts: jnp.ndarray, n_new: int,
             "tokens": tok,
             "positions": jnp.full((B, 1), S + t, jnp.int32),
             "cache_index": jnp.int32(S + t)}, caches)
-        tok = jnp.argmax(lg[:, 0], -1)[:, None].astype(jnp.int32)
+        tok = draw(lg[:, 0], t + 1)
     return np.stack(outs, 1)                      # (B, n_new)
+
+
+def generate_request(cfg, params, prompt, n_new: int, *,
+                     sampling: SamplingParams | None = None, uid: int = 0,
+                     stop_tokens=(), cache_len: int | None = None) -> np.ndarray:
+    """One-request oracle for an engine Request: decode ``n_new`` tokens
+    with the request's sampling recipe and uid, then truncate at the
+    first stop token (kept) — exactly the ragged sequence the engine's
+    early-stop path emits."""
+    prompt = np.asarray(prompt, np.int32).reshape(-1)
+    toks = generate(cfg, params, jnp.asarray(prompt[None]), n_new, cache_len,
+                    sampling=sampling, uids=np.array([uid]))[0]
+    return truncate_at_stop(toks, stop_tokens)
 
 
 def route(rcfg, router_params, prompts: np.ndarray, prefix_len: int) -> np.ndarray:
@@ -86,17 +132,23 @@ def serve_batch(ecfg, rcfg, expert_params: list, router_params,
 
 def serve_serial(ecfg, rcfg, expert_params: list, router_params,
                  prompts: np.ndarray, n_new: np.ndarray, *,
-                 prefix_len: int, cache_len: int | None = None) -> dict:
+                 prefix_len: int, cache_len: int | None = None,
+                 sampling: SamplingParams | None = None,
+                 stop_tokens=(), uids=None) -> dict:
     """The old path on a mixed-completion-length workload.
 
-    Per-request token budgets are honoured the only way the one-shot loop
-    can: each expert group decodes to its *maximum* requested length and
-    the surplus is thrown away.  Returns per-request ragged token lists
-    plus the wasted-token count (the quantity continuous batching
-    reclaims).  Prompts must share one length — the old path re-pads
-    whole groups and cannot mix prompt lengths.
+    Per-request token budgets and stop conditions are honoured the only
+    way the one-shot loop can: each expert group decodes to its *maximum*
+    requested length and the surplus — budget spread and everything past
+    a stop token — is thrown away.  Returns per-request ragged token
+    lists plus the wasted-token count (the quantity continuous batching
+    reclaims).  ``sampling``/``uids`` apply the shared counter-based
+    sampler per row (pass the engine's uids for token-identical output);
+    prompts must share one length — the old path re-pads whole groups and
+    cannot mix prompt lengths.
     """
     n_new = np.asarray(n_new, np.int64)
+    uids = np.arange(len(prompts)) if uids is None else np.asarray(uids)
     t0 = time.time()
     eids = route(rcfg, router_params, prompts, prefix_len)
     tokens: list[np.ndarray | None] = [None] * len(prompts)
@@ -105,12 +157,13 @@ def serve_serial(ecfg, rcfg, expert_params: list, router_params,
         sel = np.nonzero(eids == e)[0]
         n_max = int(n_new[sel].max())
         outs = generate(ecfg, expert_params[int(e)], jnp.asarray(prompts[sel]),
-                        n_max, cache_len=cache_len)
+                        n_max, cache_len=cache_len,
+                        sampling=sampling, uids=uids[sel])
         for row, i in enumerate(sel):
-            tokens[i] = outs[row, :n_new[i]]
-            wasted += n_max - int(n_new[i])
+            tokens[i] = truncate_at_stop(outs[row, :n_new[i]], stop_tokens)
+            wasted += n_max - len(tokens[i])
     wall = time.time() - t0
-    useful = int(n_new.sum())
+    useful = sum(len(t) for t in tokens)
     return {"tokens": tokens, "routes": eids, "wall_s": wall,
             "useful_tokens": useful, "wasted_tokens": wasted,
             "tokens_per_s": useful / max(wall, 1e-9)}

@@ -26,12 +26,27 @@ fall back to exact-length one-request prefills.
 
 Every tick runs ONE jitted ``decode_step`` per expert with active lanes,
 over stable shapes ``(lanes, 1)`` — finished sequences are evicted and
-queued requests admitted between ticks without ever recompiling.  Decode
-is greedy and matches the one-shot :func:`repro.serving.baseline.generate`
-token-for-token: the first token comes from the prefill logits, each
-decode feeds the previous token at its lane's own position (per-slot
-``positions`` / ``cache_index`` vectors plus ``block_tables``, see
-``models/model.decode_step``).
+queued requests admitted between ticks without ever recompiling.  The
+next token is drawn *inside* that jit by the shared row-wise sampler
+(:mod:`repro.serving.sampling`): per-lane ``temperature`` / ``top_k`` /
+``top_p`` arrays plus a counter-based RNG key per lane
+(``fold_in(fold_in(PRNGKey(seed), uid), step)``) are plain traced
+operands, so any mix of greedy and sampled requests shares one compiled
+program and a request's tokens are invariant to which lane it lands in.
+Greedy requests (``temperature=0``, the default) still match the
+one-shot :func:`repro.serving.baseline.generate` token-for-token, and
+sampled requests match ``baseline.generate`` run with the same
+``SamplingParams`` and uid — the first token comes from the prefill
+logits, each decode feeds the previous token at its lane's own position
+(per-slot ``positions`` / ``cache_index`` vectors plus ``block_tables``,
+see ``models/model.decode_step``).
+
+A request ends when it hits its ``max_new_tokens`` budget or emits one
+of its ``stop_tokens`` — early stops free the lane and its KV pool
+blocks the same tick, so a queued request can take them at the next
+admission.  Callers either drive :meth:`MixtureServeEngine.run` for a
+batch result or iterate :meth:`MixtureServeEngine.stream` to consume
+per-token :class:`TokenDelta` records as they decode.
 """
 from __future__ import annotations
 
@@ -49,10 +64,34 @@ from repro.core import assignment as asg
 from repro.core import router as routerlib
 from repro.models import model as modellib
 from repro.serving import cache as cachelib
+from repro.serving import sampling as samplib
+from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import (BlockAllocator, Request, RequestQueue,
                                      SlotAllocator)
 
 PAD_SAFE_KINDS = (cfglib.ATTN, cfglib.ATTN_SHARED)
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenDelta:
+    """One streamed token: request, its value/position, and completion."""
+    request: Request
+    token: int
+    index: int                    # position within request.tokens
+    done: bool                    # True on the request's final token
+    tick: int
+
+
+def bucket_len(n: int, min_bucket: int, max_len: int) -> int:
+    """Prompt-length bucket: ``min_bucket`` doubled until >= n, capped at
+    ``max_len``.  Monotone in ``n``, so admission batches can pad to the
+    largest bucket among their members."""
+    if min_bucket < 1:
+        raise ValueError(f"min_bucket must be >= 1, got {min_bucket}")
+    b = min_bucket
+    while b < n:
+        b *= 2
+    return min(b, max_len)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,17 +113,32 @@ def _jit_fns(ecfg, rcfg, max_len: int):
     Keyed on the (hashable, frozen) configs so fuzz suites building many
     engines reuse one compile cache instead of re-jitting per instance.
     """
-    decode = jax.jit(
-        lambda p, toks, pos, ci, bt, c: modellib.decode_step(
+    def decode_and_sample(p, toks, pos, ci, bt, c, keys, steps, temps,
+                          top_ks, top_ps):
+        logits, nc = modellib.decode_step(
             p, ecfg, {"tokens": toks, "positions": pos, "cache_index": ci,
-                      "block_tables": bt}, c))
+                      "block_tables": bt}, c)
+        return samplib.sample_tokens(logits[:, 0], keys, steps, temps,
+                                     top_ks, top_ps), nc
+
+    def decode_greedy(p, toks, pos, ci, bt, c):
+        # all-greedy ticks skip the sampler entirely (its sort/softmax
+        # work per lane per token is pure waste when every temp is 0);
+        # both programs compile once, so mode flips never recompile
+        logits, nc = modellib.decode_step(
+            p, ecfg, {"tokens": toks, "positions": pos, "cache_index": ci,
+                      "block_tables": bt}, c)
+        return jnp.argmax(logits[:, 0], -1).astype(jnp.int32), nc
+
+    decode = jax.jit(decode_and_sample)
+    decode_g = jax.jit(decode_greedy)
     prefill = jax.jit(
         lambda p, toks, last: modellib.prefill(
             p, ecfg, {"tokens": toks}, cache_len=max_len, last_index=last))
     score = jax.jit(
         lambda rp, toks: routerlib.ensemble_scores(rp, rcfg, toks))
     insert = jax.jit(functools.partial(cachelib.insert_requests, ecfg))
-    return decode, prefill, score, insert
+    return decode, decode_g, prefill, score, insert, samplib.sample_tokens_jit
 
 
 @dataclasses.dataclass
@@ -100,6 +154,12 @@ class _Expert:
     req: list                     # slot -> Request | None
     block_tables: np.ndarray      # (lanes, max_len // block_size) int32
     blocks: list                  # slot -> list[int] reserved pool blocks
+    # per-lane sampling state, fed straight into the jitted decode+sample
+    keys: np.ndarray              # (lanes, 2) uint32 request RNG roots
+    steps: np.ndarray             # (lanes,) int32 next token counter
+    temp: np.ndarray              # (lanes,) float32; 0 = greedy
+    topk: np.ndarray              # (lanes,) int32; 0 = disabled
+    topp: np.ndarray              # (lanes,) float32; 1 = disabled
     n_served: int = 0
     decode_calls: int = 0
     prefill_calls: int = 0
@@ -127,6 +187,9 @@ class MixtureServeEngine:
         self.has_pool = any(k in cachelib.POOL_KINDS
                             for k in ecfg.layer_pattern)
 
+        if eng.min_prefill_bucket < 1:
+            raise ValueError(f"min_prefill_bucket must be >= 1, "
+                             f"got {eng.min_prefill_bucket}")
         L, M, bs = eng.lanes_per_expert, eng.max_len, eng.block_size
         if self.has_pool and M % bs:
             raise ValueError(f"max_len {M} not a multiple of "
@@ -145,17 +208,25 @@ class MixtureServeEngine:
                     tok=np.zeros(L, np.int32), pos=np.zeros(L, np.int32),
                     active=np.zeros(L, bool), req=[None] * L,
                     block_tables=np.full((L, self.lane_blocks), -1, np.int32),
-                    blocks=[[] for _ in range(L)])
+                    blocks=[[] for _ in range(L)],
+                    keys=np.zeros((L, 2), np.uint32),
+                    steps=np.zeros(L, np.int32),
+                    temp=np.zeros(L, np.float32),
+                    topk=np.zeros(L, np.int32),
+                    topp=np.ones(L, np.float32))
             for _ in range(self.n_experts)]
         self.queue = RequestQueue()
         self.tick = 0
         self._uid = 0
         self._t0: float | None = None
-        (self._decode_fn, self._prefill_fn, self._score_fn,
-         self._insert_fn) = _jit_fns(ecfg, rcfg, M)
+        self.last_deltas: list[TokenDelta] = []
+        (self._decode_fn, self._decode_greedy_fn, self._prefill_fn,
+         self._score_fn, self._insert_fn, self._sample_fn) = \
+            _jit_fns(ecfg, rcfg, M)
 
     # -- warmup ------------------------------------------------------------
-    def warmup(self, prompt_len: int | None = None) -> None:
+    def warmup(self, prompt_len: int | None = None, *,
+               sampled: bool = True) -> None:
         """Compile every serving shape up front, off the timed path.
 
         Drives expert 0's admission/decode directly (bypassing routing,
@@ -165,6 +236,8 @@ class MixtureServeEngine:
         shared across experts, so one expert's shapes warm them all.
         ``prompt_len`` selects which prefill bucket to warm (defaults to
         the routing prefix length); call again for other buckets.
+        ``sampled=False`` skips the second, sampled warmup pass — a
+        greedy-only deployment then never compiles the sampler programs.
         """
         pl = min(prompt_len or self.eng.prefix_len, self.eng.max_len - 2)
         L = self.eng.lanes_per_expert
@@ -175,21 +248,36 @@ class MixtureServeEngine:
                        jnp.zeros((self.eng.route_batch, self.eng.prefix_len),
                                  jnp.int32))
         st = self._experts[0]
-        for k in sorted({min(1 << (b - 1).bit_length(), L)
-                         for b in range(1, L + 1)}):
-            for _ in range(k):
-                st.pending.append(Request(uid=-1,
-                                          prompt=np.zeros(pl, np.int32),
-                                          max_new_tokens=2))
-            sink: list[Request] = []
-            while st.pending or st.active.any():
-                self._admit(0, st, sink)
-                self._decode(0, st, sink)
+        # one greedy pass (argmax-only decode program) and one sampled pass
+        # (mixed decode program + per-width sampler) so a live mix of
+        # recipes hits only warm compiles
+        for temp in (0.0, 1.0) if sampled else (0.0,):
+            for k in sorted({min(1 << (b - 1).bit_length(), L)
+                             for b in range(1, L + 1)}):
+                for _ in range(k):
+                    st.pending.append(Request(
+                        uid=-1, prompt=np.zeros(pl, np.int32),
+                        max_new_tokens=2,
+                        sampling=SamplingParams(temperature=temp)))
+                sink: list[Request] = []
+                while st.pending or st.active.any():
+                    self._admit(0, st, sink)
+                    self._decode(0, st, sink)
         self._t0 = None
+        self.last_deltas = []         # don't surface synthetic warmup tokens
 
     # -- request intake ----------------------------------------------------
     def submit(self, prompt, max_new_tokens: int,
+               sampling: SamplingParams | None = None,
+               stop_tokens=(),
                arrival_tick: int | None = None) -> Request:
+        """Queue one generation request; returns its live Request record.
+
+        ``sampling`` defaults to greedy; ``stop_tokens`` is any iterable
+        of token ids that end the sequence early (the stop token is kept
+        as the final emitted token, and the request's KV blocks are freed
+        the same tick).
+        """
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError("empty prompt")
@@ -199,8 +287,17 @@ class MixtureServeEngine:
         if len(prompt) + max_new_tokens > self.eng.max_len:
             raise ValueError(f"prompt {len(prompt)} + {max_new_tokens} new "
                              f"tokens exceeds lane budget {self.eng.max_len}")
+        sampling = SamplingParams() if sampling is None else sampling
+        if not isinstance(sampling, SamplingParams):
+            raise TypeError(f"sampling must be a SamplingParams, "
+                            f"got {type(sampling).__name__}")
+        stop_tokens = frozenset(int(t) for t in stop_tokens)
+        bad = [t for t in stop_tokens if not 0 <= t < self.ecfg.vocab_size]
+        if bad:
+            raise ValueError(f"stop tokens outside vocab: {sorted(bad)}")
         req = Request(uid=self._uid, prompt=prompt,
                       max_new_tokens=max_new_tokens,
+                      sampling=sampling, stop_tokens=stop_tokens,
                       arrival_tick=self.tick if arrival_tick is None
                       else arrival_tick)
         self._uid += 1
@@ -230,10 +327,7 @@ class MixtureServeEngine:
     def _bucket(self, n: int) -> int:
         if not self.pad_safe:
             return n
-        b = self.eng.min_prefill_bucket
-        while b < n:
-            b *= 2
-        return min(b, self.eng.max_len)
+        return bucket_len(n, self.eng.min_prefill_bucket, self.eng.max_len)
 
     def _blocks_needed(self, req: Request) -> int:
         """Pool blocks covering every KV write the request will make.
@@ -275,6 +369,31 @@ class MixtureServeEngine:
         params = self.expert_params[e]
         L = self.eng.lanes_per_expert
         lens = np.array([len(r.prompt) for r, _, _ in batch])
+        # per-request sampling operands for the first token (counter 0);
+        # greedy requests keep a zero key and never touch the RNG
+        keys = np.stack([np.zeros(2, np.uint32) if r.sampling.greedy
+                         else samplib.request_key(r.sampling.seed, r.uid)
+                         for r, _, _ in batch])
+        temps = np.array([r.sampling.temperature for r, _, _ in batch],
+                         np.float32)
+        topks = np.array([r.sampling.top_k for r, _, _ in batch], np.int32)
+        topps = np.array([r.sampling.top_p for r, _, _ in batch], np.float32)
+
+        def first_tokens(logits, idx):
+            """Sample token 0 for batch members ``idx`` from their prefill
+            logits rows (padding rows ride along as greedy no-ops)."""
+            n = len(idx)
+            if not (temps[idx] > 0.0).any():          # all greedy: plain argmax
+                return np.asarray(jnp.argmax(logits[:n], -1))
+            pad = logits.shape[0] - n
+            return np.asarray(self._sample_fn(
+                logits,
+                np.concatenate([keys[idx], np.zeros((pad, 2), np.uint32)]),
+                np.zeros(n + pad, np.int32),
+                np.concatenate([temps[idx], np.zeros(pad, np.float32)]),
+                np.concatenate([topks[idx], np.zeros(pad, np.int32)]),
+                np.concatenate([topps[idx], np.ones(pad, np.float32)])))[:n]
+
         if self.pad_safe:
             # one (K, bucket) prefill for the whole drain: K is the batch
             # width padded to the next power of two (bounded compile count,
@@ -296,7 +415,7 @@ class MixtureServeEngine:
             for i, (_, slot, row) in enumerate(batch):
                 rows[i], slots[i], true[i] = row, slot, lens[i]
             st.caches = self._insert_fn(st.caches, rcache, rows, slots, true)
-            firsts = np.asarray(jnp.argmax(logits[:len(batch)], -1))
+            firsts = first_tokens(logits, np.arange(len(batch)))
         else:
             firsts = np.zeros(len(batch), np.int64)
             for i, (req, slot, row) in enumerate(batch):
@@ -308,7 +427,7 @@ class MixtureServeEngine:
                     st.caches, rcache, row[None],
                     np.full(1, slot, np.int32),
                     np.full(1, lens[i], np.int32))
-                firsts[i] = int(np.argmax(np.asarray(logits[0])))
+                firsts[i] = int(first_tokens(logits, np.array([i]))[0])
 
         for i, (req, slot, row) in enumerate(batch):
             first = int(firsts[i])
@@ -318,17 +437,32 @@ class MixtureServeEngine:
             st.block_tables[slot] = row
             st.tok[slot], st.pos[slot] = first, lens[i]
             st.active[slot], st.req[slot] = True, req
-            if req.max_new_tokens == 1:
+            st.keys[slot] = keys[i]
+            st.steps[slot] = 1
+            st.temp[slot], st.topk[slot], st.topp[slot] = \
+                temps[i], topks[i], topps[i]
+            done = req.max_new_tokens == 1 or first in req.stop_tokens
+            self.last_deltas.append(TokenDelta(
+                request=req, token=first, index=0, done=done, tick=self.tick))
+            if done:
                 self._finish(st, slot, completed)
 
     def _finish(self, st: _Expert, slot: int, completed: list[Request]) -> None:
+        """Retire a lane: stats, then free its KV blocks and slot NOW —
+        the same tick — so the next admission can hand them out."""
         req = st.req[slot]
         req.finish_tick = self.tick
+        req.finish_reason = ("stop_token" if req.tokens
+                             and req.tokens[-1] in req.stop_tokens
+                             else "length")
         req.t_done = time.perf_counter() - self._t0
         st.active[slot] = False
         st.req[slot] = None
         st.tok[slot] = st.pos[slot] = 0
         st.block_tables[slot] = -1
+        st.keys[slot] = 0
+        st.steps[slot] = 0
+        st.temp[slot], st.topk[slot], st.topp[slot] = 0.0, 0, 1.0
         st.balloc.free_n(st.blocks[slot])
         st.blocks[slot] = []
         st.alloc.free(slot)
@@ -341,28 +475,49 @@ class MixtureServeEngine:
         # inactive lanes decode at position -1: every KV slot is masked for
         # them and their writes are clamped to the pool scratch block (or
         # land as -1 markers in lane buffers), so a free lane can ride
-        # along in the fixed-shape batch at zero correctness cost
+        # along in the fixed-shape batch at zero correctness cost (its
+        # sampler params sit at greedy defaults, so no RNG runs for it)
         pos = np.where(st.active, st.pos, -1).astype(np.int32)
-        logits, st.caches = self._decode_fn(
-            self.expert_params[e], jnp.asarray(st.tok[:, None]),
-            jnp.asarray(pos[:, None]), jnp.asarray(pos),
-            jnp.asarray(st.block_tables), st.caches)
+        if (st.temp > 0.0).any():
+            nxt, st.caches = self._decode_fn(
+                self.expert_params[e], jnp.asarray(st.tok[:, None]),
+                jnp.asarray(pos[:, None]), jnp.asarray(pos),
+                jnp.asarray(st.block_tables), st.caches,
+                st.keys, st.steps, st.temp, st.topk, st.topp)
+        else:
+            nxt, st.caches = self._decode_greedy_fn(
+                self.expert_params[e], jnp.asarray(st.tok[:, None]),
+                jnp.asarray(pos[:, None]), jnp.asarray(pos),
+                jnp.asarray(st.block_tables), st.caches)
         st.decode_calls += 1
         st.occupied_lane_steps += int(st.active.sum())
-        nxt = np.asarray(jnp.argmax(logits[:, 0], -1)).astype(np.int32)
+        nxt = np.asarray(nxt).astype(np.int32)
         for slot in np.nonzero(st.active)[0]:
             req = st.req[slot]
-            req.tokens.append(int(nxt[slot]))
-            st.tok[slot] = nxt[slot]
+            tok = int(nxt[slot])
+            req.tokens.append(tok)
+            st.tok[slot] = tok
             st.pos[slot] += 1
-            if len(req.tokens) >= req.max_new_tokens:
+            st.steps[slot] += 1
+            done = (len(req.tokens) >= req.max_new_tokens
+                    or tok in req.stop_tokens)
+            self.last_deltas.append(TokenDelta(
+                request=req, token=tok, index=len(req.tokens) - 1,
+                done=done, tick=self.tick))
+            if done:
                 self._finish(st, int(slot), completed)
 
     # -- main loop ---------------------------------------------------------
     def step(self) -> list[Request]:
-        """One scheduler tick: route arrivals, admit, decode every expert."""
+        """One scheduler tick: route arrivals, admit, decode every expert.
+
+        Returns the requests that finished this tick; the individual
+        tokens it emitted (one :class:`TokenDelta` per token, in emission
+        order) are left in :attr:`last_deltas` until the next step.
+        """
         if self._t0 is None:
             self._t0 = time.perf_counter()
+        self.last_deltas = []
         arrived = self.queue.pop_arrived(self.tick)
         if arrived:
             self._route(arrived)
@@ -372,6 +527,30 @@ class MixtureServeEngine:
             self._decode(e, st, completed)
         self.tick += 1
         return completed
+
+    def _skip_idle_gap(self) -> None:
+        """Fast-forward the tick counter over an empty simulated gap."""
+        nxt = self.queue.next_arrival()
+        if nxt is not None and nxt > self.tick and not any(
+                st.pending or st.active.any() for st in self._experts):
+            self.tick = nxt
+
+    def stream(self):
+        """Drive the engine, yielding one :class:`TokenDelta` per token.
+
+        Deltas arrive in emission order (tick by tick, admissions before
+        decodes); a request's final delta has ``done=True``, after which
+        its lane and KV blocks are already recycled.  New requests may be
+        submitted between deltas; the generator runs until the engine
+        fully drains.
+        """
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        while self.busy:
+            self._skip_idle_gap()
+            self.step()
+            yield from self.last_deltas
+        self._t0 = None               # fresh clock origin for a later run
 
     @property
     def busy(self) -> bool:
@@ -400,11 +579,7 @@ class MixtureServeEngine:
         completed: list[Request] = []
         n_steps = 0
         while self.busy:
-            # fast-forward idle gaps to the next simulated arrival
-            nxt = self.queue.next_arrival()
-            if nxt is not None and nxt > self.tick and not any(
-                    st.pending or st.active.any() for st in self._experts):
-                self.tick = nxt
+            self._skip_idle_gap()     # jump empty gaps to the next arrival
             completed += self.step()
             n_steps += 1
         jax.block_until_ready([st.caches for st in self._experts])
@@ -419,6 +594,8 @@ class MixtureServeEngine:
             "steps": n_steps,              # scheduler iterations actually run
             "wall_s": wall,
             "useful_tokens": useful,
+            "early_stops": sum(r.finish_reason == "stop_token"
+                               for r in completed),
             "tokens_per_s": useful / max(wall, 1e-9),
             "mean_ttft_s": float(np.mean([r.t_first for r in completed]))
             if completed else 0.0,

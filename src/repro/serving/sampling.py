@@ -1,0 +1,131 @@
+"""Sampling contract shared by the serving engine and its oracle.
+
+:class:`SamplingParams` is the per-request generation recipe
+(``temperature`` / ``top_k`` / ``top_p`` / ``seed``; ``temperature=0.0``
+is exact greedy argmax).  Both decode paths — the continuous-batching
+engine's jitted per-expert ``decode_step`` and the one-shot
+:mod:`repro.serving.baseline` oracle — draw tokens through the *same*
+row-wise :func:`sample_tokens`, so sampled decoding stays bit-identical
+between them exactly like greedy always has been.
+
+Randomness is counter-based, never stateful: token ``t`` of request
+``uid`` is sampled with ``fold_in(fold_in(PRNGKey(seed), uid), t)``.
+That makes the stream a pure function of ``(seed, uid, t)`` — which lane
+a request lands in, how many other lanes are active, or how often it got
+evicted/re-bucketed cannot change its tokens, and the per-lane key/step
+arrays are plain traced operands so lane churn never recompiles the
+decode step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# temperature==0 selects the argmax branch; the clamp only keeps the
+# discarded sampled branch finite inside the jitted `where`
+_MIN_TEMP = 1e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Frozen per-request sampling recipe.
+
+    ``temperature=0.0`` (the default) is exact greedy decoding — raw
+    argmax, bit-identical to the historical greedy path.  ``top_k=0``
+    disables top-k filtering, ``top_p=1.0`` disables nucleus filtering;
+    ties at either threshold are kept (deterministically, on both decode
+    paths).  ``seed`` roots the counter-based RNG stream; two requests
+    with equal ``(seed, uid)`` draw identical noise.
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0 (0 disables), got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.seed < 0:
+            raise ValueError(f"seed must be >= 0, got {self.seed}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
+
+
+@functools.lru_cache(maxsize=512)     # seeds are client-supplied: keep bounded
+def _seed_key(seed: int) -> np.ndarray:
+    return np.asarray(jax.random.PRNGKey(seed))
+
+
+def request_key(seed: int, uid: int) -> np.ndarray:
+    """The per-request RNG root ``fold_in(PRNGKey(seed), uid)``.
+
+    Host-side (uint32 ``(2,)``); the engine stores one per lane and the
+    baseline one per batch row, so both fold in the same step counter.
+    """
+    return np.asarray(jax.random.fold_in(_seed_key(seed), max(int(uid), 0)))
+
+
+def _sample_row(logits, key, step, temp, top_k, top_p):
+    """Draw one token from one row of logits; greedy when ``temp == 0``.
+
+    Filtering order matches the common convention: scale by temperature,
+    mask to the top-k logits, then to the top-p (nucleus) mass; ties at
+    either threshold are kept.  All params are traced scalars, so one
+    compiled program serves every (greedy or sampled) lane mix.
+    """
+    v = logits.shape[-1]
+    greedy_tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    scaled = (logits / jnp.maximum(temp, _MIN_TEMP)).astype(jnp.float32)
+    desc = -jnp.sort(-scaled)                       # descending
+    k_eff = jnp.where((top_k <= 0) | (top_k > v), v, top_k)
+    kth = desc[jnp.clip(k_eff - 1, 0, v - 1)]
+    kept = jnp.where(scaled >= kth, scaled, -jnp.inf)
+    probs = jax.nn.softmax(kept)
+    pdesc = -jnp.sort(-probs)
+    cum = jnp.cumsum(pdesc)
+    # the nucleus: smallest prefix with mass >= top_p (crossing token kept)
+    in_nucleus = (cum - pdesc) < top_p
+    thr = jnp.min(jnp.where(in_nucleus, pdesc, jnp.inf))
+    final = jnp.where(probs >= thr, kept, -jnp.inf)
+    tok = jax.random.categorical(jax.random.fold_in(key, step), final)
+    return jnp.where(temp > 0.0, tok.astype(jnp.int32), greedy_tok)
+
+
+def sample_tokens(logits, keys, steps, temps, top_ks, top_ps):
+    """Vectorized row-wise sampler: ``(B, V)`` logits -> ``(B,)`` int32.
+
+    ``keys`` are per-row uint32 ``(B, 2)`` request roots (see
+    :func:`request_key`), ``steps`` the per-row token counters; rows are
+    independent, so the same request samples identical tokens at any
+    batch width or lane position.
+    """
+    return jax.vmap(_sample_row)(logits, keys, steps, temps, top_ks, top_ps)
+
+
+# one jitted sampler shared by the engine and the baseline oracle: its
+# trace depends only on array shapes, so separate per-config caches would
+# just duplicate compiles
+sample_tokens_jit = jax.jit(sample_tokens)
+
+
+def truncate_at_stop(tokens, stop_tokens) -> np.ndarray:
+    """Cut a token array after the first stop token (which is kept).
+
+    The oracle decodes a request's full budget; the engine stops at the
+    stop token — this maps the former onto the latter for comparison.
+    """
+    tokens = np.asarray(tokens)
+    if not stop_tokens:
+        return tokens
+    hits = np.nonzero(np.isin(tokens, list(stop_tokens)))[0]
+    return tokens[:hits[0] + 1] if hits.size else tokens

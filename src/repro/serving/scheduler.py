@@ -13,23 +13,31 @@ import dataclasses
 
 import numpy as np
 
+from repro.serving.sampling import SamplingParams
+
 
 @dataclasses.dataclass
 class Request:
     """One generation request and its lifecycle stats.
 
-    The engine fills in everything below ``arrival_tick``: the routed
-    expert, the greedily decoded tokens (the first one comes from the
-    prefill logits, like the one-shot ``generate`` path), and tick/wall
-    timestamps for latency accounting.
+    ``sampling`` is the frozen per-request recipe (default: greedy) and
+    ``stop_tokens`` the set of token ids that end the sequence early (the
+    stop token itself is kept as the final token).  The engine fills in
+    everything below ``arrival_tick``: the routed expert, the decoded
+    tokens (the first one comes from the prefill logits, like the
+    one-shot ``generate`` path), the finish reason (``"stop_token"`` or
+    ``"length"``), and tick/wall timestamps for latency accounting.
     """
     uid: int
     prompt: np.ndarray                  # (L,) int32
     max_new_tokens: int
+    sampling: SamplingParams = SamplingParams()
+    stop_tokens: frozenset = frozenset()
     arrival_tick: int = 0
 
     expert: int = -1
     tokens: list = dataclasses.field(default_factory=list)
+    finish_reason: str = ""             # "stop_token" | "length" once done
     route_tick: int = -1                # tick the router scored the prefix
     admit_tick: int = -1                # tick a decode lane was acquired
     finish_tick: int = -1
@@ -40,6 +48,7 @@ class Request:
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
         if self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        self.stop_tokens = frozenset(int(t) for t in self.stop_tokens)
 
     @property
     def done(self) -> bool:
@@ -47,7 +56,13 @@ class Request:
 
     @property
     def queue_ticks(self) -> int:
-        """Ticks spent waiting between arrival and lane admission."""
+        """Ticks spent waiting between arrival and lane admission.
+
+        0 until a lane is actually acquired — ``admit_tick`` is still the
+        -1 sentinel before then and the difference would be garbage.
+        """
+        if self.admit_tick < 0:
+            return 0
         return self.admit_tick - self.arrival_tick
 
 

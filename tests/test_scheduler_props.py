@@ -1,16 +1,19 @@
 """Property/fuzz suite for the host-side serving schedulers.
 
 Allocator invariants under random alloc/free interleavings (never
-double-allocate, never leak, unowned frees raise) and RequestQueue
-arrival-ordering (a late-submitted early arrival pops first).  Each
-property runs twice: a hypothesis-driven version (skipped on minimal
-environments via ``_hypothesis_compat``) and a seeded-rng version that
-always runs, so the invariants stay covered even without hypothesis.
+double-allocate, never leak, unowned frees raise), RequestQueue
+arrival-ordering (a late-submitted early arrival pops first), and the
+prompt-length bucketing function (power-of-two ladder, monotone,
+capped).  Each property runs twice: a hypothesis-driven version (skipped
+on minimal environments via ``_hypothesis_compat``) and a seeded-rng
+version that always runs, so the invariants stay covered even without
+hypothesis.
 """
 import numpy as np
 import pytest
 
 from _hypothesis_compat import given, settings, st
+from repro.serving.engine import bucket_len
 from repro.serving.scheduler import (BlockAllocator, Request, RequestQueue,
                                      SlotAllocator)
 
@@ -117,6 +120,32 @@ def test_prop_request_queue_ordering(arrivals):
 
 
 # ---------------------------------------------------------------------------
+# Prompt-length bucketing: pow2 ladder, monotone, bounded
+# ---------------------------------------------------------------------------
+def _check_bucket(n, min_bucket, max_len):
+    b = bucket_len(n, min_bucket, max_len)
+    assert b <= max_len, "bucket exceeds the lane budget"
+    if n <= max_len:
+        assert b >= n, "bucket cannot hold the prompt"
+    # the result is min_bucket * 2^j for some j, or the max_len cap
+    if b != max_len:
+        q = b
+        while q > min_bucket and q % 2 == 0:
+            q //= 2
+        assert q == min_bucket, (n, min_bucket, max_len, b)
+    # monotone: one more token never lands in a smaller bucket
+    assert bucket_len(n + 1, min_bucket, max_len) >= b
+    # idempotent: a bucket-sized prompt keeps its bucket
+    assert bucket_len(b, min_bucket, max_len) == b
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(1, 512), st.integers(1, 64), st.integers(1, 600))
+def test_prop_bucket_len(n, min_bucket, max_len):
+    _check_bucket(n, min_bucket, max_len)
+
+
+# ---------------------------------------------------------------------------
 # Seeded-rng versions: always run, same invariants
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("seed", range(8))
@@ -136,6 +165,20 @@ def test_fuzz_request_queue(seed):
     rng = np.random.default_rng(200 + seed)
     _drive_queue([int(t) for t in rng.integers(0, 15,
                                                size=rng.integers(0, 40))])
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_fuzz_bucket_len(seed):
+    rng = np.random.default_rng(300 + seed)
+    for _ in range(50):
+        _check_bucket(int(rng.integers(1, 513)), int(rng.integers(1, 65)),
+                      int(rng.integers(1, 601)))
+
+
+def test_bucket_len_rejects_degenerate_min_bucket():
+    for mb in (0, -4):
+        with pytest.raises(ValueError):
+            bucket_len(5, mb, 64)       # would loop forever otherwise
 
 
 # ---------------------------------------------------------------------------
@@ -178,3 +221,37 @@ def test_block_allocator_atomic_under_shortage():
     assert a.alloc_n(1) is not None and a.n_free == 0
     a.free_n(first)
     assert a.n_free == 2
+
+
+def test_alloc_n_failed_allocation_rolls_back_fully():
+    """A failed alloc_n must leave NO trace: identical free-list content
+    and order (a partial grab that leaked even one block would shrink the
+    pool until the engine deadlocks), untouched ownership, and the next
+    exact-fit allocation must still succeed."""
+    a = BlockAllocator(8)
+    held = a.alloc_n(3)
+    free_before = list(a._free)
+    owned_before = set(a._owned)
+    peak_before = a.peak_in_use
+    for ask in (6, 7, 100):             # all exceed the 5 free blocks
+        assert a.alloc_n(ask) is None
+        assert a._free == free_before, "failed alloc_n mutated the free list"
+        assert a._owned == owned_before
+        assert a.n_in_use == 3 and a.peak_in_use == peak_before
+    got = a.alloc_n(5)                  # exact fit still available
+    assert got is not None and len(got) == 5
+    assert a.n_free == 0
+    a.free_n(got)
+    a.free_n(held)
+    assert a.n_free == 8 and a.n_in_use == 0
+
+
+def test_request_queue_ticks_guard():
+    """Satellite: queue_ticks must read 0 (not negative garbage) before a
+    lane is acquired — admit_tick still holds the -1 sentinel then."""
+    req = Request(uid=0, prompt=np.zeros(4, np.int32), max_new_tokens=1,
+                  arrival_tick=7)
+    assert req.admit_tick == -1
+    assert req.queue_ticks == 0         # pre-admission: no -8 garbage
+    req.admit_tick = 9
+    assert req.queue_ticks == 2         # post-admission unchanged

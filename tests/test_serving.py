@@ -1,12 +1,16 @@
 """Continuous-batching serving engine: exactness + scheduling.
 
-The engine must be a pure throughput optimization — greedy tokens
-bit-identical to the one-shot ``baseline.generate`` path and routing
-decisions identical to ``baseline.serve_batch`` — while admitting and
-evicting requests mid-decode over fixed lane shapes, with full-attention
-KV living in the paged block pool (``serving/cache.py``).  The fuzz
-section runs ~50 seeded random workloads (prompt lengths, token budgets,
-arrival ticks, pool pressure) against the baseline oracle.
+The engine must be a pure throughput optimization — tokens bit-identical
+to the one-shot ``baseline.generate`` path (greedy AND sampled: the
+shared counter-based sampler keyed on ``(seed, uid, step)`` makes tokens
+lane-placement-invariant) and routing decisions identical to
+``baseline.serve_batch`` — while admitting and evicting requests
+mid-decode over fixed lane shapes, with full-attention KV living in the
+paged block pool (``serving/cache.py``).  Two fuzz sections run seeded
+random workloads against the baseline oracle: ~50 greedy trials (prompt
+lengths, token budgets, arrival ticks, pool pressure) and ~24 sampled
+trials (random temperature / top-k / top-p / seeds / stop-token sets,
+early-stop block reuse under pressure).
 """
 import dataclasses
 
@@ -18,7 +22,8 @@ import pytest
 from repro.configs.base import ModelConfig
 from repro.core import router as routerlib
 from repro.models import model as modellib
-from repro.serving import EngineConfig, MixtureServeEngine, SlotAllocator
+from repro.serving import (EngineConfig, MixtureServeEngine, SamplingParams,
+                           SlotAllocator)
 from repro.serving import baseline
 from repro.serving import cache as cachelib
 
@@ -52,12 +57,14 @@ def _engine(mixture, lanes=3, ecfg=ECFG, **kw):
                      prefix_len=PREFIX, block_size=BS, **kw))
 
 
-def _oracle(mixture, prompt, expert, n_new, ecfg=ECFG):
-    """One-shot greedy reference with KV budget matched to the lanes."""
+def _oracle(mixture, prompt, expert, n_new, ecfg=ECFG, sampling=None,
+            uid=0, stop_tokens=()):
+    """One-shot reference with KV budget matched to the lanes."""
     expert_params, _ = mixture
-    return baseline.generate(ecfg, expert_params[expert],
-                             jnp.asarray(np.asarray(prompt)[None]), n_new,
-                             cache_len=MAXLEN)[0]
+    return baseline.generate_request(ecfg, expert_params[expert], prompt,
+                                     n_new, sampling=sampling, uid=uid,
+                                     stop_tokens=stop_tokens,
+                                     cache_len=MAXLEN)
 
 
 def test_engine_bitwise_matches_generate_and_serve_batch(mixture):
@@ -268,6 +275,12 @@ def test_engine_config_validation(mixture):
                            EngineConfig(max_len=MAXLEN, block_size=BS,
                                         prefix_len=PREFIX,
                                         pool_blocks=MAXLEN // BS - 1))
+    with pytest.raises(ValueError, match="min_prefill_bucket"):
+        # a 0 bucket would loop forever in bucket_len at admission time
+        MixtureServeEngine(ECFG, RCFG, expert_params, router_params,
+                           EngineConfig(max_len=MAXLEN, block_size=BS,
+                                        prefix_len=PREFIX,
+                                        min_prefill_bucket=0))
     # archs with no full-attention KV have no pool: block alignment is
     # irrelevant and must not be enforced
     key = jax.random.PRNGKey(13)
@@ -382,6 +395,232 @@ def test_fuzz_engine_matches_baseline(mixture, seed):
 
 
 # ---------------------------------------------------------------------------
+# SamplingParams / stop conditions / streaming (the generation API)
+# ---------------------------------------------------------------------------
+def test_sampling_params_validation():
+    assert SamplingParams().greedy
+    assert not SamplingParams(temperature=0.5).greedy
+    for bad in (dict(temperature=-0.1), dict(top_k=-1), dict(top_p=0.0),
+                dict(top_p=1.5), dict(seed=-1)):
+        with pytest.raises(ValueError):
+            SamplingParams(**bad)
+
+
+def test_submit_rejects_bad_sampling_and_stops(mixture):
+    eng = _engine(mixture)
+    p = np.zeros(PREFIX, np.int32)
+    with pytest.raises(TypeError, match="SamplingParams"):
+        eng.submit(p, 4, sampling=0.7)
+    with pytest.raises(ValueError, match="outside vocab"):
+        eng.submit(p, 4, stop_tokens={ECFG.vocab_size})
+    with pytest.raises(ValueError, match="outside vocab"):
+        eng.submit(p, 4, stop_tokens={-1})
+
+
+def _fresh_index(tokens) -> int | None:
+    """First MID-sequence position whose token value never occurred
+    earlier — a stop token on it makes the request end exactly there,
+    strictly before the budget (None if the rollout is a constant loop,
+    which tiny random models do produce)."""
+    tokens = np.asarray(tokens)
+    for j in range(1, len(tokens) - 1):
+        if tokens[j] not in tokens[:j]:
+            return j
+    return None
+
+
+def _prompt_with_fresh_token(mixture, rng, n_new, route_to=None):
+    """A (prompt, greedy rollout, fresh index) triple, scanning random
+    prompts until the rollout has a mid-sequence stop candidate."""
+    _, router_params = mixture
+    for _ in range(40):
+        prompt = rng.integers(0, ECFG.vocab_size, size=PREFIX).astype(np.int32)
+        e = int(baseline.route(RCFG, router_params, prompt[None], PREFIX)[0])
+        if route_to is not None and e != route_to:
+            continue
+        want = _oracle(mixture, prompt, e, n_new)
+        j = _fresh_index(want)
+        if j is not None:
+            return prompt, e, want, j
+    pytest.skip("no prompt with a mid-sequence fresh token found")
+
+
+def test_stop_token_ends_request_early(mixture):
+    """A stop token finishes the request the tick it is emitted, keeps it
+    as the final token, and records the finish reason."""
+    rng = np.random.default_rng(21)
+    prompt, _, want, j = _prompt_with_fresh_token(mixture, rng, 8)
+    eng = _engine(mixture, lanes=2)
+    req = eng.submit(prompt, 8, stop_tokens={int(want[j])})
+    eng.run()
+    assert req.finish_reason == "stop_token"
+    assert len(req.tokens) == j + 1 < 8
+    np.testing.assert_array_equal(np.asarray(req.tokens), want[:j + 1])
+    # a stop token sampled from the PREFILL logits finishes at admission
+    eng2 = _engine(mixture, lanes=2)
+    req2 = eng2.submit(prompt, 8, stop_tokens={int(want[0])})
+    eng2.run()
+    assert req2.tokens == [int(want[0])]
+    assert req2.finish_reason == "stop_token"
+    assert req2.finish_tick == req2.admit_tick
+
+
+def test_early_stop_frees_blocks_same_tick_under_pool_pressure(mixture):
+    """Satellite: a request that stops early must release its KV blocks
+    the same tick, and a request queued on those blocks must be admitted
+    at the very next admission pass."""
+    _, router_params = mixture
+    rng = np.random.default_rng(22)
+    n_new = 8                       # needs ceil((16+8-1)/16) = 2 blocks
+    pA, e, want, j = _prompt_with_fresh_token(mixture, rng, n_new)
+    pB = None
+    for _ in range(40):             # co-locate B on A's expert
+        cand = rng.integers(0, ECFG.vocab_size, size=PREFIX).astype(np.int32)
+        if int(baseline.route(RCFG, router_params, cand[None], PREFIX)[0]) == e:
+            pB = cand
+            break
+    assert pB is not None
+    # pool of 3 blocks (the config minimum for max_len 48): A's 2-block
+    # reservation starves B until A ends, even though a lane is free
+    eng = _engine(mixture, lanes=2, pool_blocks=MAXLEN // BS)
+    A = eng.submit(pA, n_new, stop_tokens={int(want[j])})
+    B = eng.submit(pB, n_new)
+    st = eng._experts[e]
+    done: list = []
+    while not A.done:
+        done = eng.step()
+    assert A in done
+    # the tick A stopped, its blocks are already back in the pool (B has
+    # not been admitted yet, so nothing else can be holding them)
+    assert not B.done and B.admit_tick < 0
+    assert st.balloc.n_in_use == 0
+    assert A.finish_reason == "stop_token" and len(A.tokens) == j + 1
+    eng.run()
+    assert B.admit_tick == A.finish_tick + 1      # admitted with A's blocks
+    np.testing.assert_array_equal(np.asarray(B.tokens),
+                                  _oracle(mixture, pB, e, n_new))
+
+
+def test_stream_yields_every_token_in_order(mixture):
+    """stream() must deliver one delta per emitted token, in tick order,
+    with done exactly on each request's final token."""
+    rng = np.random.default_rng(23)
+    prompts = [rng.integers(0, ECFG.vocab_size,
+                            size=int(rng.integers(PREFIX, 30))).astype(np.int32)
+               for _ in range(5)]
+    eng = _engine(mixture, lanes=2)
+    reqs = [eng.submit(prompts[i], int(rng.integers(1, 7)),
+                       sampling=SamplingParams(temperature=0.9, seed=i)
+                       if i % 2 else None,
+                       arrival_tick=i // 2)
+            for i in range(5)]
+    got = {r.uid: [] for r in reqs}
+    done_seen = set()
+    last_tick = -1
+    for d in eng.stream():
+        assert d.tick >= last_tick
+        last_tick = d.tick
+        assert d.request.uid not in done_seen, "token after done"
+        assert d.index == len(got[d.request.uid])
+        got[d.request.uid].append(d.token)
+        if d.done:
+            done_seen.add(d.request.uid)
+    assert not eng.busy
+    assert eng._t0 is None       # clock origin reset for a later run()
+    for r in reqs:
+        assert r.uid in done_seen
+        assert got[r.uid] == r.tokens
+        want = _oracle(mixture, prompts[r.uid], r.expert, r.max_new_tokens,
+                       sampling=r.sampling, uid=r.uid)
+        np.testing.assert_array_equal(np.asarray(got[r.uid]), want)
+
+
+# ---------------------------------------------------------------------------
+# Sampled-mode fuzz oracle: engine == baseline under random SamplingParams,
+# stop sets, arrival ticks, and pool pressure
+# ---------------------------------------------------------------------------
+N_SAMPLED_TRIALS = 24
+
+
+def _random_sampling(rng) -> SamplingParams:
+    if rng.random() < 0.25:
+        return SamplingParams()                       # greedy rides along
+    return SamplingParams(
+        temperature=float(np.round(rng.uniform(0.2, 1.5), 3)),
+        top_k=int(rng.choice([0, 1, 2, 5, 16])),
+        top_p=float(np.round(rng.choice([1.0, rng.uniform(0.3, 0.99)]), 3)),
+        seed=int(rng.integers(0, 2 ** 20)))
+
+
+@pytest.mark.parametrize("seed", range(N_SAMPLED_TRIALS))
+def test_fuzz_sampled_engine_matches_baseline(mixture, seed):
+    """Per-request random sampling recipes + stop sets: engine tokens must
+    be bit-identical to the baseline run with the same (seed, uid) RNG
+    stream, stop truncation included — also under block-pool pressure,
+    where early stops put blocks back for waiting requests."""
+    rng = np.random.default_rng(5000 + seed)
+    lanes = 2
+    pool = FULL_POOL if seed % 2 == 0 else MAXLEN // BS + 1
+    R = int(rng.integers(3, 6))
+    prompts = [rng.integers(0, ECFG.vocab_size,
+                            size=int(rng.integers(PREFIX, 33))).astype(np.int32)
+               for _ in range(R)]
+    n_new = [int(rng.integers(2, 8)) for _ in range(R)]
+    arrivals = [int(rng.integers(0, 7)) for _ in range(R)]
+    sps = [_random_sampling(rng) for _ in range(R)]
+    stops = [frozenset(int(t) for t in
+                       rng.integers(0, ECFG.vocab_size,
+                                    size=int(rng.integers(4, 40))))
+             if rng.random() < 0.5 else frozenset() for _ in range(R)]
+    eng = _engine(mixture, lanes=lanes, pool_blocks=pool)
+    reqs = [eng.submit(prompts[i], n_new[i], sampling=sps[i],
+                       stop_tokens=stops[i], arrival_tick=arrivals[i])
+            for i in range(R)]
+    res = eng.run()
+    assert len(res["requests"]) == R
+    for r in res["requests"]:
+        want = _oracle(mixture, prompts[r.uid], r.expert, n_new[r.uid],
+                       sampling=sps[r.uid], uid=r.uid,
+                       stop_tokens=stops[r.uid])
+        np.testing.assert_array_equal(
+            np.asarray(r.tokens), want,
+            err_msg=f"seed {seed} uid {r.uid} {sps[r.uid]} pool {pool}")
+        stopped = len(r.tokens) < n_new[r.uid]
+        assert r.finish_reason == ("stop_token" if stopped or
+                                   (r.tokens and r.tokens[-1] in stops[r.uid])
+                                   else "length")
+        if stopped:
+            assert r.tokens[-1] in stops[r.uid]
+    assert res["early_stops"] == sum(r.finish_reason == "stop_token"
+                                     for r in reqs)
+    for st in eng._experts:                   # no leaks, trial after trial
+        assert st.balloc.n_in_use == 0 and st.alloc.n_free == lanes
+
+
+def test_lane_placement_invariance(mixture):
+    """The RNG stream is a pure function of (seed, uid, step): the same
+    request samples identical tokens decoding alone on a fresh engine or
+    squeezed between other active sampled lanes — uid 0 both times, so
+    the two engine runs must agree with each other (and the oracle)."""
+    rng = np.random.default_rng(31)
+    prompt = rng.integers(0, ECFG.vocab_size, size=PREFIX).astype(np.int32)
+    sp = SamplingParams(temperature=1.1, top_k=12, seed=77)
+    eng = _engine(mixture, lanes=3)
+    solo = eng.submit(prompt, 6, sampling=sp)             # uid 0, empty engine
+    eng.run()
+    eng2 = _engine(mixture, lanes=3)
+    crowd = eng2.submit(prompt, 6, sampling=sp)           # uid 0, crowded
+    for _ in range(2):
+        eng2.submit(rng.integers(0, ECFG.vocab_size, size=PREFIX)
+                    .astype(np.int32), 6,
+                    sampling=SamplingParams(temperature=0.9, seed=5))
+    eng2.run()
+    assert crowd.tokens == solo.tokens
+    want = _oracle(mixture, prompt, solo.expert, 6, sampling=sp, uid=solo.uid)
+    np.testing.assert_array_equal(np.asarray(solo.tokens), want)
+
+
+# ---------------------------------------------------------------------------
 # Non-pad-safe archs: exact-length prefill fallback (SSM / xLSTM)
 # ---------------------------------------------------------------------------
 _NPS_BASE = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
@@ -400,8 +639,10 @@ HYBRID_CFG = ModelConfig(name="srv-hybrid", stages=((("attn", "mamba2"), 1),),
 def test_non_pad_safe_archs_match_baseline(mixture, ecfg):
     """SSM and xLSTM lane state cannot absorb right-padding: the engine
     must fall back to exact-length prefill and still match the one-shot
-    baseline token-for-token (the hybrid case also exercises paged
-    full-attention KV next to recurrent lane state in one cache tree)."""
+    baseline token-for-token — greedy and sampled requests mixed, so the
+    per-request fallback samples first tokens with per-row params (the
+    hybrid case also exercises paged full-attention KV next to recurrent
+    lane state in one cache tree)."""
     _, router_params = mixture
     key = jax.random.PRNGKey(11)
     expert_params = [modellib.init_params(jax.random.fold_in(key, e), ecfg)
@@ -412,13 +653,17 @@ def test_non_pad_safe_archs_match_baseline(mixture, ecfg):
     prompts = [rng.integers(0, ecfg.vocab_size, size=l).astype(np.int32)
                for l in lens]
     n_new = rng.integers(1, 6, size=5)
+    sps = [None if i % 2 == 0 else
+           SamplingParams(temperature=0.8, top_k=8, seed=40 + i)
+           for i in range(5)]
     eng = _engine(mix, lanes=2, ecfg=ecfg)
     assert not eng.pad_safe
     for i in range(5):
-        eng.submit(prompts[i], int(n_new[i]), arrival_tick=i // 2)
+        eng.submit(prompts[i], int(n_new[i]), sampling=sps[i],
+                   arrival_tick=i // 2)
     res = eng.run()
     assert len(res["requests"]) == 5
     for r in res["requests"]:
         want = _oracle(mix, prompts[r.uid], r.expert, int(n_new[r.uid]),
-                       ecfg=ecfg)
+                       ecfg=ecfg, sampling=sps[r.uid], uid=r.uid)
         np.testing.assert_array_equal(np.asarray(r.tokens), want)
