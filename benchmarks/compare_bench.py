@@ -1,0 +1,127 @@
+"""Compare a fresh ``BENCH_serve/v1`` report against the checked-in baseline.
+
+CI runs ``serve_bench.py --smoke --json BENCH_serve.json`` on every push
+and then this script against ``benchmarks/BENCH_baseline.json``, so the
+BENCH trajectory is *gated*, not just uploaded:
+
+  * token-identity gates (greedy workload + the sampled/early-stop smoke
+    gate) hard-fail — these are correctness, no tolerance;
+  * the paged decode read traffic must stay strictly below the gathered
+    ``(lanes, max_len)`` view it replaced — also a hard gate;
+  * engine tokens/sec must stay within ``--min-ratio`` of the baseline —
+    generous by default because shared CI runners are noisy; the full
+    delta table lands in ``$GITHUB_STEP_SUMMARY`` either way.
+
+Refresh the baseline by re-running the smoke bench and checking in the
+report:  PYTHONPATH=src python benchmarks/serve_bench.py --smoke \
+             --json benchmarks/BENCH_baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _fmt(x):
+    if isinstance(x, float):
+        return f"{x:,.2f}"
+    if isinstance(x, int):
+        return f"{x:,}"
+    return str(x)
+
+
+def _get(report: dict, path: str):
+    cur = report
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+ROWS = [
+    ("engine tok/s", "engine.tokens_per_s"),
+    ("serial tok/s", "serial.tokens_per_s"),
+    ("speedup", "speedup"),
+    ("occupancy", "engine.occupancy"),
+    ("prefill calls", "engine.prefill_calls"),
+    ("early stops", "engine.early_stops"),
+    ("paged read B/tick", "decode_read_bytes_per_tick.paged"),
+    ("gathered read B/tick", "decode_read_bytes_per_tick.gathered"),
+]
+
+
+def delta_table(fresh: dict, base: dict) -> str:
+    lines = ["| metric | baseline | current | delta |",
+             "|---|---:|---:|---:|"]
+    for label, path in ROWS:
+        b, f = _get(base, path), _get(fresh, path)
+        if b is None and f is None:
+            continue
+        if isinstance(b, (int, float)) and isinstance(f, (int, float)) and b:
+            delta = f"{100.0 * (f - b) / b:+.1f}%"
+        else:
+            delta = "—"
+        lines.append(f"| {label} | {_fmt(b)} | {_fmt(f)} | {delta} |")
+    gates = [("tokens_identical", _get(fresh, "tokens_identical")),
+             ("smoke_sampled.tokens_identical",
+              _get(fresh, "smoke_sampled.tokens_identical"))]
+    lines.append("")
+    lines.append("gates: " + ", ".join(
+        f"`{name}` = {val}" for name, val in gates if val is not None))
+    return "\n".join(lines)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh", help="BENCH_serve.json from this run")
+    ap.add_argument("baseline", help="checked-in benchmarks/BENCH_baseline.json")
+    ap.add_argument("--min-ratio", type=float, default=0.25,
+                    help="fail if engine tokens/sec drops below this "
+                         "fraction of the baseline report's")
+    ap.add_argument("--summary", default=None,
+                    help="append the markdown delta table to this file "
+                         "(pass \"$GITHUB_STEP_SUMMARY\" in CI)")
+    args = ap.parse_args()
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+    for r, name in ((fresh, args.fresh), (base, args.baseline)):
+        if r.get("schema") != "BENCH_serve/v1":
+            print(f"FAIL: {name} is not a BENCH_serve/v1 report "
+                  f"(schema={r.get('schema')!r})")
+            return 2
+
+    table = f"### Serving bench vs baseline\n\n{delta_table(fresh, base)}\n"
+    print(table)
+    if args.summary:
+        with open(args.summary, "a") as f:
+            f.write(table)
+
+    failures = []
+    if fresh.get("tokens_identical") is not True:
+        failures.append("token-identity gate failed (greedy workload)")
+    smoke = fresh.get("smoke_sampled")
+    if smoke is not None and smoke.get("tokens_identical") is not True:
+        failures.append("token-identity gate failed (sampled + early-stop)")
+    rb = fresh.get("decode_read_bytes_per_tick")
+    if rb and rb["paged"] >= rb["gathered"]:
+        failures.append(f"paged decode reads ({rb['paged']} B/tick) not "
+                        f"below gathered ({rb['gathered']} B/tick)")
+    f_tps = _get(fresh, "engine.tokens_per_s") or 0.0
+    b_tps = _get(base, "engine.tokens_per_s") or 0.0
+    if b_tps and f_tps < args.min_ratio * b_tps:
+        failures.append(f"engine {f_tps:.1f} tok/s fell below "
+                        f"{args.min_ratio:.2f}x baseline ({b_tps:.1f} tok/s)")
+    for msg in failures:
+        print(f"FAIL: {msg}")
+    if not failures:
+        print(f"OK: identity gates green, engine {f_tps:.1f} tok/s vs "
+              f"baseline {b_tps:.1f} tok/s")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

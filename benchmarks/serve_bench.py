@@ -13,7 +13,12 @@ while the serial path still decodes each group to its maximum and throws
 the surplus away — exactly the waste continuous batching reclaims).  The
 bench asserts identity, then compares useful-token throughput and
 reports the paged-cache memory footprint (HBM bytes per lane vs the
-dense ``lanes * max_len`` slab) and the admission prefill-call count.
+dense ``lanes * max_len`` slab), the admission prefill-call count, and
+the decode read traffic: bytes/tick the paged-attention kernel reads
+(live blocks only; ``--decode-impl pallas`` selects the Pallas kernel,
+interpret-mode on CPU) vs the gathered ``(lanes, max_len)`` view the
+old decode materialized — the former must be strictly smaller or the
+bench fails.
 
 Both paths are warmed first (same shapes as the timed run) so jit compile
 time is excluded.  The model is sized so per-step compute, not dispatch
@@ -91,6 +96,11 @@ def main() -> int:
     ap.add_argument("--blocks-per-expert", type=int, default=0,
                     help="KV pool blocks per expert "
                          "(0 = lanes*max_len/block_size, i.e. no pressure)")
+    ap.add_argument("--decode-impl", choices=["auto", "jnp", "pallas"],
+                    default="auto",
+                    help="paged decode attention: jnp gather reference or "
+                         "the Pallas block-table kernel (interpret-mode on "
+                         "CPU; auto follows the expert config)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mode", choices=["greedy", "sampled"], default="greedy",
                     help="sampled: temperature/top-k/top-p decoding plus a "
@@ -166,7 +176,8 @@ def main() -> int:
                      prefix_len=prefix_len,
                      min_prefill_bucket=args.prompt_len,
                      block_size=args.block_size,
-                     pool_blocks=args.blocks_per_expert))
+                     pool_blocks=args.blocks_per_expert,
+                     decode_impl=args.decode_impl))
     # warmup: compile every admission batch width the timed run can hit
     # (routing-independent — see MixtureServeEngine.warmup); greedy mode
     # skips the sampled warmup pass it would never use
@@ -215,6 +226,13 @@ def main() -> int:
                                      res["per_expert"].items()},
                      "hbm_bytes_per_lane": res["kv_bytes_per_lane"],
                      "dense_slab_bytes_per_lane": dense // args.lanes},
+        "decode_impl": res["decode_impl"],
+        "decode_read_bytes_per_tick": {
+            # what the paged kernel reads (live blocks only) vs the
+            # gathered (lanes, max_len) view the old decode materialized
+            "paged": res["decode_read_bytes"]["paged_per_tick"],
+            "gathered": res["decode_read_bytes"]["gathered_per_tick"],
+        },
         "speedup": round(speedup, 2),
         "tokens_identical": not mismatches,
     }
@@ -236,6 +254,15 @@ def main() -> int:
           f"KV {res['kv_bytes_per_lane']} B/lane vs dense "
           f"{dense // args.lanes} B/lane, "
           f"{res['prefill_calls']} prefill calls for {args.requests} requests")
+    rb = res["decode_read_bytes"]
+    print(f"decode KV reads ({res['decode_impl']}): paged "
+          f"{rb['paged_per_tick']} B/tick vs gathered "
+          f"{rb['gathered_per_tick']} B/tick "
+          f"({rb['paged'] / max(rb['gathered'], 1):.2f}x)")
+    if rb["paged"] >= rb["gathered"]:
+        print("FAIL: paged decode reads did not beat the gathered "
+              "(lanes, max_len) view")
+        return emit(1)
     if args.smoke:
         # the pressured pool above serializes admission, so the batching
         # bound needs a second, full-pool engine: k_e simultaneous
@@ -245,7 +272,8 @@ def main() -> int:
             EngineConfig(lanes_per_expert=args.lanes, max_len=max_len,
                          prefix_len=prefix_len,
                          min_prefill_bucket=args.prompt_len,
-                         block_size=args.block_size))
+                         block_size=args.block_size,
+                         decode_impl=args.decode_impl))
         eng2.warmup(args.prompt_len, sampled=False)
         # uniform budget: lanes then free together, so admission drains
         # `lanes` requests per prefill and the ceil bound is tight
@@ -289,7 +317,8 @@ def main() -> int:
                          prefix_len=prefix_len,
                          min_prefill_bucket=args.prompt_len,
                          block_size=args.block_size,
-                         pool_blocks=args.blocks_per_expert))
+                         pool_blocks=args.blocks_per_expert,
+                         decode_impl=args.decode_impl))
         eng3.warmup(args.prompt_len)
         reqs3 = [eng3.submit(prompts[i], int(n_new[i]), sampling=sp,
                              stop_tokens=stops3, arrival_tick=eng3.tick)

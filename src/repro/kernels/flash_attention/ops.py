@@ -1,7 +1,9 @@
-"""Public entry points for attention.
+"""Public entry point for full-sequence attention.
 
 ``flash_attention`` dispatches between the Pallas TPU kernel and the
-blockwise-jnp reference; ``decode_attention`` is the single-token path.
+blockwise-jnp reference.  The single-token decode path lives in
+:mod:`repro.kernels.paged_attention.ops.decode_attention` (one unified
+dense+paged dispatch).
 """
 from __future__ import annotations
 
@@ -24,9 +26,3 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
             interpret=interpret)
     return _ref.blockwise_attention(q, k, v, causal=causal, window=window,
                                     softcap=softcap, q_chunk=q_chunk)
-
-
-def decode_attention(q, k, v, *, q_pos, kv_pos, window: int = 0,
-                     softcap: float = 0.0) -> jnp.ndarray:
-    return _ref.decode_attention_ref(q, k, v, q_pos=q_pos, kv_pos=kv_pos,
-                                     window=window, softcap=softcap)

@@ -1,0 +1,68 @@
+"""Unified entry point for single-token decode attention.
+
+One signature covers both decode cache layouts the serving engine uses:
+
+* **dense / sliding-window** — ``k``/``v`` are per-lane slabs
+  ``(B, Skv, Hkv, hd)`` with slot positions ``kv_pos (B, Skv)`` (the
+  rotating O(window) buffer of local layers, or the unpaged demo path);
+* **paged** (``block_tables`` given) — ``k``/``v`` are the shared block
+  pool ``(n_blocks+1, bs, Hkv, hd)``, ``kv_pos`` the pool's per-slot
+  positions ``(n_blocks+1, bs)``, and ``block_tables (B, nb)`` maps each
+  lane's position range ``[i*bs, (i+1)*bs)`` to a pool block (-1 =
+  unreserved).
+
+``impl`` selects the implementation and is validated instead of being
+silently ignored: ``"jnp"`` is the reference (paged: the gather oracle
+that keeps engine tokens bitwise identical to ``serving/baseline.py``);
+``"pallas"`` is the block-table-chasing TPU kernel (paged layout only —
+runs under ``interpret=True`` on CPU).  The dense path has no Pallas
+kernel on purpose: sliding-window buffers are already O(window) and
+gather-free, so ``impl="pallas"`` there is a configuration error, not a
+fallback.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.paged_attention import ref as _ref
+
+VALID_IMPLS = ("jnp", "pallas")
+
+
+def decode_attention(q, k, v, *, q_pos, kv_pos, block_tables=None,
+                     window: int = 0, softcap: float = 0.0,
+                     impl: str = "jnp",
+                     interpret: bool | None = None) -> jnp.ndarray:
+    """Single-token GQA decode; q: (B,1,Hq,hd) -> (B,1,Hq,hd).
+
+    See the module docstring for the two (k, v, kv_pos) layouts selected
+    by ``block_tables``.  ``window`` (sliding-window masking) applies to
+    the dense layout only — paged KV is full attention by construction.
+    ``interpret=None`` lets the Pallas kernel pick by backend (compiled
+    on TPU, interpreter on CPU).
+    """
+    if impl not in VALID_IMPLS:
+        raise ValueError(f"decode_attention impl must be one of "
+                         f"{VALID_IMPLS}, got {impl!r}")
+    if block_tables is None:
+        if impl == "pallas":
+            raise ValueError(
+                "decode_attention impl='pallas' needs the paged layout "
+                "(block_tables): dense / sliding-window decode has no "
+                "Pallas kernel — its per-lane buffer is already O(window) "
+                "and gather-free; use impl='jnp'")
+        return fa_ref.decode_attention_ref(q, k, v, q_pos=q_pos,
+                                           kv_pos=kv_pos, window=window,
+                                           softcap=softcap)
+    if window:
+        raise ValueError(f"paged decode covers full-attention layers only "
+                         f"(sliding-window layers keep their rotating "
+                         f"per-lane buffer), got window={window}")
+    if impl == "pallas":
+        from repro.kernels.paged_attention import paged_attention as _pl
+        return _pl.paged_decode_attention_pallas(
+            q, k, v, kv_pos, block_tables, q_pos=q_pos, softcap=softcap,
+            interpret=interpret)
+    return _ref.paged_decode_attention_ref(q, k, v, kv_pos, block_tables,
+                                           q_pos=q_pos, softcap=softcap)

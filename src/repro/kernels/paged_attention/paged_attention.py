@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: block-table paged single-token GQA decode attention.
+
+The vLLM/PagedAttention read pattern for the serving engine's KV block
+pool: instead of gathering every lane's ``nb`` blocks into a contiguous
+``(B, max_len, Hkv, hd)`` view per layer per tick — O(lanes * max_len)
+HBM traffic regardless of how many tokens are actually live — the grid
+walks ``(lane, kv_head, block)`` with the block index innermost and lets
+the BlockSpec index map chase each lane's block table directly: the
+tables arrive via scalar prefetch (SMEM), so step ``(b, h, i)`` DMAs
+pool block ``tables[b, i]`` (scratch for ``-1`` entries, whose compute
+is skipped via ``pl.when``).  An online-softmax accumulator ``(m, l,
+acc)`` in VMEM scratch merges blocks; masking follows the dense decode
+oracle — slot positions ``< 0`` (never written) or ``> q_pos`` (the
+future) drop out, with tanh soft-capping applied before the mask.
+
+Masked probabilities are zeroed *exactly* (``p *= valid``), so a block
+that is entirely dead contributes nothing even while the running max is
+still at the ``NEG`` sentinel; a fully-dead lane (``q_pos < 0``) yields
+zeros (the jnp oracle emits the degenerate uniform average instead —
+dead-lane output is unspecified and ignored by the engine).
+
+Decode is forward-only (no VJP needed), and the kernel runs under
+``interpret=True`` on CPU JAX — that is how CI exercises it (see the
+``kernels-interpret`` job) and how the fuzz suite in
+``tests/test_kernels_paged_attention.py`` checks it against the gather
+oracle without a TPU.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(tables_ref, qpos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, scale: float, softcap: float, nb: int):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    live = tables_ref[b, i] >= 0
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (g, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)            # (bs, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (g, bs)
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        pos = pos_ref[0]                                  # (bs,) int32
+        qp = qpos_ref[b]
+        valid = (pos >= 0) & (pos <= qp)                  # (bs,)
+        s = jnp.where(valid[None, :], s, NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        # exact-zero masked probabilities: with every slot so far dead the
+        # running max still sits at NEG and exp(s - m) would be 1, not 0
+        p = jnp.exp(s - m_new[:, None]) * valid[None, :].astype(jnp.float32)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + \
+            jax.lax.dot(p, v_ref[0, :, 0].astype(jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(i == nb - 1)
+    def _emit():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention_pallas(q, k_pool, v_pool, pos_pool, block_tables, *,
+                                  q_pos, softcap: float = 0.0,
+                                  interpret: bool | None = None) -> jnp.ndarray:
+    """Single-step paged GQA decode over the KV block pool.
+
+    q: (B,1,Hq,hd); k_pool/v_pool: (n_blocks+1, bs, Hkv, hd) with row
+    ``n_blocks`` the scratch block; pos_pool: (n_blocks+1, bs) int32;
+    block_tables: (B, nb) int32 (-1 = unreserved); q_pos: (B,1) or (B,)
+    int32 (-1 = dead lane).  Returns (B,1,Hq,hd); reads only live blocks.
+    ``interpret=None`` resolves by backend: compiled on TPU, the Pallas
+    interpreter everywhere else (CPU CI, tests).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, one, Hq, hd = q.shape
+    assert one == 1, "paged decode is single-token"
+    n_rows, bs, Hkv, _ = k_pool.shape
+    scratch = n_rows - 1
+    g = Hq // Hkv
+    nb = block_tables.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    tables = jnp.asarray(block_tables, jnp.int32)
+    qpos = jnp.asarray(q_pos, jnp.int32).reshape(B)
+
+    def kv_map(b, h, i, t, qp):
+        blk = t[b, i]
+        return (jnp.where(blk >= 0, blk, scratch), 0, h, 0)
+
+    def pos_map(b, h, i, t, qp):
+        blk = t[b, i]
+        return (jnp.where(blk >= 0, blk, scratch), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda b, h, i, t, qp: (b, 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, hd), kv_map),
+            pl.BlockSpec((1, bs, 1, hd), kv_map),
+            pl.BlockSpec((1, bs), pos_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda b, h, i, t, qp: (b, 0, h, 0)),
+        scratch_shapes=[pltpu.VMEM((g,), jnp.float32),
+                        pltpu.VMEM((g,), jnp.float32),
+                        pltpu.VMEM((g, hd), jnp.float32)],
+    )
+    kern = functools.partial(_kernel, scale=scale, softcap=softcap, nb=nb)
+    return pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(tables, qpos, q, k_pool, v_pool, pos_pool)

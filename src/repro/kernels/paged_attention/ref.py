@@ -1,0 +1,61 @@
+"""Pure-jnp oracle for block-table paged decode attention.
+
+The serving engine keeps full-attention KV in a shared per-layer block
+pool (``repro.serving.cache``): k/v ``(n_blocks+1, block_size, Hkv, hd)``
+plus slot positions ``pos (n_blocks+1, block_size)``, with row
+``n_blocks`` a scratch block for inactive lanes.  A lane's KV is
+addressed through its block-table row ``(nb,)`` int32 (-1 = unreserved).
+
+This reference *gathers* a lane's blocks back into the dense-slab slot
+order (position p of a lane lands at gathered slot p) and then runs the
+ordinary dense decode oracle — exactly the computation the engine's
+decode path performed before the Pallas kernel existed, so engine tokens
+through this path stay **bitwise identical** to ``serving/baseline.py``
+(the oracle contract in ``tests/test_serving.py``).  The Pallas kernel
+(:mod:`repro.kernels.paged_attention.paged_attention`) replaces the
+gather with per-block reads + online softmax and must match this oracle
+within fp tolerance on live lanes.
+
+Dead lanes (``q_pos < 0`` or an all ``-1`` block-table row) have every
+KV slot masked; their output is unspecified (this gather path emits the
+uniform average the masked softmax degenerates to, the Pallas kernel
+emits zeros) and callers must ignore it — the engine does.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ref as fa_ref
+
+
+def gather_lane_view(k_pool, v_pool, pos_pool, block_tables):
+    """Resolve block tables into contiguous per-lane (B, nb*bs, ...) views.
+
+    Unreserved rows (``block_tables < 0``) read the scratch block and
+    have their positions forced to -1, so every gathered slot beyond a
+    lane's reservation is masked.  Slot order equals the dense slab
+    layout: position p sits at gathered slot ``(p // bs) * bs + p % bs
+    == p``.
+    """
+    B, nb = block_tables.shape
+    scratch = k_pool.shape[0] - 1
+    bs = k_pool.shape[1]
+    safe = jnp.where(block_tables >= 0, block_tables, scratch)
+    kl = k_pool[safe].reshape((B, nb * bs) + k_pool.shape[2:])
+    vl = v_pool[safe].reshape((B, nb * bs) + v_pool.shape[2:])
+    pl = jnp.where(block_tables[..., None] >= 0, pos_pool[safe],
+                   -1).reshape(B, nb * bs)
+    return kl, vl, pl
+
+
+def paged_decode_attention_ref(q, k_pool, v_pool, pos_pool, block_tables, *,
+                               q_pos, softcap: float = 0.0) -> jnp.ndarray:
+    """Single-step paged GQA decode oracle.
+
+    q: (B,1,Hq,hd); k_pool/v_pool: (n_blocks+1, bs, Hkv, hd);
+    pos_pool: (n_blocks+1, bs) int32; block_tables: (B, nb) int32;
+    q_pos: (B,1) int32 (-1 = dead lane).  Returns (B,1,Hq,hd).
+    """
+    kl, vl, pl = gather_lane_view(k_pool, v_pool, pos_pool, block_tables)
+    return fa_ref.decode_attention_ref(q, kl, vl, q_pos=q_pos, kv_pos=pl,
+                                       softcap=softcap)

@@ -64,6 +64,11 @@ def main() -> None:
     ap.add_argument("--blocks-per-expert", type=int, default=0,
                     help="KV pool blocks per expert "
                          "(0 = lanes*max_len/block_size)")
+    ap.add_argument("--decode-impl", choices=["auto", "jnp", "pallas"],
+                    default="auto",
+                    help="paged decode attention: jnp gather reference or "
+                         "the Pallas block-table kernel (auto follows the "
+                         "preset's use_pallas)")
     ap.add_argument("--arrive-every", type=int, default=2,
                     help="simulated arrival: one request per N ticks")
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -114,7 +119,8 @@ def main() -> None:
                                           max_len=max_len,
                                           prefix_len=args.prefix_len,
                                           block_size=args.block_size,
-                                          pool_blocks=args.blocks_per_expert))
+                                          pool_blocks=args.blocks_per_expert,
+                                          decode_impl=args.decode_impl))
     for i in range(args.requests):
         eng.submit(prompts[i], args.new_tokens, sampling=sampling,
                    stop_tokens=stop_tokens,
@@ -129,6 +135,10 @@ def main() -> None:
     print(f"paged KV: {eng.pool_blocks} blocks/expert x {args.block_size} "
           f"tokens, {res['kv_bytes_per_lane']} B/lane, "
           f"{res['prefill_calls']} prefill calls")
+    rb = res["decode_read_bytes"]
+    print(f"decode KV reads ({res['decode_impl']}): paged "
+          f"{rb['paged_per_tick']} B/tick vs gathered "
+          f"{rb['gathered_per_tick']} B/tick")
     print("per-expert:", res["per_expert"])
     print("routes:", [r.expert for r in res["requests"]],
           " domains:", doms.tolist())

@@ -141,11 +141,14 @@ def attn_apply(params: Params, x: jnp.ndarray, cfg, *,
     of inactive lanes.  ``block_tables`` (B, max_len//bs) int32 maps each
     lane's position range [i*bs, (i+1)*bs) to a pool block (-1 = not
     reserved).  The write scatters the new token at (table[p//bs], p%bs)
-    and the read gathers the lane's blocks back into a contiguous
-    (B, max_len, ...) view whose slot order equals the dense slab layout,
-    so decode attention is bit-identical to the unpaged path.
+    and the read goes through the paged decode dispatch
+    (:mod:`repro.kernels.paged_attention.ops`): the jnp reference keeps
+    decode bit-identical to the unpaged path, while ``cfg.use_pallas``
+    selects the block-table-chasing Pallas kernel that reads only live
+    blocks instead of materializing the (B, max_len, ...) gather.
     """
     from repro.kernels.flash_attention import ops as fa
+    from repro.kernels.paged_attention import ops as pa
 
     B, S, D = x.shape
     hd = cfg.resolved_head_dim
@@ -187,15 +190,10 @@ def attn_apply(params: Params, x: jnp.ndarray, cfg, *,
         cpos = cache["pos"].at[wblk, off].set(
             q_pos[:, 0].astype(cache["pos"].dtype))
         new_cache = {"k": ck, "v": cv, "pos": cpos}
-        # gather each lane's blocks into a contiguous view: position p of a
-        # lane lands at slot (p//bs)*bs + p%bs == p, the dense slab order
-        safe = jnp.where(block_tables >= 0, block_tables, scratch)
-        kl = ck[safe].reshape(B, nb * bs, hkv, hd)
-        vl = cv[safe].reshape(B, nb * bs, hkv, hd)
-        pl = jnp.where(block_tables[..., None] >= 0, cpos[safe],
-                       -1).reshape(B, nb * bs)
-        out = fa.decode_attention(q, kl, vl, q_pos=q_pos, kv_pos=pl,
-                                  window=window, softcap=cfg.attn_softcap)
+        out = pa.decode_attention(q, ck, cv, q_pos=q_pos, kv_pos=cpos,
+                                  block_tables=block_tables,
+                                  softcap=cfg.attn_softcap,
+                                  impl="pallas" if cfg.use_pallas else "jnp")
     elif cache is not None:
         # single-token decode against the cache; local layers use a
         # rotating buffer of `window` slots (slot = pos % size)
@@ -214,7 +212,7 @@ def attn_apply(params: Params, x: jnp.ndarray, cfg, *,
             cpos = cache["pos"].at[bidx, idx].set(
                 q_pos[:, 0].astype(cache["pos"].dtype))
         new_cache = {"k": ck, "v": cv, "pos": cpos}
-        out = fa.decode_attention(q, ck, cv, q_pos=q_pos, kv_pos=cpos,
+        out = pa.decode_attention(q, ck, cv, q_pos=q_pos, kv_pos=cpos,
                                   window=window, softcap=cfg.attn_softcap)
     else:
         # context-parallel mode: S is sharded over 'model', so the q-chunk

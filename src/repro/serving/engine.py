@@ -15,7 +15,14 @@ KV memory is *paged* (see :mod:`repro.serving.cache`): full-attention
 layers share a per-expert pool of ``block_size``-token blocks and each
 lane holds a block table instead of a dense ``max_len`` slab, so the
 pool can be sized below ``lanes * max_len`` and admission reserves only
-``ceil(len(prompt)+max_new-1) / block_size)`` blocks per request.
+``ceil(len(prompt)+max_new-1) / block_size)`` blocks per request.  The
+decode *read* goes through the unified paged-attention dispatch
+(:mod:`repro.kernels.paged_attention.ops`): ``EngineConfig.decode_impl``
+selects the jnp gather reference (tokens bit-identical to the baseline
+oracle) or the Pallas block-table kernel that reads only live blocks;
+either way :meth:`MixtureServeEngine.run` reports the paged read
+bytes/tick next to what the old gathered ``(lanes, max_len)`` view
+would have cost (``decode_read_bytes``).
 
 Admission is *batched*: one tick drains up to ``lanes_per_expert``
 pending requests into a single prefill call padded to a fixed batch
@@ -104,19 +111,25 @@ class EngineConfig:
     min_prefill_bucket: int = 16  # smallest power-of-2 prompt bucket
     block_size: int = 16          # tokens per paged KV block
     pool_blocks: int = 0          # KV blocks per expert; 0 -> lanes*max_len/bs
+    decode_impl: str = "auto"     # paged decode kernel: auto|jnp|pallas
+                                  # (auto follows the expert cfg's use_pallas)
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_fns(ecfg, rcfg, max_len: int):
+def _jit_fns(ecfg, dcfg, rcfg, max_len: int):
     """Jitted serving kernels, shared across engine instances.
 
     Keyed on the (hashable, frozen) configs so fuzz suites building many
     engines reuse one compile cache instead of re-jitting per instance.
+    ``dcfg`` is the decode-side expert config — identical to ``ecfg``
+    except possibly ``use_pallas``, so ``EngineConfig.decode_impl`` can
+    flip the paged-attention kernel without dragging prefill onto the
+    Pallas flash path.
     """
     def decode_and_sample(p, toks, pos, ci, bt, c, keys, steps, temps,
                           top_ks, top_ps):
         logits, nc = modellib.decode_step(
-            p, ecfg, {"tokens": toks, "positions": pos, "cache_index": ci,
+            p, dcfg, {"tokens": toks, "positions": pos, "cache_index": ci,
                       "block_tables": bt}, c)
         return samplib.sample_tokens(logits[:, 0], keys, steps, temps,
                                      top_ks, top_ps), nc
@@ -126,7 +139,7 @@ def _jit_fns(ecfg, rcfg, max_len: int):
         # work per lane per token is pure waste when every temp is 0);
         # both programs compile once, so mode flips never recompile
         logits, nc = modellib.decode_step(
-            p, ecfg, {"tokens": toks, "positions": pos, "cache_index": ci,
+            p, dcfg, {"tokens": toks, "positions": pos, "cache_index": ci,
                       "block_tables": bt}, c)
         return jnp.argmax(logits[:, 0], -1).astype(jnp.int32), nc
 
@@ -164,6 +177,10 @@ class _Expert:
     decode_calls: int = 0
     prefill_calls: int = 0
     occupied_lane_steps: int = 0  # sum of active lanes over decode calls
+    # KV read traffic of the paged decode path vs the gathered view it
+    # replaced (bookkeeping from reserved-block counts, impl-independent)
+    paged_read_bytes: int = 0
+    gathered_read_bytes: int = 0
 
 
 class MixtureServeEngine:
@@ -190,6 +207,14 @@ class MixtureServeEngine:
         if eng.min_prefill_bucket < 1:
             raise ValueError(f"min_prefill_bucket must be >= 1, "
                              f"got {eng.min_prefill_bucket}")
+        if eng.decode_impl not in ("auto", "jnp", "pallas"):
+            raise ValueError(f"decode_impl must be 'auto', 'jnp' or "
+                             f"'pallas', got {eng.decode_impl!r}")
+        # decode_impl overrides use_pallas for the jitted decode programs
+        # only: prefill keeps the expert config's own kernel choice
+        dcfg = ecfg if eng.decode_impl == "auto" else \
+            ecfg.replace(use_pallas=eng.decode_impl == "pallas")
+        self.decode_impl = "pallas" if dcfg.use_pallas else "jnp"
         L, M, bs = eng.lanes_per_expert, eng.max_len, eng.block_size
         if self.has_pool and M % bs:
             raise ValueError(f"max_len {M} not a multiple of "
@@ -201,6 +226,13 @@ class MixtureServeEngine:
                 f"pool_blocks {pool} cannot hold one max-size request "
                 f"({self.lane_blocks} blocks) — the queue would deadlock")
         self.pool_blocks = pool
+        # per-(block, layer) decode read traffic: k + v + slot positions
+        self._pool_layers = sum(k in cachelib.POOL_KINDS
+                                for k in ecfg.layer_pattern)
+        self._block_read_bytes = bs * (
+            2 * ecfg.n_kv_heads * ecfg.resolved_head_dim
+            * np.dtype(ecfg.compute_dtype).itemsize
+            + np.dtype(np.int32).itemsize)
         self._experts = [
             _Expert(caches=cachelib.init_paged_caches(ecfg, L, pool, bs, M),
                     alloc=SlotAllocator(L), balloc=BlockAllocator(pool),
@@ -222,7 +254,7 @@ class MixtureServeEngine:
         self.last_deltas: list[TokenDelta] = []
         (self._decode_fn, self._decode_greedy_fn, self._prefill_fn,
          self._score_fn, self._insert_fn, self._sample_fn) = \
-            _jit_fns(ecfg, rcfg, M)
+            _jit_fns(ecfg, dcfg, rcfg, M)
 
     # -- warmup ------------------------------------------------------------
     def warmup(self, prompt_len: int | None = None, *,
@@ -491,6 +523,15 @@ class MixtureServeEngine:
                 jnp.asarray(st.block_tables), st.caches)
         st.decode_calls += 1
         st.occupied_lane_steps += int(st.active.sum())
+        if self.has_pool:
+            # bytes the paged kernel reads this tick (each active lane's
+            # reserved blocks) vs what the old gathered (lanes, max_len)
+            # view always read — the bench's measurable win
+            live = sum(len(st.blocks[s]) for s in np.nonzero(st.active)[0])
+            per_layer = self._block_read_bytes * self._pool_layers
+            st.paged_read_bytes += live * per_layer
+            st.gathered_read_bytes += \
+                self.eng.lanes_per_expert * self.lane_blocks * per_layer
         nxt = np.asarray(nxt).astype(np.int32)
         for slot in np.nonzero(st.active)[0]:
             req = st.req[slot]
@@ -571,6 +612,7 @@ class MixtureServeEngine:
         for st in self._experts:
             st.n_served = st.decode_calls = st.prefill_calls = 0
             st.occupied_lane_steps = 0
+            st.paged_read_bytes = st.gathered_read_bytes = 0
             st.balloc.peak_in_use = st.balloc.n_in_use
         tick0 = self.tick
         t_start = time.perf_counter()
@@ -588,6 +630,8 @@ class MixtureServeEngine:
         useful = sum(len(r.tokens) for r in completed)
         decode_calls = sum(st.decode_calls for st in self._experts)
         lane_steps = sum(st.occupied_lane_steps for st in self._experts)
+        paged_rd = sum(st.paged_read_bytes for st in self._experts)
+        gathered_rd = sum(st.gathered_read_bytes for st in self._experts)
         return {
             "requests": sorted(completed, key=lambda r: r.uid),
             "ticks": self.tick - tick0,    # simulated span (incl. skipped gaps)
@@ -604,6 +648,13 @@ class MixtureServeEngine:
             "prefill_calls": sum(st.prefill_calls for st in self._experts),
             "kv_bytes_per_lane": self.kv_bytes_per_expert()
             // self.eng.lanes_per_expert,
+            "decode_impl": self.decode_impl,
+            "decode_read_bytes": {
+                "paged": paged_rd,
+                "gathered": gathered_rd,
+                "paged_per_tick": paged_rd // max(decode_calls, 1),
+                "gathered_per_tick": gathered_rd // max(decode_calls, 1),
+            },
             "per_expert": {
                 e: {"served": st.n_served, "decode_calls": st.decode_calls,
                     "prefills": st.prefill_calls,

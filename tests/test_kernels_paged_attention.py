@@ -1,0 +1,190 @@
+"""Paged-attention decode kernel: dispatch validation + fuzz identity.
+
+Three layers of oracle, locked together over random pool recipes
+(lanes, block_size, table width, GQA ratios, head dims, ragged live
+lengths, retired lanes, softcap on/off):
+
+  1. the *resurrected gather path* below is a verbatim copy of the
+     decode read that lived inline in ``models/common.attn_apply``
+     before this kernel subpackage existed — ``ref.py`` must match it
+     **bitwise**, because the engine's token-identity contract vs
+     ``serving/baseline.py`` (greedy AND sampled) rides on that read;
+  2. the Pallas kernel under ``interpret=True`` must match ``ref.py``
+     within fp tolerance on live lanes (dead-lane output is unspecified:
+     the kernel emits zeros where the gather's degenerate softmax emits
+     a uniform average);
+  3. the unified ``ops.decode_attention`` dispatch must reject bad
+     ``impl`` values and layout/impl combinations loudly instead of
+     silently falling back.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.paged_attention import ops, ref
+from repro.kernels.paged_attention.paged_attention import (
+    paged_decode_attention_pallas)
+
+
+def _old_gather_decode(q, k_pool, v_pool, pos_pool, block_tables, *, q_pos,
+                       softcap=0.0):
+    """The deleted inline gather from ``attn_apply`` (pre-kernel), kept
+    here test-only as the bitwise anchor for ``ref.py``."""
+    B, nb = block_tables.shape
+    bs = k_pool.shape[1]
+    hkv, hd = k_pool.shape[2], k_pool.shape[3]
+    scratch = k_pool.shape[0] - 1
+    safe = jnp.where(block_tables >= 0, block_tables, scratch)
+    kl = k_pool[safe].reshape(B, nb * bs, hkv, hd)
+    vl = v_pool[safe].reshape(B, nb * bs, hkv, hd)
+    pl = jnp.where(block_tables[..., None] >= 0, pos_pool[safe],
+                   -1).reshape(B, nb * bs)
+    return fa_ref.decode_attention_ref(q, kl, vl, q_pos=q_pos, kv_pos=pl,
+                                       window=0, softcap=softcap)
+
+
+def _random_pool(rng, *, B, nb, bs, Hq, Hkv, hd, dtype=jnp.float32):
+    """A random but engine-shaped paged decode problem.
+
+    Per lane: a live length in [0, nb*bs) (or a retired lane with
+    ``q_pos = -1`` and an all ``-1`` table row), enough distinct pool
+    blocks to cover it, written positions 0..q_pos in slab order, and -1
+    position markers everywhere else.  Unwritten pool slots keep random
+    K/V garbage; a slice of them also gets *stale position garbage*
+    (> q_pos or from a previous tenant) that masking must hide.
+    """
+    n_blocks = B * nb + 2                      # pool + slack, + scratch row
+    kshape = (n_blocks + 1, bs, Hkv, hd)
+    k_pool = rng.standard_normal(kshape).astype(np.float32)
+    v_pool = rng.standard_normal(kshape).astype(np.float32)
+    pos_pool = np.full((n_blocks + 1, bs), -1, np.int32)
+
+    free = list(rng.permutation(n_blocks))
+    tables = np.full((B, nb), -1, np.int32)
+    q_pos = np.full((B, 1), -1, np.int32)
+    for b in range(B):
+        if rng.random() < 0.2:
+            continue                           # retired lane: all -1, pos -1
+        live = int(rng.integers(1, nb * bs))   # tokens written incl. current
+        q_pos[b, 0] = live - 1
+        need = -(-live // bs)
+        blocks = [free.pop() for _ in range(need)]
+        tables[b, :need] = blocks
+        for p in range(live):
+            pos_pool[blocks[p // bs], p % bs] = p
+        # stale garbage the mask must hide: a future position in the last
+        # reserved block, beyond the written prefix
+        if live % bs and rng.random() < 0.5:
+            pos_pool[blocks[-1], live % bs] = live + int(rng.integers(1, 8))
+    q = rng.standard_normal((B, 1, Hq, hd)).astype(np.float32)
+    return (jnp.asarray(q, dtype), jnp.asarray(k_pool, dtype),
+            jnp.asarray(v_pool, dtype), jnp.asarray(pos_pool),
+            jnp.asarray(tables), jnp.asarray(q_pos))
+
+
+N_FUZZ = 25
+
+
+@pytest.mark.parametrize("seed", range(N_FUZZ))
+def test_fuzz_ref_bitwise_vs_old_gather_and_pallas_close(seed):
+    rng = np.random.default_rng(2000 + seed)
+    B = int(rng.integers(1, 5))
+    nb = int(rng.integers(1, 5))
+    bs = int(rng.choice([4, 8, 16]))
+    Hkv = int(rng.choice([1, 2, 4]))
+    g = int(rng.choice([1, 2, 4]))
+    hd = int(rng.choice([8, 16, 32]))
+    softcap = float(rng.choice([0.0, 30.0]))
+    q, k_pool, v_pool, pos_pool, tables, q_pos = _random_pool(
+        rng, B=B, nb=nb, bs=bs, Hq=Hkv * g, Hkv=Hkv, hd=hd)
+
+    want = _old_gather_decode(q, k_pool, v_pool, pos_pool, tables,
+                              q_pos=q_pos, softcap=softcap)
+    got_ref = ref.paged_decode_attention_ref(q, k_pool, v_pool, pos_pool,
+                                             tables, q_pos=q_pos,
+                                             softcap=softcap)
+    # 1. jnp ref == resurrected gather path, bit for bit (all lanes)
+    np.testing.assert_array_equal(np.asarray(got_ref), np.asarray(want),
+                                  err_msg=f"seed {seed}")
+
+    got_pl = paged_decode_attention_pallas(q, k_pool, v_pool, pos_pool,
+                                           tables, q_pos=q_pos,
+                                           softcap=softcap, interpret=True)
+    # 2. Pallas(interpret) == ref within fp tolerance on live lanes
+    live = np.asarray(q_pos)[:, 0] >= 0
+    np.testing.assert_allclose(np.asarray(got_pl)[live],
+                               np.asarray(got_ref)[live],
+                               rtol=2e-5, atol=2e-5,
+                               err_msg=f"seed {seed}")
+    # dead lanes: kernel output defined as zeros (engine discards it)
+    assert (np.asarray(got_pl)[~live] == 0.0).all()
+
+
+def test_single_live_block_matches_full_attention_row():
+    """One lane, one block: paged decode == last row of dense attention."""
+    rng = np.random.default_rng(3)
+    bs, Hkv, g, hd = 8, 2, 2, 16
+    S = 6
+    q, k_pool, v_pool, pos_pool, tables, q_pos = _random_pool(
+        rng, B=1, nb=1, bs=bs, Hq=Hkv * g, Hkv=Hkv, hd=hd)
+    tables = jnp.asarray([[0]], jnp.int32)
+    q_pos = jnp.asarray([[S - 1]], jnp.int32)
+    pos_pool = pos_pool.at[0].set(jnp.where(jnp.arange(bs) < S,
+                                            jnp.arange(bs), -1))
+    k = k_pool[0, :S][None]
+    v = v_pool[0, :S][None]
+    full = fa_ref.mha_reference(jnp.broadcast_to(q[:, 0:1, :, :],
+                                                 (1, 1, Hkv * g, hd)),
+                                k, v, causal=False)
+    got = ref.paged_decode_attention_ref(q, k_pool, v_pool, pos_pool, tables,
+                                         q_pos=q_pos)
+    np.testing.assert_allclose(np.asarray(got)[0, 0], np.asarray(full)[0, -1],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ops_dispatch_validates_impl():
+    rng = np.random.default_rng(5)
+    q, k_pool, v_pool, pos_pool, tables, q_pos = _random_pool(
+        rng, B=2, nb=2, bs=4, Hq=2, Hkv=2, hd=8)
+    with pytest.raises(ValueError, match="impl must be one of"):
+        ops.decode_attention(q, k_pool, v_pool, q_pos=q_pos, kv_pos=pos_pool,
+                             block_tables=tables, impl="triton")
+    # dense layout has no Pallas kernel: loud error, not a silent fallback
+    k = jnp.zeros((2, 8, 2, 8))
+    kv_pos = jnp.zeros((2, 8), jnp.int32)
+    with pytest.raises(ValueError, match="dense / sliding-window"):
+        ops.decode_attention(q, k, k, q_pos=q_pos, kv_pos=kv_pos,
+                             impl="pallas")
+    # paged KV is full attention by construction
+    with pytest.raises(ValueError, match="full-attention"):
+        ops.decode_attention(q, k_pool, v_pool, q_pos=q_pos, kv_pos=pos_pool,
+                             block_tables=tables, window=8)
+
+
+def test_ops_dispatch_routes_both_impls():
+    """impl='jnp' and impl='pallas' agree through the public entry point,
+    and the dense branch reproduces the flash decode reference."""
+    rng = np.random.default_rng(6)
+    q, k_pool, v_pool, pos_pool, tables, q_pos = _random_pool(
+        rng, B=3, nb=3, bs=8, Hq=4, Hkv=2, hd=16)
+    a = ops.decode_attention(q, k_pool, v_pool, q_pos=q_pos, kv_pos=pos_pool,
+                             block_tables=tables, softcap=20.0, impl="jnp")
+    b = ops.decode_attention(q, k_pool, v_pool, q_pos=q_pos, kv_pos=pos_pool,
+                             block_tables=tables, softcap=20.0, impl="pallas")
+    live = np.asarray(q_pos)[:, 0] >= 0
+    np.testing.assert_allclose(np.asarray(b)[live], np.asarray(a)[live],
+                               rtol=2e-5, atol=2e-5)
+
+    B, S, Hkv, hd = 2, 9, 2, 8
+    qd = jnp.asarray(rng.standard_normal((B, 1, 4, hd)), jnp.float32)
+    kd = jnp.asarray(rng.standard_normal((B, S, Hkv, hd)), jnp.float32)
+    vd = jnp.asarray(rng.standard_normal((B, S, Hkv, hd)), jnp.float32)
+    kv_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    qp = jnp.full((B, 1), S - 1, jnp.int32)
+    dense = ops.decode_attention(qd, kd, vd, q_pos=qp, kv_pos=kv_pos,
+                                 window=4, impl="jnp")
+    want = fa_ref.decode_attention_ref(qd, kd, vd, q_pos=qp, kv_pos=kv_pos,
+                                       window=4)
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(want))

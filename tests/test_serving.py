@@ -281,6 +281,11 @@ def test_engine_config_validation(mixture):
                            EngineConfig(max_len=MAXLEN, block_size=BS,
                                         prefix_len=PREFIX,
                                         min_prefill_bucket=0))
+    with pytest.raises(ValueError, match="decode_impl"):
+        MixtureServeEngine(ECFG, RCFG, expert_params, router_params,
+                           EngineConfig(max_len=MAXLEN, block_size=BS,
+                                        prefix_len=PREFIX,
+                                        decode_impl="triton"))
     # archs with no full-attention KV have no pool: block alignment is
     # irrelevant and must not be enforced
     key = jax.random.PRNGKey(13)
@@ -595,6 +600,35 @@ def test_fuzz_sampled_engine_matches_baseline(mixture, seed):
                                      for r in reqs)
     for st in eng._experts:                   # no leaks, trial after trial
         assert st.balloc.n_in_use == 0 and st.alloc.n_free == lanes
+
+
+def test_engine_decode_impl_pallas_matches_baseline(mixture):
+    """Satellite: decode_impl='pallas' swaps the paged decode read for
+    the block-table Pallas kernel (interpret-mode on CPU) — tokens must
+    still match the baseline oracle exactly, greedy and sampled mixed,
+    and the read-traffic stats must show the paged win."""
+    rng = np.random.default_rng(41)
+    R = 4
+    prompts = [rng.integers(0, ECFG.vocab_size,
+                            size=int(rng.integers(PREFIX, 30))).astype(np.int32)
+               for _ in range(R)]
+    n_new = [int(rng.integers(2, 7)) for _ in range(R)]
+    sps = [None if i % 2 == 0 else
+           SamplingParams(temperature=0.9, top_k=8, seed=60 + i)
+           for i in range(R)]
+    eng = _engine(mixture, lanes=2, decode_impl="pallas")
+    assert eng.decode_impl == "pallas"
+    for i in range(R):
+        eng.submit(prompts[i], n_new[i], sampling=sps[i])
+    res = eng.run()
+    assert len(res["requests"]) == R
+    assert res["decode_impl"] == "pallas"
+    for r in res["requests"]:
+        want = _oracle(mixture, prompts[r.uid], r.expert, n_new[r.uid],
+                       sampling=sps[r.uid], uid=r.uid)
+        np.testing.assert_array_equal(np.asarray(r.tokens), want)
+    rb = res["decode_read_bytes"]
+    assert 0 < rb["paged"] < rb["gathered"]
 
 
 def test_lane_placement_invariance(mixture):
