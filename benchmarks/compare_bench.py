@@ -1,4 +1,4 @@
-"""Compare a fresh ``BENCH_serve/v1`` report against the checked-in baseline.
+"""Compare a fresh ``BENCH_serve/v*`` report against the checked-in baseline.
 
 CI runs ``serve_bench.py --smoke --json BENCH_serve.json`` on every push
 and then this script against ``benchmarks/BENCH_baseline.json``, so the
@@ -11,6 +11,13 @@ BENCH trajectory is *gated*, not just uploaded:
   * engine tokens/sec must stay within ``--min-ratio`` of the baseline —
     generous by default because shared CI runners are noisy; the full
     delta table lands in ``$GITHUB_STEP_SUMMARY`` either way.
+
+Schema evolution: reports carry ``BENCH_serve/v<N>``.  A *newer* fresh
+report against an *older* baseline is fine — schema bumps add keys (the
+metric paths above are looked up tolerantly and missing rows are simply
+skipped), so the trajectory never breaks just because the bench learned
+to measure something new.  A fresh report OLDER than the baseline fails:
+that means a regression in the bench itself.
 
 Refresh the baseline by re-running the smoke bench and checking in the
 report:  PYTHONPATH=src python benchmarks/serve_bench.py --smoke \
@@ -29,6 +36,17 @@ def _fmt(x):
     if isinstance(x, int):
         return f"{x:,}"
     return str(x)
+
+
+def _schema_version(schema) -> int | None:
+    """``"BENCH_serve/v<N>"`` -> N, else None."""
+    prefix = "BENCH_serve/v"
+    if not isinstance(schema, str) or not schema.startswith(prefix):
+        return None
+    try:
+        return int(schema[len(prefix):])
+    except ValueError:
+        return None
 
 
 def _get(report: dict, path: str):
@@ -88,11 +106,21 @@ def main() -> int:
         fresh = json.load(f)
     with open(args.baseline) as f:
         base = json.load(f)
+    vers = []
     for r, name in ((fresh, args.fresh), (base, args.baseline)):
-        if r.get("schema") != "BENCH_serve/v1":
-            print(f"FAIL: {name} is not a BENCH_serve/v1 report "
+        v = _schema_version(r.get("schema"))
+        if v is None:
+            print(f"FAIL: {name} is not a BENCH_serve/v* report "
                   f"(schema={r.get('schema')!r})")
             return 2
+        vers.append(v)
+    if vers[0] < vers[1]:
+        print(f"FAIL: fresh report schema v{vers[0]} is older than the "
+              f"baseline's v{vers[1]}")
+        return 2
+    if vers[0] > vers[1]:
+        print(f"note: fresh schema v{vers[0]} vs baseline v{vers[1]} — "
+              f"comparing the shared keys (schema bumps add keys)")
 
     table = f"### Serving bench vs baseline\n\n{delta_table(fresh, base)}\n"
     print(table)

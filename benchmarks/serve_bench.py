@@ -29,12 +29,18 @@ overhead, dominates — wasted lane-tokens then cost real wall time.
   PYTHONPATH=src python benchmarks/serve_bench.py --smoke \
       --json BENCH_serve.json                             # CI gate
 
+``--transport process`` runs every expert in its own spawned OS process
+(the multi-host story proven on one machine: pickled request/token
+messages over pipes are the only cross-expert traffic) — the identity
+gates must hold there exactly as on the in-process loopback default.
+
 ``--smoke`` shrinks the models/workload so the token-identity gates
 (greedy under pool pressure, batched-admission prefill budget, AND a
 sampled + early-stop gate) run in CI on every push; the speedup exit
 check is skipped there because tiny models are dispatch-bound.  The
-``--json`` report follows the ``BENCH_serve/v1`` schema, persisted as a
-CI artifact so the perf trajectory accumulates.
+``--json`` report follows the ``BENCH_serve/v2`` schema (v1 + transport
+and per-expert queue-wait/occupancy stats), persisted as a CI artifact
+so the perf trajectory accumulates.
 """
 from __future__ import annotations
 
@@ -101,6 +107,11 @@ def main() -> int:
                     help="paged decode attention: jnp gather reference or "
                          "the Pallas block-table kernel (interpret-mode on "
                          "CPU; auto follows the expert config)")
+    ap.add_argument("--transport", choices=["loopback", "process"],
+                    default="loopback",
+                    help="expert backend: in-process loopback or one "
+                         "spawned OS process per expert (router scores the "
+                         "only cross-process traffic)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mode", choices=["greedy", "sampled"], default="greedy",
                     help="sampled: temperature/top-k/top-p decoding plus a "
@@ -170,23 +181,27 @@ def main() -> int:
                                    sampling=sampling, stop_tokens=stop_tokens)
 
     # ---- engine: continuous batching over the paged pool ------------------
-    eng = MixtureServeEngine(
-        ecfg, rcfg, expert_params, router_params,
-        EngineConfig(lanes_per_expert=args.lanes, max_len=max_len,
-                     prefix_len=prefix_len,
-                     min_prefill_bucket=args.prompt_len,
-                     block_size=args.block_size,
-                     pool_blocks=args.blocks_per_expert,
-                     decode_impl=args.decode_impl))
-    # warmup: compile every admission batch width the timed run can hit
-    # (routing-independent — see MixtureServeEngine.warmup); greedy mode
-    # skips the sampled warmup pass it would never use
-    eng.warmup(args.prompt_len, sampled=args.mode == "sampled")
-    timed = [eng.submit(prompts[i], int(n_new[i]), sampling=sampling,
-                        stop_tokens=stop_tokens, arrival_tick=eng.tick)
-             for i in range(args.requests)]  # timed: all arrive at once
-    uid0 = timed[0].uid
-    res = eng.run()
+    # context managers cover every early-failure return below: worker
+    # processes (process transport) are released on all exit paths
+    with MixtureServeEngine(
+            ecfg, rcfg, expert_params, router_params,
+            EngineConfig(lanes_per_expert=args.lanes, max_len=max_len,
+                         prefix_len=prefix_len,
+                         min_prefill_bucket=args.prompt_len,
+                         block_size=args.block_size,
+                         pool_blocks=args.blocks_per_expert,
+                         decode_impl=args.decode_impl,
+                         transport=args.transport)) as eng:
+        # warmup: compile every admission batch width the timed run can
+        # hit (routing-independent — see MixtureServeEngine.warmup);
+        # greedy mode skips the sampled warmup pass it would never use
+        eng.warmup(args.prompt_len, sampled=args.mode == "sampled")
+        timed = [eng.submit(prompts[i], int(n_new[i]), sampling=sampling,
+                            stop_tokens=stop_tokens, arrival_tick=eng.tick)
+                 for i in range(args.requests)]  # timed: all arrive at once
+        uid0 = timed[0].uid
+        res = eng.run()
+        pool_blocks = eng.pool_blocks
 
     # ---- identity + report ------------------------------------------------
     mismatches = []
@@ -198,8 +213,12 @@ def main() -> int:
     speedup = res["tokens_per_s"] / serial["tokens_per_s"]
     dense = dense_slab_bytes(ecfg, args.lanes, max_len)
     report = {
-        "schema": "BENCH_serve/v1",
+        # v2 (PR 5): adds "transport" + per-expert queue_wait_ticks /
+        # occupancy under engine.per_expert; compare_bench.py accepts a
+        # newer fresh report against an older baseline (added keys only)
+        "schema": "BENCH_serve/v2",
         "mode": args.mode,
+        "transport": args.transport,
         "workload": {"requests": args.requests, "experts": args.experts,
                      "lanes": args.lanes, "prompt_len": args.prompt_len,
                      "max_len": max_len,
@@ -219,9 +238,15 @@ def main() -> int:
                    "early_stops": res["early_stops"],
                    "occupancy": round(res["occupancy"], 3),
                    "ticks": res["ticks"],
-                   "prefill_calls": res["prefill_calls"]},
+                   "prefill_calls": res["prefill_calls"],
+                   "per_expert": {
+                       e: {"served": s["served"],
+                           "prefills": s["prefills"],
+                           "queue_wait_ticks": s["queue_wait_ticks"],
+                           "occupancy": round(s["occupancy"], 3)}
+                       for e, s in res["per_expert"].items()}},
         "paged_kv": {"block_size": args.block_size,
-                     "pool_blocks_per_expert": eng.pool_blocks,
+                     "pool_blocks_per_expert": pool_blocks,
                      "peak_blocks": {e: s["peak_blocks"] for e, s in
                                      res["per_expert"].items()},
                      "hbm_bytes_per_lane": res["kv_bytes_per_lane"],
@@ -267,30 +292,33 @@ def main() -> int:
         # the pressured pool above serializes admission, so the batching
         # bound needs a second, full-pool engine: k_e simultaneous
         # arrivals per expert must cost <= ceil(k_e / lanes) prefills
-        eng2 = MixtureServeEngine(
-            ecfg, rcfg, expert_params, router_params,
-            EngineConfig(lanes_per_expert=args.lanes, max_len=max_len,
-                         prefix_len=prefix_len,
-                         min_prefill_bucket=args.prompt_len,
-                         block_size=args.block_size,
-                         decode_impl=args.decode_impl))
-        eng2.warmup(args.prompt_len, sampled=False)
-        # uniform budget: lanes then free together, so admission drains
-        # `lanes` requests per prefill and the ceil bound is tight
-        # (greedy, no stops: the budget must stay tight, so the reference
-        # is its own greedy serial run, independent of --mode)
-        uniform = args.min_new
-        ref2 = baseline.serve_serial(
-            ecfg, rcfg, expert_params, router_params, prompts,
-            np.full(args.requests, uniform), prefix_len=prefix_len,
-            cache_len=max_len)
-        reqs = [eng2.submit(prompts[i], uniform, arrival_tick=eng2.tick)
-                for i in range(args.requests)]
-        res2 = eng2.run()
-        for e, st in enumerate(eng2._experts):
+        with MixtureServeEngine(
+                ecfg, rcfg, expert_params, router_params,
+                EngineConfig(lanes_per_expert=args.lanes, max_len=max_len,
+                             prefix_len=prefix_len,
+                             min_prefill_bucket=args.prompt_len,
+                             block_size=args.block_size,
+                             decode_impl=args.decode_impl,
+                             transport=args.transport)) as eng2:
+            eng2.warmup(args.prompt_len, sampled=False)
+            # uniform budget: lanes then free together, so admission
+            # drains `lanes` requests per prefill and the ceil bound is
+            # tight (greedy, no stops: the budget must stay tight, so the
+            # reference is its own greedy serial run, independent of --mode)
+            uniform = args.min_new
+            ref2 = baseline.serve_serial(
+                ecfg, rcfg, expert_params, router_params, prompts,
+                np.full(args.requests, uniform), prefix_len=prefix_len,
+                cache_len=max_len)
+            reqs = [eng2.submit(prompts[i], uniform, arrival_tick=eng2.tick)
+                    for i in range(args.requests)]
+            res2 = eng2.run()
+        # per-expert stats come from the run report (StatsMsg across the
+        # transport), so this gate holds for process-backed experts too
+        for e, st in res2["per_expert"].items():
             k_e = sum(1 for r in reqs if r.expert == e)
-            if st.prefill_calls > -(-k_e // args.lanes):
-                print(f"FAIL: expert {e} took {st.prefill_calls} prefill "
+            if st["prefills"] > -(-k_e // args.lanes):
+                print(f"FAIL: expert {e} took {st['prefills']} prefill "
                       f"calls for {k_e} simultaneous arrivals "
                       f"(bound ceil(k/lanes) = {-(-k_e // args.lanes)})")
                 return emit(1)
@@ -311,19 +339,20 @@ def main() -> int:
             ecfg, rcfg, expert_params, router_params, prompts, n_new,
             prefix_len=prefix_len, cache_len=max_len, sampling=sp,
             stop_tokens=stops3)
-        eng3 = MixtureServeEngine(
-            ecfg, rcfg, expert_params, router_params,
-            EngineConfig(lanes_per_expert=args.lanes, max_len=max_len,
-                         prefix_len=prefix_len,
-                         min_prefill_bucket=args.prompt_len,
-                         block_size=args.block_size,
-                         pool_blocks=args.blocks_per_expert,
-                         decode_impl=args.decode_impl))
-        eng3.warmup(args.prompt_len)
-        reqs3 = [eng3.submit(prompts[i], int(n_new[i]), sampling=sp,
-                             stop_tokens=stops3, arrival_tick=eng3.tick)
-                 for i in range(args.requests)]
-        res3 = eng3.run()
+        with MixtureServeEngine(
+                ecfg, rcfg, expert_params, router_params,
+                EngineConfig(lanes_per_expert=args.lanes, max_len=max_len,
+                             prefix_len=prefix_len,
+                             min_prefill_bucket=args.prompt_len,
+                             block_size=args.block_size,
+                             pool_blocks=args.blocks_per_expert,
+                             decode_impl=args.decode_impl,
+                             transport=args.transport)) as eng3:
+            eng3.warmup(args.prompt_len)
+            reqs3 = [eng3.submit(prompts[i], int(n_new[i]), sampling=sp,
+                                 stop_tokens=stops3, arrival_tick=eng3.tick)
+                     for i in range(args.requests)]
+            res3 = eng3.run()
         bad3 = [i for i, r in enumerate(reqs3)
                 if not np.array_equal(np.asarray(r.tokens),
                                       serial3["tokens"][i])]

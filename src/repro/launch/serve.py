@@ -10,7 +10,10 @@ one-shot serial per-group loop instead, for comparison).  Generation is
 controlled per request by ``SamplingParams`` — ``--temperature`` /
 ``--top-k`` / ``--top-p`` / ``--sample-seed`` (temperature 0 = greedy)
 — and optional ``--stop-tokens`` ids that end a sequence early and hand
-its KV blocks to the next queued request the same tick.
+its KV blocks to the next queued request the same tick.  ``--transport
+process`` runs each expert in its own spawned OS process (own params +
+KV pool; the router scores are the only cross-process traffic — the
+paper's multi-host story on one machine).
 
 Usage (demo on synthetic prompts with randomly-initialized weights, or on
 checkpoints produced by launch/train.py):
@@ -69,6 +72,12 @@ def main() -> None:
                     help="paged decode attention: jnp gather reference or "
                          "the Pallas block-table kernel (auto follows the "
                          "preset's use_pallas)")
+    ap.add_argument("--transport", choices=["loopback", "process"],
+                    default="loopback",
+                    help="expert backend: in-process loopback or one "
+                         "spawned OS process per expert, each with its own "
+                         "params + KV pool (router scores are the only "
+                         "cross-process traffic)")
     ap.add_argument("--arrive-every", type=int, default=2,
                     help="simulated arrival: one request per N ticks")
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -120,14 +129,17 @@ def main() -> None:
                                           prefix_len=args.prefix_len,
                                           block_size=args.block_size,
                                           pool_blocks=args.blocks_per_expert,
-                                          decode_impl=args.decode_impl))
-    for i in range(args.requests):
-        eng.submit(prompts[i], args.new_tokens, sampling=sampling,
-                   stop_tokens=stop_tokens,
-                   arrival_tick=i // max(args.arrive_every, 1))
-    res = eng.run()
+                                          decode_impl=args.decode_impl,
+                                          transport=args.transport))
+    with eng:                      # releases worker processes on exit
+        for i in range(args.requests):
+            eng.submit(prompts[i], args.new_tokens, sampling=sampling,
+                       stop_tokens=stop_tokens,
+                       arrival_tick=i // max(args.arrive_every, 1))
+        res = eng.run()
     print(f"{args.requests} requests, {args.experts} experts, "
-          f"{args.lanes} lanes: {res['useful_tokens']} tokens in "
+          f"{args.lanes} lanes ({res['transport']}): "
+          f"{res['useful_tokens']} tokens in "
           f"{res['wall_s']:.2f}s = {res['tokens_per_s']:.1f} tok/s, "
           f"occupancy {res['occupancy']:.2f}, "
           f"mean TTFT {res['mean_ttft_s'] * 1e3:.0f}ms, "

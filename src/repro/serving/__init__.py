@@ -7,14 +7,30 @@ block-pool KV cache (:mod:`repro.serving.cache`), with per-request
 sampled inside the jitted decode step (:mod:`repro.serving.sampling`)
 and a streaming interface (:meth:`MixtureServeEngine.stream`) yielding
 :class:`TokenDelta` records as tokens decode.
-:mod:`repro.serving.baseline` keeps the original one-shot serial path —
-extended with the identical sampler — as the numerical oracle and
-benchmark baseline.
+
+Internally the engine is split into a router frontend
+(:mod:`repro.serving.frontend`), one self-contained
+:class:`ExpertServer` per expert (:mod:`repro.serving.expert_server`),
+and a pluggable message transport (:mod:`repro.serving.transport`) —
+in-process loopback by default, or one OS process per expert with
+``EngineConfig(transport="process")``.  See
+``src/repro/serving/README.md`` for the layering and the message
+protocol.  :mod:`repro.serving.baseline` keeps the original one-shot
+serial path — extended with the identical sampler — as the numerical
+oracle and benchmark baseline.
 """
 from repro.serving.engine import EngineConfig, MixtureServeEngine, TokenDelta
+from repro.serving.expert_server import ExpertServer
+from repro.serving.frontend import ServeFrontend
 from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import (BlockAllocator, Request, RequestQueue,
                                      SlotAllocator)
+from repro.serving.transport import (LoopbackTransport, ProcessTransport,
+                                     RequestMsg, StatsMsg, TokenDeltaMsg,
+                                     Transport)
 
-__all__ = ["BlockAllocator", "EngineConfig", "MixtureServeEngine", "Request",
-           "RequestQueue", "SamplingParams", "SlotAllocator", "TokenDelta"]
+__all__ = ["BlockAllocator", "EngineConfig", "ExpertServer",
+           "LoopbackTransport", "MixtureServeEngine", "ProcessTransport",
+           "Request", "RequestMsg", "RequestQueue", "SamplingParams",
+           "ServeFrontend", "SlotAllocator", "StatsMsg", "TokenDelta",
+           "TokenDeltaMsg", "Transport"]

@@ -1,663 +1,51 @@
-"""Continuous-batching serving engine for the routed mixture (paper §2.2).
+"""Continuous-batching serving engine — thin facade over the layered stack.
 
-The paper's inference story is that a tiny router ensemble scores the
-request prefix and exactly ONE expert serves the request — so the mixture
-costs 1/E of its parameters at inference.  That only pays off at scale if
-the serving path keeps every expert's decode lanes full.  This engine
-does that with the classic continuous-batching loop:
+The engine the rest of the repo talks to is a three-layer system (see
+``src/repro/serving/README.md``), mirroring the paper's premise that the
+router's prefix scores are the only cross-expert traffic (§1, App. A.4):
 
-  submit -> [router scores prefix, argmax expert]      (batched, padded)
-         -> per-expert FIFO until a decode lane AND pool blocks free
-         -> batched prefill into the paged block-pool KV cache
-         -> joined into that expert's fixed-lane decode batch mid-flight
+  * :mod:`repro.serving.frontend`      — router scoring, uid assignment,
+    delta reassembly, ``stream()``/``run()`` aggregation; drives experts
+    without a barrier (each ticks on its own clock whenever it has work);
+  * :mod:`repro.serving.expert_server` — one self-contained
+    :class:`~repro.serving.expert_server.ExpertServer` per expert:
+    admission, batched prefill, the jitted decode+sample step, the paged
+    block-pool KV cache, early-stop lane recycling;
+  * :mod:`repro.serving.transport`     — the serializable message
+    boundary between them: in-process loopback (default) or one spawned
+    OS process per expert (``EngineConfig(transport="process")``), the
+    local-machine proof of the multi-host deployment story.
 
-KV memory is *paged* (see :mod:`repro.serving.cache`): full-attention
-layers share a per-expert pool of ``block_size``-token blocks and each
-lane holds a block table instead of a dense ``max_len`` slab, so the
-pool can be sized below ``lanes * max_len`` and admission reserves only
-``ceil(len(prompt)+max_new-1) / block_size)`` blocks per request.  The
-decode *read* goes through the unified paged-attention dispatch
-(:mod:`repro.kernels.paged_attention.ops`): ``EngineConfig.decode_impl``
-selects the jnp gather reference (tokens bit-identical to the baseline
-oracle) or the Pallas block-table kernel that reads only live blocks;
-either way :meth:`MixtureServeEngine.run` reports the paged read
-bytes/tick next to what the old gathered ``(lanes, max_len)`` view
-would have cost (``decode_read_bytes``).
-
-Admission is *batched*: one tick drains up to ``lanes_per_expert``
-pending requests into a single prefill call padded to a fixed batch
-width and one shared prompt-length bucket (one compile per bucket, not
-per request), then inserts all of them with a single jitted scatter.
-Archs whose prefill is not right-pad-safe (sliding-window, SSM, xLSTM)
-fall back to exact-length one-request prefills.
-
-Every tick runs ONE jitted ``decode_step`` per expert with active lanes,
-over stable shapes ``(lanes, 1)`` — finished sequences are evicted and
-queued requests admitted between ticks without ever recompiling.  The
-next token is drawn *inside* that jit by the shared row-wise sampler
-(:mod:`repro.serving.sampling`): per-lane ``temperature`` / ``top_k`` /
-``top_p`` arrays plus a counter-based RNG key per lane
-(``fold_in(fold_in(PRNGKey(seed), uid), step)``) are plain traced
-operands, so any mix of greedy and sampled requests shares one compiled
-program and a request's tokens are invariant to which lane it lands in.
-Greedy requests (``temperature=0``, the default) still match the
-one-shot :func:`repro.serving.baseline.generate` token-for-token, and
-sampled requests match ``baseline.generate`` run with the same
-``SamplingParams`` and uid — the first token comes from the prefill
-logits, each decode feeds the previous token at its lane's own position
-(per-slot ``positions`` / ``cache_index`` vectors plus ``block_tables``,
-see ``models/model.decode_step``).
-
-A request ends when it hits its ``max_new_tokens`` budget or emits one
-of its ``stop_tokens`` — early stops free the lane and its KV pool
-blocks the same tick, so a queued request can take them at the next
-admission.  Callers either drive :meth:`MixtureServeEngine.run` for a
-batch result or iterate :meth:`MixtureServeEngine.stream` to consume
-per-token :class:`TokenDelta` records as they decode.
+:class:`MixtureServeEngine` keeps the historical API —
+``submit`` / ``step`` / ``stream`` / ``run`` / ``warmup`` plus the
+``_experts`` introspection the tests use — while the implementation
+lives in the layers above.  The bitwise contract survives the split by
+construction: tokens are keyed by
+``fold_in(fold_in(PRNGKey(seed), uid), step)`` and lane-placement-
+invariant, so per-expert async ticking cannot change any request's
+stream vs :mod:`repro.serving.baseline`, greedy or sampled — the fuzz
+oracles in ``tests/test_serving.py`` hold on every transport.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-import time
-from collections import deque
+from repro.serving.expert_server import (EngineConfig, ExpertServer,
+                                         PAD_SAFE_KINDS, bucket_len,
+                                         resolve_shapes)
+from repro.serving.frontend import ServeFrontend, TokenDelta
+from repro.serving.transport import (LoopbackTransport, ProcessTransport,
+                                     RequestMsg, StatsMsg, TokenDeltaMsg,
+                                     Transport)
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import base as cfglib
-from repro.core import assignment as asg
-from repro.core import router as routerlib
-from repro.models import model as modellib
-from repro.serving import cache as cachelib
-from repro.serving import sampling as samplib
-from repro.serving.sampling import SamplingParams
-from repro.serving.scheduler import (BlockAllocator, Request, RequestQueue,
-                                     SlotAllocator)
-
-PAD_SAFE_KINDS = (cfglib.ATTN, cfglib.ATTN_SHARED)
+__all__ = ["EngineConfig", "ExpertServer", "LoopbackTransport",
+           "MixtureServeEngine", "PAD_SAFE_KINDS", "ProcessTransport",
+           "RequestMsg", "ServeFrontend", "StatsMsg", "TokenDelta",
+           "TokenDeltaMsg", "Transport", "bucket_len", "resolve_shapes"]
 
 
-@dataclasses.dataclass(frozen=True)
-class TokenDelta:
-    """One streamed token: request, its value/position, and completion."""
-    request: Request
-    token: int
-    index: int                    # position within request.tokens
-    done: bool                    # True on the request's final token
-    tick: int
+class MixtureServeEngine(ServeFrontend):
+    """Queue + router + per-expert continuous decode batches.
 
-
-def bucket_len(n: int, min_bucket: int, max_len: int) -> int:
-    """Prompt-length bucket: ``min_bucket`` doubled until >= n, capped at
-    ``max_len``.  Monotone in ``n``, so admission batches can pad to the
-    largest bucket among their members."""
-    if min_bucket < 1:
-        raise ValueError(f"min_bucket must be >= 1, got {min_bucket}")
-    b = min_bucket
-    while b < n:
-        b *= 2
-    return min(b, max_len)
-
-
-@dataclasses.dataclass(frozen=True)
-class EngineConfig:
-    """Shape/scheduling knobs (all static: they define the compiled shapes)."""
-    lanes_per_expert: int = 4     # fixed decode-batch width per expert
-    max_len: int = 128            # per-lane KV budget (prompt + new tokens)
-    prefix_len: int = 32          # router scoring prefix M
-    route_batch: int = 8          # router calls are padded to this many rows
-    min_prefill_bucket: int = 16  # smallest power-of-2 prompt bucket
-    block_size: int = 16          # tokens per paged KV block
-    pool_blocks: int = 0          # KV blocks per expert; 0 -> lanes*max_len/bs
-    decode_impl: str = "auto"     # paged decode kernel: auto|jnp|pallas
-                                  # (auto follows the expert cfg's use_pallas)
-
-
-@functools.lru_cache(maxsize=None)
-def _jit_fns(ecfg, dcfg, rcfg, max_len: int):
-    """Jitted serving kernels, shared across engine instances.
-
-    Keyed on the (hashable, frozen) configs so fuzz suites building many
-    engines reuse one compile cache instead of re-jitting per instance.
-    ``dcfg`` is the decode-side expert config — identical to ``ecfg``
-    except possibly ``use_pallas``, so ``EngineConfig.decode_impl`` can
-    flip the paged-attention kernel without dragging prefill onto the
-    Pallas flash path.
+    A pure facade: everything is inherited from
+    :class:`repro.serving.frontend.ServeFrontend` — this class only
+    pins the historical name and import path.
     """
-    def decode_and_sample(p, toks, pos, ci, bt, c, keys, steps, temps,
-                          top_ks, top_ps):
-        logits, nc = modellib.decode_step(
-            p, dcfg, {"tokens": toks, "positions": pos, "cache_index": ci,
-                      "block_tables": bt}, c)
-        return samplib.sample_tokens(logits[:, 0], keys, steps, temps,
-                                     top_ks, top_ps), nc
-
-    def decode_greedy(p, toks, pos, ci, bt, c):
-        # all-greedy ticks skip the sampler entirely (its sort/softmax
-        # work per lane per token is pure waste when every temp is 0);
-        # both programs compile once, so mode flips never recompile
-        logits, nc = modellib.decode_step(
-            p, dcfg, {"tokens": toks, "positions": pos, "cache_index": ci,
-                      "block_tables": bt}, c)
-        return jnp.argmax(logits[:, 0], -1).astype(jnp.int32), nc
-
-    decode = jax.jit(decode_and_sample)
-    decode_g = jax.jit(decode_greedy)
-    prefill = jax.jit(
-        lambda p, toks, last: modellib.prefill(
-            p, ecfg, {"tokens": toks}, cache_len=max_len, last_index=last))
-    score = jax.jit(
-        lambda rp, toks: routerlib.ensemble_scores(rp, rcfg, toks))
-    insert = jax.jit(functools.partial(cachelib.insert_requests, ecfg))
-    return decode, decode_g, prefill, score, insert, samplib.sample_tokens_jit
-
-
-@dataclasses.dataclass
-class _Expert:
-    """Mutable per-expert serving state (host side + one device cache tree)."""
-    caches: object
-    alloc: SlotAllocator
-    balloc: BlockAllocator
-    pending: deque
-    tok: np.ndarray               # (lanes,) last emitted token per lane
-    pos: np.ndarray               # (lanes,) next decode position per lane
-    active: np.ndarray            # (lanes,) bool
-    req: list                     # slot -> Request | None
-    block_tables: np.ndarray      # (lanes, max_len // block_size) int32
-    blocks: list                  # slot -> list[int] reserved pool blocks
-    # per-lane sampling state, fed straight into the jitted decode+sample
-    keys: np.ndarray              # (lanes, 2) uint32 request RNG roots
-    steps: np.ndarray             # (lanes,) int32 next token counter
-    temp: np.ndarray              # (lanes,) float32; 0 = greedy
-    topk: np.ndarray              # (lanes,) int32; 0 = disabled
-    topp: np.ndarray              # (lanes,) float32; 1 = disabled
-    n_served: int = 0
-    decode_calls: int = 0
-    prefill_calls: int = 0
-    occupied_lane_steps: int = 0  # sum of active lanes over decode calls
-    # KV read traffic of the paged decode path vs the gathered view it
-    # replaced (bookkeeping from reserved-block counts, impl-independent)
-    paged_read_bytes: int = 0
-    gathered_read_bytes: int = 0
-
-
-class MixtureServeEngine:
-    """Queue + scheduler + per-expert continuous decode batches."""
-
-    def __init__(self, ecfg, rcfg, expert_params: list, router_params,
-                 eng: EngineConfig = EngineConfig()):
-        if not ecfg.causal:
-            raise ValueError("serving needs a causal (decoder) expert config")
-        self.ecfg, self.rcfg, self.eng = ecfg, rcfg, eng
-        self.expert_params = list(expert_params)
-        self.router_params = router_params
-        self.n_experts = len(self.expert_params)
-        # prompt-length bucketing pads on the right; that is exact for full
-        # attention (causal mask hides the future) but would pollute
-        # rotating-window KV buffers and recurrent (SSM/xLSTM) states, so
-        # those archs fall back to exact-length prefill compiles.
-        self.pad_safe = all(k in PAD_SAFE_KINDS for k in ecfg.layer_pattern)
-        # only full-attention layers hold paged KV; pure-recurrent /
-        # sliding-window experts never touch the block pool
-        self.has_pool = any(k in cachelib.POOL_KINDS
-                            for k in ecfg.layer_pattern)
-
-        if eng.min_prefill_bucket < 1:
-            raise ValueError(f"min_prefill_bucket must be >= 1, "
-                             f"got {eng.min_prefill_bucket}")
-        if eng.decode_impl not in ("auto", "jnp", "pallas"):
-            raise ValueError(f"decode_impl must be 'auto', 'jnp' or "
-                             f"'pallas', got {eng.decode_impl!r}")
-        # decode_impl overrides use_pallas for the jitted decode programs
-        # only: prefill keeps the expert config's own kernel choice
-        dcfg = ecfg if eng.decode_impl == "auto" else \
-            ecfg.replace(use_pallas=eng.decode_impl == "pallas")
-        self.decode_impl = "pallas" if dcfg.use_pallas else "jnp"
-        L, M, bs = eng.lanes_per_expert, eng.max_len, eng.block_size
-        if self.has_pool and M % bs:
-            raise ValueError(f"max_len {M} not a multiple of "
-                             f"block_size {bs}")
-        self.lane_blocks = -(-M // bs)
-        pool = eng.pool_blocks or L * self.lane_blocks
-        if self.has_pool and pool < self.lane_blocks:
-            raise ValueError(
-                f"pool_blocks {pool} cannot hold one max-size request "
-                f"({self.lane_blocks} blocks) — the queue would deadlock")
-        self.pool_blocks = pool
-        # per-(block, layer) decode read traffic: k + v + slot positions
-        self._pool_layers = sum(k in cachelib.POOL_KINDS
-                                for k in ecfg.layer_pattern)
-        self._block_read_bytes = bs * (
-            2 * ecfg.n_kv_heads * ecfg.resolved_head_dim
-            * np.dtype(ecfg.compute_dtype).itemsize
-            + np.dtype(np.int32).itemsize)
-        self._experts = [
-            _Expert(caches=cachelib.init_paged_caches(ecfg, L, pool, bs, M),
-                    alloc=SlotAllocator(L), balloc=BlockAllocator(pool),
-                    pending=deque(),
-                    tok=np.zeros(L, np.int32), pos=np.zeros(L, np.int32),
-                    active=np.zeros(L, bool), req=[None] * L,
-                    block_tables=np.full((L, self.lane_blocks), -1, np.int32),
-                    blocks=[[] for _ in range(L)],
-                    keys=np.zeros((L, 2), np.uint32),
-                    steps=np.zeros(L, np.int32),
-                    temp=np.zeros(L, np.float32),
-                    topk=np.zeros(L, np.int32),
-                    topp=np.ones(L, np.float32))
-            for _ in range(self.n_experts)]
-        self.queue = RequestQueue()
-        self.tick = 0
-        self._uid = 0
-        self._t0: float | None = None
-        self.last_deltas: list[TokenDelta] = []
-        (self._decode_fn, self._decode_greedy_fn, self._prefill_fn,
-         self._score_fn, self._insert_fn, self._sample_fn) = \
-            _jit_fns(ecfg, dcfg, rcfg, M)
-
-    # -- warmup ------------------------------------------------------------
-    def warmup(self, prompt_len: int | None = None, *,
-               sampled: bool = True) -> None:
-        """Compile every serving shape up front, off the timed path.
-
-        Drives expert 0's admission/decode directly (bypassing routing,
-        which could scatter a warmup batch across experts and leave the
-        wider admission widths uncompiled) with synthetic requests at
-        every power-of-two admission width.  The jitted functions are
-        shared across experts, so one expert's shapes warm them all.
-        ``prompt_len`` selects which prefill bucket to warm (defaults to
-        the routing prefix length); call again for other buckets.
-        ``sampled=False`` skips the second, sampled warmup pass — a
-        greedy-only deployment then never compiles the sampler programs.
-        """
-        pl = min(prompt_len or self.eng.prefix_len, self.eng.max_len - 2)
-        L = self.eng.lanes_per_expert
-        if self._t0 is None:
-            self._t0 = time.perf_counter()
-        # router scoring always runs on (route_batch, prefix_len) chunks
-        self._score_fn(self.router_params,
-                       jnp.zeros((self.eng.route_batch, self.eng.prefix_len),
-                                 jnp.int32))
-        st = self._experts[0]
-        # one greedy pass (argmax-only decode program) and one sampled pass
-        # (mixed decode program + per-width sampler) so a live mix of
-        # recipes hits only warm compiles
-        for temp in (0.0, 1.0) if sampled else (0.0,):
-            for k in sorted({min(1 << (b - 1).bit_length(), L)
-                             for b in range(1, L + 1)}):
-                for _ in range(k):
-                    st.pending.append(Request(
-                        uid=-1, prompt=np.zeros(pl, np.int32),
-                        max_new_tokens=2,
-                        sampling=SamplingParams(temperature=temp)))
-                sink: list[Request] = []
-                while st.pending or st.active.any():
-                    self._admit(0, st, sink)
-                    self._decode(0, st, sink)
-        self._t0 = None
-        self.last_deltas = []         # don't surface synthetic warmup tokens
-
-    # -- request intake ----------------------------------------------------
-    def submit(self, prompt, max_new_tokens: int,
-               sampling: SamplingParams | None = None,
-               stop_tokens=(),
-               arrival_tick: int | None = None) -> Request:
-        """Queue one generation request; returns its live Request record.
-
-        ``sampling`` defaults to greedy; ``stop_tokens`` is any iterable
-        of token ids that end the sequence early (the stop token is kept
-        as the final emitted token, and the request's KV blocks are freed
-        the same tick).
-        """
-        prompt = np.asarray(prompt, np.int32).reshape(-1)
-        if prompt.size == 0:
-            raise ValueError("empty prompt")
-        if len(prompt) < self.eng.prefix_len:
-            raise ValueError(f"prompt shorter than routing prefix "
-                             f"({len(prompt)} < {self.eng.prefix_len})")
-        if len(prompt) + max_new_tokens > self.eng.max_len:
-            raise ValueError(f"prompt {len(prompt)} + {max_new_tokens} new "
-                             f"tokens exceeds lane budget {self.eng.max_len}")
-        sampling = SamplingParams() if sampling is None else sampling
-        if not isinstance(sampling, SamplingParams):
-            raise TypeError(f"sampling must be a SamplingParams, "
-                            f"got {type(sampling).__name__}")
-        stop_tokens = frozenset(int(t) for t in stop_tokens)
-        bad = [t for t in stop_tokens if not 0 <= t < self.ecfg.vocab_size]
-        if bad:
-            raise ValueError(f"stop tokens outside vocab: {sorted(bad)}")
-        req = Request(uid=self._uid, prompt=prompt,
-                      max_new_tokens=max_new_tokens,
-                      sampling=sampling, stop_tokens=stop_tokens,
-                      arrival_tick=self.tick if arrival_tick is None
-                      else arrival_tick)
-        self._uid += 1
-        self.queue.push(req)
-        return req
-
-    # -- routing -----------------------------------------------------------
-    def _route(self, reqs: list[Request]) -> None:
-        """Score prefixes in padded fixed-width batches, argmax an expert."""
-        pl, rb = self.eng.prefix_len, self.eng.route_batch
-        prefixes = np.stack([r.prompt[:pl] for r in reqs])
-        for i in range(0, len(reqs), rb):
-            chunk = prefixes[i:i + rb]
-            n = len(chunk)
-            if n < rb:        # pad with copies of row 0; scores are per-row
-                chunk = np.concatenate([chunk, np.broadcast_to(
-                    chunk[:1], (rb - n,) + chunk.shape[1:])])
-            scores = np.asarray(self._score_fn(self.router_params,
-                                               jnp.asarray(chunk)))
-            eids = np.asarray(asg.argmax_assignment(scores[:n]))
-            for r, e in zip(reqs[i:i + n], eids):
-                r.expert = int(e)
-                r.route_tick = self.tick
-                self._experts[r.expert].pending.append(r)
-
-    # -- lane lifecycle ----------------------------------------------------
-    def _bucket(self, n: int) -> int:
-        if not self.pad_safe:
-            return n
-        return bucket_len(n, self.eng.min_prefill_bucket, self.eng.max_len)
-
-    def _blocks_needed(self, req: Request) -> int:
-        """Pool blocks covering every KV write the request will make.
-
-        Positions written: 0..len(prompt)-1 by prefill, then one per fed-
-        back token — the final emitted token is never written, so the
-        highest position is len(prompt) + max_new - 2.
-        """
-        if not self.has_pool:
-            return 0
-        used = len(req.prompt) + req.max_new_tokens - 1
-        return -(-used // self.eng.block_size)
-
-    def _admit(self, e: int, st: _Expert, completed: list[Request]) -> None:
-        """Drain pending requests into free lanes with one batched prefill.
-
-        FIFO admission: take from the queue head while a decode lane and
-        (full-attention archs) enough pool blocks are available.  All
-        drained requests share one prefill call padded to the fixed lane
-        width and the largest prompt bucket among them (non-pad-safe archs
-        prefill one request at a time at exact length), then land in the
-        caches via one jitted scatter.
-        """
-        batch: list[tuple[Request, int, np.ndarray]] = []
-        while st.pending and st.alloc.n_free:
-            req = st.pending[0]
-            blocks = st.balloc.alloc_n(self._blocks_needed(req))
-            if blocks is None:
-                break                       # pool full: wait, keep FIFO order
-            st.pending.popleft()
-            slot = st.alloc.alloc()
-            row = np.full(self.lane_blocks, -1, np.int32)
-            row[:len(blocks)] = blocks
-            st.blocks[slot] = blocks
-            batch.append((req, slot, row))
-        if not batch:
-            return
-
-        params = self.expert_params[e]
-        L = self.eng.lanes_per_expert
-        lens = np.array([len(r.prompt) for r, _, _ in batch])
-        # per-request sampling operands for the first token (counter 0);
-        # greedy requests keep a zero key and never touch the RNG
-        keys = np.stack([np.zeros(2, np.uint32) if r.sampling.greedy
-                         else samplib.request_key(r.sampling.seed, r.uid)
-                         for r, _, _ in batch])
-        temps = np.array([r.sampling.temperature for r, _, _ in batch],
-                         np.float32)
-        topks = np.array([r.sampling.top_k for r, _, _ in batch], np.int32)
-        topps = np.array([r.sampling.top_p for r, _, _ in batch], np.float32)
-
-        def first_tokens(logits, idx):
-            """Sample token 0 for batch members ``idx`` from their prefill
-            logits rows (padding rows ride along as greedy no-ops)."""
-            n = len(idx)
-            if not (temps[idx] > 0.0).any():          # all greedy: plain argmax
-                return np.asarray(jnp.argmax(logits[:n], -1))
-            pad = logits.shape[0] - n
-            return np.asarray(self._sample_fn(
-                logits,
-                np.concatenate([keys[idx], np.zeros((pad, 2), np.uint32)]),
-                np.zeros(n + pad, np.int32),
-                np.concatenate([temps[idx], np.zeros(pad, np.float32)]),
-                np.concatenate([topks[idx], np.zeros(pad, np.int32)]),
-                np.concatenate([topps[idx], np.ones(pad, np.float32)])))[:n]
-
-        if self.pad_safe:
-            # one (K, bucket) prefill for the whole drain: K is the batch
-            # width padded to the next power of two (bounded compile count,
-            # no full-lane-width compute for single admissions), bucket =
-            # the largest prompt bucket among the drained requests
-            K = min(1 << (len(batch) - 1).bit_length(), L)
-            bucket = max(self._bucket(int(n)) for n in lens)
-            toks = np.zeros((K, bucket), np.int32)
-            last = np.zeros(K, np.int32)
-            for i, (req, _, _) in enumerate(batch):
-                toks[i, :lens[i]] = req.prompt
-                last[i] = lens[i] - 1
-            logits, rcache = self._prefill_fn(params, jnp.asarray(toks),
-                                              jnp.asarray(last))
-            st.prefill_calls += 1
-            rows = np.full((K, self.lane_blocks), -1, np.int32)
-            slots = np.full(K, L, np.int32)       # out-of-range -> dropped
-            true = np.zeros(K, np.int32)
-            for i, (_, slot, row) in enumerate(batch):
-                rows[i], slots[i], true[i] = row, slot, lens[i]
-            st.caches = self._insert_fn(st.caches, rcache, rows, slots, true)
-            firsts = first_tokens(logits, np.arange(len(batch)))
-        else:
-            firsts = np.zeros(len(batch), np.int64)
-            for i, (req, slot, row) in enumerate(batch):
-                logits, rcache = self._prefill_fn(
-                    params, jnp.asarray(req.prompt[None]),
-                    jnp.full((1,), lens[i] - 1, jnp.int32))
-                st.prefill_calls += 1
-                st.caches = self._insert_fn(
-                    st.caches, rcache, row[None],
-                    np.full(1, slot, np.int32),
-                    np.full(1, lens[i], np.int32))
-                firsts[i] = int(first_tokens(logits, np.array([i]))[0])
-
-        for i, (req, slot, row) in enumerate(batch):
-            first = int(firsts[i])
-            req.tokens.append(first)
-            req.admit_tick = self.tick
-            req.t_first = time.perf_counter() - self._t0
-            st.block_tables[slot] = row
-            st.tok[slot], st.pos[slot] = first, lens[i]
-            st.active[slot], st.req[slot] = True, req
-            st.keys[slot] = keys[i]
-            st.steps[slot] = 1
-            st.temp[slot], st.topk[slot], st.topp[slot] = \
-                temps[i], topks[i], topps[i]
-            done = req.max_new_tokens == 1 or first in req.stop_tokens
-            self.last_deltas.append(TokenDelta(
-                request=req, token=first, index=0, done=done, tick=self.tick))
-            if done:
-                self._finish(st, slot, completed)
-
-    def _finish(self, st: _Expert, slot: int, completed: list[Request]) -> None:
-        """Retire a lane: stats, then free its KV blocks and slot NOW —
-        the same tick — so the next admission can hand them out."""
-        req = st.req[slot]
-        req.finish_tick = self.tick
-        req.finish_reason = ("stop_token" if req.tokens
-                             and req.tokens[-1] in req.stop_tokens
-                             else "length")
-        req.t_done = time.perf_counter() - self._t0
-        st.active[slot] = False
-        st.req[slot] = None
-        st.tok[slot] = st.pos[slot] = 0
-        st.block_tables[slot] = -1
-        st.keys[slot] = 0
-        st.steps[slot] = 0
-        st.temp[slot], st.topk[slot], st.topp[slot] = 0.0, 0, 1.0
-        st.balloc.free_n(st.blocks[slot])
-        st.blocks[slot] = []
-        st.alloc.free(slot)
-        st.n_served += 1
-        completed.append(req)
-
-    def _decode(self, e: int, st: _Expert, completed: list[Request]) -> None:
-        if not st.active.any():
-            return
-        # inactive lanes decode at position -1: every KV slot is masked for
-        # them and their writes are clamped to the pool scratch block (or
-        # land as -1 markers in lane buffers), so a free lane can ride
-        # along in the fixed-shape batch at zero correctness cost (its
-        # sampler params sit at greedy defaults, so no RNG runs for it)
-        pos = np.where(st.active, st.pos, -1).astype(np.int32)
-        if (st.temp > 0.0).any():
-            nxt, st.caches = self._decode_fn(
-                self.expert_params[e], jnp.asarray(st.tok[:, None]),
-                jnp.asarray(pos[:, None]), jnp.asarray(pos),
-                jnp.asarray(st.block_tables), st.caches,
-                st.keys, st.steps, st.temp, st.topk, st.topp)
-        else:
-            nxt, st.caches = self._decode_greedy_fn(
-                self.expert_params[e], jnp.asarray(st.tok[:, None]),
-                jnp.asarray(pos[:, None]), jnp.asarray(pos),
-                jnp.asarray(st.block_tables), st.caches)
-        st.decode_calls += 1
-        st.occupied_lane_steps += int(st.active.sum())
-        if self.has_pool:
-            # bytes the paged kernel reads this tick (each active lane's
-            # reserved blocks) vs what the old gathered (lanes, max_len)
-            # view always read — the bench's measurable win
-            live = sum(len(st.blocks[s]) for s in np.nonzero(st.active)[0])
-            per_layer = self._block_read_bytes * self._pool_layers
-            st.paged_read_bytes += live * per_layer
-            st.gathered_read_bytes += \
-                self.eng.lanes_per_expert * self.lane_blocks * per_layer
-        nxt = np.asarray(nxt).astype(np.int32)
-        for slot in np.nonzero(st.active)[0]:
-            req = st.req[slot]
-            tok = int(nxt[slot])
-            req.tokens.append(tok)
-            st.tok[slot] = tok
-            st.pos[slot] += 1
-            st.steps[slot] += 1
-            done = (len(req.tokens) >= req.max_new_tokens
-                    or tok in req.stop_tokens)
-            self.last_deltas.append(TokenDelta(
-                request=req, token=tok, index=len(req.tokens) - 1,
-                done=done, tick=self.tick))
-            if done:
-                self._finish(st, int(slot), completed)
-
-    # -- main loop ---------------------------------------------------------
-    def step(self) -> list[Request]:
-        """One scheduler tick: route arrivals, admit, decode every expert.
-
-        Returns the requests that finished this tick; the individual
-        tokens it emitted (one :class:`TokenDelta` per token, in emission
-        order) are left in :attr:`last_deltas` until the next step.
-        """
-        if self._t0 is None:
-            self._t0 = time.perf_counter()
-        self.last_deltas = []
-        arrived = self.queue.pop_arrived(self.tick)
-        if arrived:
-            self._route(arrived)
-        completed: list[Request] = []
-        for e, st in enumerate(self._experts):
-            self._admit(e, st, completed)
-            self._decode(e, st, completed)
-        self.tick += 1
-        return completed
-
-    def _skip_idle_gap(self) -> None:
-        """Fast-forward the tick counter over an empty simulated gap."""
-        nxt = self.queue.next_arrival()
-        if nxt is not None and nxt > self.tick and not any(
-                st.pending or st.active.any() for st in self._experts):
-            self.tick = nxt
-
-    def stream(self):
-        """Drive the engine, yielding one :class:`TokenDelta` per token.
-
-        Deltas arrive in emission order (tick by tick, admissions before
-        decodes); a request's final delta has ``done=True``, after which
-        its lane and KV blocks are already recycled.  New requests may be
-        submitted between deltas; the generator runs until the engine
-        fully drains.
-        """
-        if self._t0 is None:
-            self._t0 = time.perf_counter()
-        while self.busy:
-            self._skip_idle_gap()
-            self.step()
-            yield from self.last_deltas
-        self._t0 = None               # fresh clock origin for a later run
-
-    @property
-    def busy(self) -> bool:
-        return bool(len(self.queue)) or any(
-            st.pending or st.active.any() for st in self._experts)
-
-    def kv_bytes_per_expert(self) -> int:
-        """Device bytes held by one expert's decode caches."""
-        return cachelib.kv_cache_bytes(self._experts[0].caches)
-
-    def run(self) -> dict:
-        """Drive ticks until drained; returns requests + aggregate stats.
-
-        Stats cover this run only (a warmup run on the same instance — which
-        shares the jit caches — does not pollute a later timed run).  When
-        some step() calls already ran, their time origin is kept so request
-        timestamps stay on one clock; a fresh run() restarts the origin."""
-        for st in self._experts:
-            st.n_served = st.decode_calls = st.prefill_calls = 0
-            st.occupied_lane_steps = 0
-            st.paged_read_bytes = st.gathered_read_bytes = 0
-            st.balloc.peak_in_use = st.balloc.n_in_use
-        tick0 = self.tick
-        t_start = time.perf_counter()
-        if self._t0 is None:
-            self._t0 = t_start
-        completed: list[Request] = []
-        n_steps = 0
-        while self.busy:
-            self._skip_idle_gap()     # jump empty gaps to the next arrival
-            completed += self.step()
-            n_steps += 1
-        jax.block_until_ready([st.caches for st in self._experts])
-        wall = time.perf_counter() - t_start
-        self._t0 = None
-        useful = sum(len(r.tokens) for r in completed)
-        decode_calls = sum(st.decode_calls for st in self._experts)
-        lane_steps = sum(st.occupied_lane_steps for st in self._experts)
-        paged_rd = sum(st.paged_read_bytes for st in self._experts)
-        gathered_rd = sum(st.gathered_read_bytes for st in self._experts)
-        return {
-            "requests": sorted(completed, key=lambda r: r.uid),
-            "ticks": self.tick - tick0,    # simulated span (incl. skipped gaps)
-            "steps": n_steps,              # scheduler iterations actually run
-            "wall_s": wall,
-            "useful_tokens": useful,
-            "early_stops": sum(r.finish_reason == "stop_token"
-                               for r in completed),
-            "tokens_per_s": useful / max(wall, 1e-9),
-            "mean_ttft_s": float(np.mean([r.t_first for r in completed]))
-            if completed else 0.0,
-            "occupancy": lane_steps / max(
-                decode_calls * self.eng.lanes_per_expert, 1),
-            "prefill_calls": sum(st.prefill_calls for st in self._experts),
-            "kv_bytes_per_lane": self.kv_bytes_per_expert()
-            // self.eng.lanes_per_expert,
-            "decode_impl": self.decode_impl,
-            "decode_read_bytes": {
-                "paged": paged_rd,
-                "gathered": gathered_rd,
-                "paged_per_tick": paged_rd // max(decode_calls, 1),
-                "gathered_per_tick": gathered_rd // max(decode_calls, 1),
-            },
-            "per_expert": {
-                e: {"served": st.n_served, "decode_calls": st.decode_calls,
-                    "prefills": st.prefill_calls,
-                    "peak_blocks": st.balloc.peak_in_use}
-                for e, st in enumerate(self._experts)},
-        }

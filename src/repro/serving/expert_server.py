@@ -1,0 +1,513 @@
+"""Self-contained per-expert serving loop (the paper's no-talk premise).
+
+The paper's architecture (§1, App. A.4) never requires experts to talk
+to each other: the router's prefix scores are the only cross-expert
+traffic, at training time and at inference.  :class:`ExpertServer` is
+that property made structural on the serving side — ONE expert's
+continuous-batching decode loop with **its own tick clock** and a narrow
+message API:
+
+  * :meth:`ExpertServer.enqueue` takes a serializable
+    :class:`repro.serving.transport.RequestMsg`;
+  * :meth:`ExpertServer.tick` runs one admission + decode pass and
+    returns the :class:`repro.serving.transport.TokenDeltaMsg` records
+    it emitted;
+  * :attr:`ExpertServer.busy` is THE idle predicate (pending work or an
+    active lane) — the frontend and the transports reuse it instead of
+    re-deriving it;
+  * :meth:`ExpertServer.stats` snapshots counters as a
+    :class:`repro.serving.transport.StatsMsg`.
+
+No reference to the router, to other experts, or to a global tick
+barrier exists here: a hot expert can be ticked a thousand times while
+an idle one is never ticked at all, and tokens cannot change — the
+sampler is counter-based (``fold_in(fold_in(PRNGKey(seed), uid), step)``,
+see :mod:`repro.serving.sampling`), so a request's stream is a pure
+function of ``(seed, uid, step)`` plus its own prompt.  The clock is
+synchronized forward to the sender's tick on :meth:`enqueue` (never
+backward), so queue-wait accounting stays on one timeline even though
+every server ticks independently.
+
+The per-expert device state is exactly what the old engine kept per
+expert: a paged block-pool KV cache (:mod:`repro.serving.cache`), host
+free lists over lanes and pool blocks (:mod:`repro.serving.scheduler`),
+per-lane sampling operand arrays, and the jitted prefill / decode /
+insert programs (shared across in-process servers through an lru cache
+keyed on the frozen configs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base as cfglib
+from repro.models import model as modellib
+from repro.serving import cache as cachelib
+from repro.serving import sampling as samplib
+from repro.serving.sampling import SamplingParams
+from repro.serving.scheduler import BlockAllocator, Request, SlotAllocator
+from repro.serving.transport import RequestMsg, StatsMsg, TokenDeltaMsg
+
+PAD_SAFE_KINDS = (cfglib.ATTN, cfglib.ATTN_SHARED)
+TRANSPORTS = ("loopback", "process")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Shape/scheduling knobs (all static: they define the compiled shapes)."""
+    lanes_per_expert: int = 4     # fixed decode-batch width per expert
+    max_len: int = 128            # per-lane KV budget (prompt + new tokens)
+    prefix_len: int = 32          # router scoring prefix M
+    route_batch: int = 8          # router calls are padded to this many rows
+    min_prefill_bucket: int = 16  # smallest power-of-2 prompt bucket
+    block_size: int = 16          # tokens per paged KV block
+    pool_blocks: int = 0          # KV blocks per expert; 0 -> lanes*max_len/bs
+    decode_impl: str = "auto"     # paged decode kernel: auto|jnp|pallas
+                                  # (auto follows the expert cfg's use_pallas)
+    transport: str = "loopback"   # expert backend: loopback|process
+
+
+def bucket_len(n: int, min_bucket: int, max_len: int) -> int:
+    """Prompt-length bucket: ``min_bucket`` doubled until >= n, capped at
+    ``max_len``.  Monotone in ``n``, so admission batches can pad to the
+    largest bucket among their members."""
+    if min_bucket < 1:
+        raise ValueError(f"min_bucket must be >= 1, got {min_bucket}")
+    b = min_bucket
+    while b < n:
+        b *= 2
+    return min(b, max_len)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingShapes:
+    """Derived facts an (expert cfg, engine cfg) pair pins down."""
+    pad_safe: bool                # right-padded bucketed prefill is exact
+    has_pool: bool                # any full-attention layer -> paged KV pool
+    lane_blocks: int              # block-table width (max_len / block_size)
+    pool_blocks: int              # resolved pool size per expert
+    dcfg: object                  # decode-side expert config (use_pallas flip)
+    decode_impl: str              # "jnp" | "pallas" after `auto` resolution
+
+
+def resolve_shapes(ecfg, eng: EngineConfig) -> ServingShapes:
+    """Validate the config pair and derive the serving shapes.
+
+    Called by :class:`ExpertServer` and by the frontend — the frontend
+    runs it eagerly so a bad config raises at construction time even
+    when the expert servers live in other processes.
+    """
+    if not ecfg.causal:
+        raise ValueError("serving needs a causal (decoder) expert config")
+    if eng.min_prefill_bucket < 1:
+        raise ValueError(f"min_prefill_bucket must be >= 1, "
+                         f"got {eng.min_prefill_bucket}")
+    if eng.decode_impl not in ("auto", "jnp", "pallas"):
+        raise ValueError(f"decode_impl must be 'auto', 'jnp' or "
+                         f"'pallas', got {eng.decode_impl!r}")
+    if eng.transport not in TRANSPORTS:
+        raise ValueError(f"transport must be one of {TRANSPORTS}, "
+                         f"got {eng.transport!r}")
+    # prompt-length bucketing pads on the right; that is exact for full
+    # attention (causal mask hides the future) but would pollute rotating-
+    # window KV buffers and recurrent (SSM/xLSTM) states, so those archs
+    # fall back to exact-length prefill compiles
+    pad_safe = all(k in PAD_SAFE_KINDS for k in ecfg.layer_pattern)
+    # only full-attention layers hold paged KV; pure-recurrent /
+    # sliding-window experts never touch the block pool
+    has_pool = any(k in cachelib.POOL_KINDS for k in ecfg.layer_pattern)
+    L, M, bs = eng.lanes_per_expert, eng.max_len, eng.block_size
+    if has_pool and M % bs:
+        raise ValueError(f"max_len {M} not a multiple of block_size {bs}")
+    lane_blocks = -(-M // bs)
+    pool = eng.pool_blocks or L * lane_blocks
+    if has_pool and pool < lane_blocks:
+        raise ValueError(
+            f"pool_blocks {pool} cannot hold one max-size request "
+            f"({lane_blocks} blocks) — the queue would deadlock")
+    # decode_impl overrides use_pallas for the jitted decode programs
+    # only: prefill keeps the expert config's own kernel choice
+    dcfg = ecfg if eng.decode_impl == "auto" else \
+        ecfg.replace(use_pallas=eng.decode_impl == "pallas")
+    return ServingShapes(pad_safe=pad_safe, has_pool=has_pool,
+                         lane_blocks=lane_blocks, pool_blocks=pool,
+                         dcfg=dcfg,
+                         decode_impl="pallas" if dcfg.use_pallas else "jnp")
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_fns(ecfg, dcfg, max_len: int):
+    """Jitted expert-side serving kernels, shared across server instances.
+
+    Keyed on the (hashable, frozen) configs so fuzz suites building many
+    servers reuse one compile cache instead of re-jitting per instance.
+    ``dcfg`` is the decode-side expert config — identical to ``ecfg``
+    except possibly ``use_pallas``, so ``EngineConfig.decode_impl`` can
+    flip the paged-attention kernel without dragging prefill onto the
+    Pallas flash path.  (Router scoring lives with the frontend — an
+    expert server never sees the router.)
+    """
+    def decode_and_sample(p, toks, pos, ci, bt, c, keys, steps, temps,
+                          top_ks, top_ps):
+        logits, nc = modellib.decode_step(
+            p, dcfg, {"tokens": toks, "positions": pos, "cache_index": ci,
+                      "block_tables": bt}, c)
+        return samplib.sample_tokens(logits[:, 0], keys, steps, temps,
+                                     top_ks, top_ps), nc
+
+    def decode_greedy(p, toks, pos, ci, bt, c):
+        # all-greedy ticks skip the sampler entirely (its sort/softmax
+        # work per lane per token is pure waste when every temp is 0);
+        # both programs compile once, so mode flips never recompile
+        logits, nc = modellib.decode_step(
+            p, dcfg, {"tokens": toks, "positions": pos, "cache_index": ci,
+                      "block_tables": bt}, c)
+        return jnp.argmax(logits[:, 0], -1).astype(jnp.int32), nc
+
+    decode = jax.jit(decode_and_sample)
+    decode_g = jax.jit(decode_greedy)
+    prefill = jax.jit(
+        lambda p, toks, last: modellib.prefill(
+            p, ecfg, {"tokens": toks}, cache_len=max_len, last_index=last))
+    insert = jax.jit(functools.partial(cachelib.insert_requests, ecfg))
+    return decode, decode_g, prefill, insert, samplib.sample_tokens_jit
+
+
+class ExpertServer:
+    """One expert's continuous-batching loop behind a message API.
+
+    ``enqueue(RequestMsg)`` / ``tick() -> list[TokenDeltaMsg]`` /
+    ``busy`` / ``stats()`` — everything else (device caches, free lists,
+    per-lane sampling operands, the tick clock) is private to this
+    server.  See the module docstring for the asynchrony contract.
+    """
+
+    def __init__(self, ecfg, params, eng: EngineConfig = EngineConfig()):
+        shapes = resolve_shapes(ecfg, eng)
+        self.ecfg, self.eng, self.params = ecfg, eng, params
+        self.pad_safe = shapes.pad_safe
+        self.has_pool = shapes.has_pool
+        self.lane_blocks = shapes.lane_blocks
+        self.pool_blocks = shapes.pool_blocks
+        self.decode_impl = shapes.decode_impl
+        L, M, bs = eng.lanes_per_expert, eng.max_len, eng.block_size
+        # per-(block, layer) decode read traffic: k + v + slot positions
+        self._pool_layers = sum(k in cachelib.POOL_KINDS
+                                for k in ecfg.layer_pattern)
+        self._block_read_bytes = bs * (
+            2 * ecfg.n_kv_heads * ecfg.resolved_head_dim
+            * np.dtype(ecfg.compute_dtype).itemsize
+            + np.dtype(np.int32).itemsize)
+        self.caches = cachelib.init_paged_caches(ecfg, L, self.pool_blocks,
+                                                 bs, M)
+        self.alloc = SlotAllocator(L)
+        self.balloc = BlockAllocator(self.pool_blocks)
+        self.pending: deque = deque()
+        self.tok = np.zeros(L, np.int32)     # last emitted token per lane
+        self.pos = np.zeros(L, np.int32)     # next decode position per lane
+        self.active = np.zeros(L, bool)
+        self.req: list = [None] * L          # slot -> local Request | None
+        self.block_tables = np.full((L, self.lane_blocks), -1, np.int32)
+        self.blocks: list = [[] for _ in range(L)]  # slot -> reserved blocks
+        # per-lane sampling state, fed straight into the jitted decode+sample
+        self.keys = np.zeros((L, 2), np.uint32)     # request RNG roots
+        self.steps = np.zeros(L, np.int32)          # next token counter
+        self.temp = np.zeros(L, np.float32)         # 0 = greedy
+        self.topk = np.zeros(L, np.int32)           # 0 = disabled
+        self.topp = np.ones(L, np.float32)          # 1 = disabled
+        # this server's own clock: advanced by tick(), pulled forward
+        # (never back) by enqueue() to the sender's timestamp
+        self.clock = 0
+        self.n_served = 0
+        self.decode_calls = 0
+        self.prefill_calls = 0
+        self.occupied_lane_steps = 0  # sum of active lanes over decode calls
+        self.queue_wait_ticks = 0     # sum over admissions of admit - enqueue
+        # KV read traffic of the paged decode path vs the gathered view it
+        # replaced (bookkeeping from reserved-block counts, impl-independent)
+        self.paged_read_bytes = 0
+        self.gathered_read_bytes = 0
+        (self._decode_fn, self._decode_greedy_fn, self._prefill_fn,
+         self._insert_fn, self._sample_fn) = _jit_fns(ecfg, shapes.dcfg, M)
+
+    # -- the narrow API ----------------------------------------------------
+    @property
+    def busy(self) -> bool:
+        """THE idle predicate: queued work or an active decode lane."""
+        return bool(self.pending) or bool(self.active.any())
+
+    def enqueue(self, msg: RequestMsg) -> None:
+        """Accept one request; FIFO behind whatever is already queued."""
+        self.clock = max(self.clock, msg.enqueue_tick)
+        self.pending.append(Request(
+            uid=msg.uid, prompt=msg.prompt,
+            max_new_tokens=msg.max_new_tokens, sampling=msg.sampling,
+            stop_tokens=msg.stop_tokens, arrival_tick=msg.enqueue_tick))
+
+    def tick(self) -> list[TokenDeltaMsg]:
+        """One pass of this server's clock: admit, then decode.
+
+        Independent of every other server — callers may tick a busy
+        server as often as they like and never tick an idle one; ticking
+        with no work is a harmless no-op (the clock still advances).
+        """
+        out: list[TokenDeltaMsg] = []
+        self._admit(out)
+        self._decode(out)
+        self.clock += 1
+        return out
+
+    def stats(self) -> StatsMsg:
+        return StatsMsg(
+            n_served=self.n_served, decode_calls=self.decode_calls,
+            prefill_calls=self.prefill_calls,
+            occupied_lane_steps=self.occupied_lane_steps,
+            queue_wait_ticks=self.queue_wait_ticks,
+            paged_read_bytes=self.paged_read_bytes,
+            gathered_read_bytes=self.gathered_read_bytes,
+            peak_blocks=self.balloc.peak_in_use)
+
+    def reset_stats(self) -> None:
+        """Zero the run counters (a warmup must not pollute a timed run)."""
+        self.n_served = self.decode_calls = self.prefill_calls = 0
+        self.occupied_lane_steps = self.queue_wait_ticks = 0
+        self.paged_read_bytes = self.gathered_read_bytes = 0
+        self.balloc.peak_in_use = self.balloc.n_in_use
+
+    def sync(self) -> None:
+        """Block until every queued device mutation has landed."""
+        jax.block_until_ready(self.caches)
+
+    def kv_bytes(self) -> int:
+        """Device bytes held by this server's decode caches."""
+        return cachelib.kv_cache_bytes(self.caches)
+
+    # -- warmup ------------------------------------------------------------
+    def warmup(self, prompt_len: int | None = None, *,
+               sampled: bool = True) -> None:
+        """Compile every serving shape up front, off the timed path.
+
+        Drives admission/decode with synthetic requests at every
+        power-of-two admission width.  ``prompt_len`` selects which
+        prefill bucket to warm (defaults to the routing prefix length);
+        call again for other buckets.  ``sampled=False`` skips the
+        second, sampled warmup pass — a greedy-only deployment then
+        never compiles the sampler programs.  The clock and stats are
+        restored: synthetic ticks don't advance serving time.
+        """
+        pl = min(prompt_len or self.eng.prefix_len, self.eng.max_len - 2)
+        L = self.eng.lanes_per_expert
+        clock0 = self.clock
+        # one greedy pass (argmax-only decode program) and one sampled pass
+        # (mixed decode program + per-width sampler) so a live mix of
+        # recipes hits only warm compiles
+        for temp in (0.0, 1.0) if sampled else (0.0,):
+            for k in sorted({min(1 << (b - 1).bit_length(), L)
+                             for b in range(1, L + 1)}):
+                for _ in range(k):
+                    self.pending.append(Request(
+                        uid=-1, prompt=np.zeros(pl, np.int32),
+                        max_new_tokens=2,
+                        sampling=SamplingParams(temperature=temp)))
+                while self.busy:
+                    self.tick()       # synthetic deltas dropped on the floor
+        self.clock = clock0
+        self.reset_stats()
+
+    # -- lane lifecycle ----------------------------------------------------
+    def _bucket(self, n: int) -> int:
+        if not self.pad_safe:
+            return n
+        return bucket_len(n, self.eng.min_prefill_bucket, self.eng.max_len)
+
+    def _blocks_needed(self, req: Request) -> int:
+        """Pool blocks covering every KV write the request will make.
+
+        Positions written: 0..len(prompt)-1 by prefill, then one per fed-
+        back token — the final emitted token is never written, so the
+        highest position is len(prompt) + max_new - 2.
+        """
+        if not self.has_pool:
+            return 0
+        used = len(req.prompt) + req.max_new_tokens - 1
+        return -(-used // self.eng.block_size)
+
+    def _admit(self, out: list[TokenDeltaMsg]) -> None:
+        """Drain pending requests into free lanes with one batched prefill.
+
+        FIFO admission: take from the queue head while a decode lane and
+        (full-attention archs) enough pool blocks are available.  All
+        drained requests share one prefill call padded to the fixed lane
+        width and the largest prompt bucket among them (non-pad-safe archs
+        prefill one request at a time at exact length), then land in the
+        caches via one jitted scatter.
+        """
+        batch: list[tuple[Request, int, np.ndarray]] = []
+        while self.pending and self.alloc.n_free:
+            req = self.pending[0]
+            blocks = self.balloc.alloc_n(self._blocks_needed(req))
+            if blocks is None:
+                break                       # pool full: wait, keep FIFO order
+            self.pending.popleft()
+            slot = self.alloc.alloc()
+            row = np.full(self.lane_blocks, -1, np.int32)
+            row[:len(blocks)] = blocks
+            self.blocks[slot] = blocks
+            batch.append((req, slot, row))
+        if not batch:
+            return
+
+        L = self.eng.lanes_per_expert
+        lens = np.array([len(r.prompt) for r, _, _ in batch])
+        # per-request sampling operands for the first token (counter 0);
+        # greedy requests keep a zero key and never touch the RNG
+        keys = np.stack([np.zeros(2, np.uint32) if r.sampling.greedy
+                         else samplib.request_key(r.sampling.seed, r.uid)
+                         for r, _, _ in batch])
+        temps = np.array([r.sampling.temperature for r, _, _ in batch],
+                         np.float32)
+        topks = np.array([r.sampling.top_k for r, _, _ in batch], np.int32)
+        topps = np.array([r.sampling.top_p for r, _, _ in batch], np.float32)
+
+        def first_tokens(logits, idx):
+            """Sample token 0 for batch members ``idx`` from their prefill
+            logits rows (padding rows ride along as greedy no-ops)."""
+            n = len(idx)
+            if not (temps[idx] > 0.0).any():          # all greedy: plain argmax
+                return np.asarray(jnp.argmax(logits[:n], -1))
+            pad = logits.shape[0] - n
+            return np.asarray(self._sample_fn(
+                logits,
+                np.concatenate([keys[idx], np.zeros((pad, 2), np.uint32)]),
+                np.zeros(n + pad, np.int32),
+                np.concatenate([temps[idx], np.zeros(pad, np.float32)]),
+                np.concatenate([topks[idx], np.zeros(pad, np.int32)]),
+                np.concatenate([topps[idx], np.ones(pad, np.float32)])))[:n]
+
+        if self.pad_safe:
+            # one (K, bucket) prefill for the whole drain: K is the batch
+            # width padded to the next power of two (bounded compile count,
+            # no full-lane-width compute for single admissions), bucket =
+            # the largest prompt bucket among the drained requests
+            K = min(1 << (len(batch) - 1).bit_length(), L)
+            bucket = max(self._bucket(int(n)) for n in lens)
+            toks = np.zeros((K, bucket), np.int32)
+            last = np.zeros(K, np.int32)
+            for i, (req, _, _) in enumerate(batch):
+                toks[i, :lens[i]] = req.prompt
+                last[i] = lens[i] - 1
+            logits, rcache = self._prefill_fn(self.params, jnp.asarray(toks),
+                                              jnp.asarray(last))
+            self.prefill_calls += 1
+            rows = np.full((K, self.lane_blocks), -1, np.int32)
+            slots = np.full(K, L, np.int32)       # out-of-range -> dropped
+            true = np.zeros(K, np.int32)
+            for i, (_, slot, row) in enumerate(batch):
+                rows[i], slots[i], true[i] = row, slot, lens[i]
+            self.caches = self._insert_fn(self.caches, rcache, rows, slots,
+                                          true)
+            firsts = first_tokens(logits, np.arange(len(batch)))
+        else:
+            firsts = np.zeros(len(batch), np.int64)
+            for i, (req, slot, row) in enumerate(batch):
+                logits, rcache = self._prefill_fn(
+                    self.params, jnp.asarray(req.prompt[None]),
+                    jnp.full((1,), lens[i] - 1, jnp.int32))
+                self.prefill_calls += 1
+                self.caches = self._insert_fn(
+                    self.caches, rcache, row[None],
+                    np.full(1, slot, np.int32),
+                    np.full(1, lens[i], np.int32))
+                firsts[i] = int(first_tokens(logits, np.array([i]))[0])
+
+        for i, (req, slot, row) in enumerate(batch):
+            first = int(firsts[i])
+            req.tokens.append(first)
+            req.admit_tick = self.clock
+            self.queue_wait_ticks += self.clock - req.arrival_tick
+            self.block_tables[slot] = row
+            self.tok[slot], self.pos[slot] = first, lens[i]
+            self.active[slot], self.req[slot] = True, req
+            self.keys[slot] = keys[i]
+            self.steps[slot] = 1
+            self.temp[slot], self.topk[slot], self.topp[slot] = \
+                temps[i], topks[i], topps[i]
+            done = req.max_new_tokens == 1 or first in req.stop_tokens
+            reason = self._retire(slot) if done else ""
+            out.append(TokenDeltaMsg(
+                uid=req.uid, token=first, index=0, done=done,
+                tick=self.clock, admit_tick=self.clock,
+                finish_reason=reason))
+
+    def _retire(self, slot: int) -> str:
+        """Retire a lane: stats, then free its KV blocks and slot NOW —
+        the same tick — so the next admission can hand them out.
+        Returns the finish reason for the final delta."""
+        req = self.req[slot]
+        req.finish_tick = self.clock
+        req.finish_reason = ("stop_token" if req.tokens
+                             and req.tokens[-1] in req.stop_tokens
+                             else "length")
+        self.active[slot] = False
+        self.req[slot] = None
+        self.tok[slot] = self.pos[slot] = 0
+        self.block_tables[slot] = -1
+        self.keys[slot] = 0
+        self.steps[slot] = 0
+        self.temp[slot], self.topk[slot], self.topp[slot] = 0.0, 0, 1.0
+        self.balloc.free_n(self.blocks[slot])
+        self.blocks[slot] = []
+        self.alloc.free(slot)
+        self.n_served += 1
+        return req.finish_reason
+
+    def _decode(self, out: list[TokenDeltaMsg]) -> None:
+        if not self.active.any():
+            return
+        # inactive lanes decode at position -1: every KV slot is masked for
+        # them and their writes are clamped to the pool scratch block (or
+        # land as -1 markers in lane buffers), so a free lane can ride
+        # along in the fixed-shape batch at zero correctness cost (its
+        # sampler params sit at greedy defaults, so no RNG runs for it)
+        pos = np.where(self.active, self.pos, -1).astype(np.int32)
+        if (self.temp > 0.0).any():
+            nxt, self.caches = self._decode_fn(
+                self.params, jnp.asarray(self.tok[:, None]),
+                jnp.asarray(pos[:, None]), jnp.asarray(pos),
+                jnp.asarray(self.block_tables), self.caches,
+                self.keys, self.steps, self.temp, self.topk, self.topp)
+        else:
+            nxt, self.caches = self._decode_greedy_fn(
+                self.params, jnp.asarray(self.tok[:, None]),
+                jnp.asarray(pos[:, None]), jnp.asarray(pos),
+                jnp.asarray(self.block_tables), self.caches)
+        self.decode_calls += 1
+        self.occupied_lane_steps += int(self.active.sum())
+        if self.has_pool:
+            # bytes the paged kernel reads this tick (each active lane's
+            # reserved blocks) vs what the old gathered (lanes, max_len)
+            # view always read — the bench's measurable win
+            live = sum(len(self.blocks[s]) for s in np.nonzero(self.active)[0])
+            per_layer = self._block_read_bytes * self._pool_layers
+            self.paged_read_bytes += live * per_layer
+            self.gathered_read_bytes += \
+                self.eng.lanes_per_expert * self.lane_blocks * per_layer
+        nxt = np.asarray(nxt).astype(np.int32)
+        for slot in np.nonzero(self.active)[0]:
+            req = self.req[slot]
+            tok = int(nxt[slot])
+            req.tokens.append(tok)
+            self.tok[slot] = tok
+            self.pos[slot] += 1
+            self.steps[slot] += 1
+            done = (len(req.tokens) >= req.max_new_tokens
+                    or tok in req.stop_tokens)
+            reason = self._retire(int(slot)) if done else ""
+            out.append(TokenDeltaMsg(
+                uid=req.uid, token=tok, index=len(req.tokens) - 1,
+                done=done, tick=self.clock, finish_reason=reason))

@@ -1,0 +1,348 @@
+"""Router frontend: the only place where experts are visible together.
+
+The paper's inference story (§2.2) is that a tiny router ensemble scores
+the request prefix and exactly ONE expert serves the request — so the
+mixture costs 1/E of its parameters at inference, and the router scores
+are the only cross-expert traffic (§1, App. A.4).  This frontend is that
+thin layer: batched prefix scoring, expert argmax, uid assignment, and
+reassembly of the per-token :class:`repro.serving.transport.TokenDeltaMsg`
+records coming back from the expert servers into the live
+:class:`repro.serving.scheduler.Request` objects callers hold.
+
+Experts are driven **without a barrier**: every
+:class:`repro.serving.expert_server.ExpertServer` keeps its own tick
+clock and the frontend only ticks servers that have work
+(``transport.tick_many``), so a hot expert never waits on idle ones —
+the paper's asynchrony applied to serving.  Token streams cannot depend
+on that freedom: sampling is counter-based per ``(seed, uid, step)`` and
+each request lives entirely inside one expert, so any per-expert tick
+interleaving yields bit-identical tokens (the fuzz oracles in
+``tests/test_serving.py`` hold on every transport).
+
+The transport boundary is pluggable (:mod:`repro.serving.transport`):
+``EngineConfig.transport`` selects the in-process loopback default or
+one spawned process per expert — the frontend code is identical either
+way, because only serializable messages ever cross it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import assignment as asg
+from repro.core import router as routerlib
+from repro.models import model as modellib
+from repro.serving import cache as cachelib
+from repro.serving.expert_server import (EngineConfig, ExpertServer,
+                                         resolve_shapes)
+from repro.serving.sampling import SamplingParams
+from repro.serving.scheduler import Request, RequestQueue
+from repro.serving.transport import (LoopbackTransport, ProcessTransport,
+                                     RequestMsg, TokenDeltaMsg)
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenDelta:
+    """One streamed token: request, its value/position, and completion."""
+    request: Request
+    token: int
+    index: int                    # position within request.tokens
+    done: bool                    # True on the request's final token
+    tick: int
+
+
+@functools.lru_cache(maxsize=None)
+def _router_fns(rcfg):
+    """One jitted router-scoring program per (frozen) router config."""
+    return jax.jit(
+        lambda rp, toks: routerlib.ensemble_scores(rp, rcfg, toks))
+
+
+class ServeFrontend:
+    """Queue + router + per-expert servers behind a transport.
+
+    This is the full continuous-batching engine the old monolith was:
+    ``submit`` -> router scores the prefix, argmax picks ONE expert ->
+    the request crosses the transport as a :class:`RequestMsg` -> that
+    expert admits it into its fixed-lane decode batch over the paged
+    block-pool KV cache -> per-token deltas stream back and are
+    reassembled here.  See :class:`repro.serving.expert_server`
+    for everything per-expert and :mod:`repro.serving.transport` for the
+    boundary.
+    """
+
+    def __init__(self, ecfg, rcfg, expert_params: list, router_params,
+                 eng: EngineConfig = EngineConfig()):
+        shapes = resolve_shapes(ecfg, eng)    # validate before any spawn
+        self.ecfg, self.rcfg, self.eng = ecfg, rcfg, eng
+        self.expert_params = list(expert_params)
+        self.router_params = router_params
+        self.n_experts = len(self.expert_params)
+        self.pad_safe = shapes.pad_safe
+        self.has_pool = shapes.has_pool
+        self.lane_blocks = shapes.lane_blocks
+        self.pool_blocks = shapes.pool_blocks
+        self.decode_impl = shapes.decode_impl
+        if eng.transport == "process":
+            self._transport = ProcessTransport(ecfg, eng, self.expert_params)
+        else:
+            self._transport = LoopbackTransport(
+                [ExpertServer(ecfg, p, eng) for p in self.expert_params])
+        self.queue = RequestQueue()
+        self.tick = 0
+        self._uid = 0
+        self._t0: float | None = None
+        self.last_deltas: list[TokenDelta] = []
+        self._live: dict[int, Request] = {}   # uid -> un-finished Request
+        self._score_fn = _router_fns(rcfg)
+
+    # -- lifecycle ---------------------------------------------------------
+    @property
+    def _experts(self):
+        """Loopback-only: the in-process ExpertServer states (tests, debug
+        introspection).  The process transport has no local servers — use
+        :meth:`run`'s per-expert stats instead."""
+        return self._transport.servers
+
+    def close(self) -> None:
+        """Release the transport (worker processes, pipes); idempotent."""
+        self._transport.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- warmup ------------------------------------------------------------
+    def warmup(self, prompt_len: int | None = None, *,
+               sampled: bool = True) -> None:
+        """Compile every serving shape up front, off the timed path.
+
+        Warms the router-scoring program plus every expert server's
+        admission/decode shapes (loopback warms one server — the jitted
+        programs are shared in process; the process transport warms all
+        workers concurrently, since each owns its own compile cache).
+        ``prompt_len`` selects which prefill bucket to warm (defaults to
+        the routing prefix length); call again for other buckets.
+        ``sampled=False`` skips the sampled pass — a greedy-only
+        deployment then never compiles the sampler programs.
+        """
+        # router scoring always runs on (route_batch, prefix_len) chunks
+        self._score_fn(self.router_params,
+                       jnp.zeros((self.eng.route_batch, self.eng.prefix_len),
+                                 jnp.int32))
+        # synthetic warmup tokens never reach the frontend: each server
+        # drops its own warmup deltas and restores its clock/stats
+        self._transport.warmup(prompt_len, sampled)
+
+    # -- request intake ----------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int,
+               sampling: SamplingParams | None = None,
+               stop_tokens=(),
+               arrival_tick: int | None = None) -> Request:
+        """Queue one generation request; returns its live Request record.
+
+        ``sampling`` defaults to greedy; ``stop_tokens`` is any iterable
+        of token ids that end the sequence early (the stop token is kept
+        as the final emitted token, and the request's KV blocks are freed
+        the same tick).
+        """
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if len(prompt) < self.eng.prefix_len:
+            raise ValueError(f"prompt shorter than routing prefix "
+                             f"({len(prompt)} < {self.eng.prefix_len})")
+        if len(prompt) + max_new_tokens > self.eng.max_len:
+            raise ValueError(f"prompt {len(prompt)} + {max_new_tokens} new "
+                             f"tokens exceeds lane budget {self.eng.max_len}")
+        sampling = SamplingParams() if sampling is None else sampling
+        if not isinstance(sampling, SamplingParams):
+            raise TypeError(f"sampling must be a SamplingParams, "
+                            f"got {type(sampling).__name__}")
+        stop_tokens = frozenset(int(t) for t in stop_tokens)
+        bad = [t for t in stop_tokens if not 0 <= t < self.ecfg.vocab_size]
+        if bad:
+            raise ValueError(f"stop tokens outside vocab: {sorted(bad)}")
+        req = Request(uid=self._uid, prompt=prompt,
+                      max_new_tokens=max_new_tokens,
+                      sampling=sampling, stop_tokens=stop_tokens,
+                      arrival_tick=self.tick if arrival_tick is None
+                      else arrival_tick)
+        self._uid += 1
+        self._live[req.uid] = req
+        self.queue.push(req)
+        return req
+
+    # -- routing -----------------------------------------------------------
+    def _route(self, reqs: list[Request]) -> None:
+        """Score prefixes in padded fixed-width batches, argmax an expert,
+        and hand each request across the transport."""
+        pl, rb = self.eng.prefix_len, self.eng.route_batch
+        prefixes = np.stack([r.prompt[:pl] for r in reqs])
+        for i in range(0, len(reqs), rb):
+            chunk = prefixes[i:i + rb]
+            n = len(chunk)
+            if n < rb:        # pad with copies of row 0; scores are per-row
+                chunk = np.concatenate([chunk, np.broadcast_to(
+                    chunk[:1], (rb - n,) + chunk.shape[1:])])
+            scores = np.asarray(self._score_fn(self.router_params,
+                                               jnp.asarray(chunk)))
+            eids = np.asarray(asg.argmax_assignment(scores[:n]))
+            for r, e in zip(reqs[i:i + n], eids):
+                r.expert = int(e)
+                r.route_tick = self.tick
+                self._transport.enqueue(r.expert, RequestMsg(
+                    uid=r.uid, prompt=r.prompt,
+                    max_new_tokens=r.max_new_tokens, sampling=r.sampling,
+                    stop_tokens=r.stop_tokens, enqueue_tick=self.tick))
+
+    # -- delta reassembly --------------------------------------------------
+    def _deliver(self, msg: TokenDeltaMsg,
+                 completed: list[Request]) -> None:
+        """Fold one wire delta back into its live Request record."""
+        req = self._live[msg.uid]
+        req.tokens.append(msg.token)
+        if msg.index == 0:
+            req.admit_tick = msg.admit_tick
+            req.t_first = time.perf_counter() - self._t0
+        self.last_deltas.append(TokenDelta(
+            request=req, token=msg.token, index=msg.index, done=msg.done,
+            tick=msg.tick))
+        if msg.done:
+            req.finish_reason = msg.finish_reason
+            req.finish_tick = msg.tick
+            req.t_done = time.perf_counter() - self._t0
+            del self._live[msg.uid]
+            completed.append(req)
+
+    # -- main loop ---------------------------------------------------------
+    def step(self) -> list[Request]:
+        """One frontend tick: route arrivals, tick every busy expert.
+
+        Each expert advances on its own clock — idle experts are not
+        ticked at all, and the process transport overlaps the busy ones'
+        compute.  Returns the requests that finished this tick; the
+        individual tokens it emitted (one :class:`TokenDelta` per token,
+        in emission order) are left in :attr:`last_deltas` until the
+        next step.
+        """
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        self.last_deltas = []
+        arrived = self.queue.pop_arrived(self.tick)
+        if arrived:
+            self._route(arrived)
+        completed: list[Request] = []
+        working = [e for e in range(self.n_experts)
+                   if self._transport.busy(e)]
+        for _, msgs in self._transport.tick_many(working):
+            for msg in msgs:
+                self._deliver(msg, completed)
+        self.tick += 1
+        return completed
+
+    def _skip_idle_gap(self) -> None:
+        """Fast-forward the tick counter over an empty simulated gap."""
+        nxt = self.queue.next_arrival()
+        if nxt is not None and nxt > self.tick \
+                and not self._transport.any_busy:
+            self.tick = nxt
+
+    def stream(self):
+        """Drive the engine, yielding one :class:`TokenDelta` per token.
+
+        Deltas arrive in emission order (tick by tick, admissions before
+        decodes); a request's final delta has ``done=True``, after which
+        its lane and KV blocks are already recycled.  New requests may be
+        submitted between deltas; the generator runs until the engine
+        fully drains.
+        """
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        while self.busy:
+            self._skip_idle_gap()
+            self.step()
+            yield from self.last_deltas
+        self._t0 = None               # fresh clock origin for a later run
+
+    @property
+    def busy(self) -> bool:
+        return bool(len(self.queue)) or self._transport.any_busy
+
+    def kv_bytes_per_expert(self) -> int:
+        """Device bytes held by one expert's decode caches.
+
+        Computed from the cache specs, so it needs no access to the
+        (possibly remote) device trees.
+        """
+        return cachelib.kv_cache_bytes(modellib.paged_cache_specs(
+            self.ecfg, self.eng.lanes_per_expert, self.pool_blocks,
+            self.eng.block_size, self.eng.max_len))
+
+    def run(self) -> dict:
+        """Drive ticks until drained; returns requests + aggregate stats.
+
+        Stats cover this run only (a warmup run on the same instance —
+        which shares the jit caches — does not pollute a later timed
+        run).  When some step() calls already ran, their time origin is
+        kept so request timestamps stay on one clock; a fresh run()
+        restarts the origin."""
+        self._transport.reset_stats()
+        tick0 = self.tick
+        t_start = time.perf_counter()
+        if self._t0 is None:
+            self._t0 = t_start
+        completed: list[Request] = []
+        n_steps = 0
+        while self.busy:
+            self._skip_idle_gap()     # jump empty gaps to the next arrival
+            completed += self.step()
+            n_steps += 1
+        self._transport.sync()
+        wall = time.perf_counter() - t_start
+        self._t0 = None
+        stats = [self._transport.stats(e) for e in range(self.n_experts)]
+        useful = sum(len(r.tokens) for r in completed)
+        decode_calls = sum(st.decode_calls for st in stats)
+        lane_steps = sum(st.occupied_lane_steps for st in stats)
+        paged_rd = sum(st.paged_read_bytes for st in stats)
+        gathered_rd = sum(st.gathered_read_bytes for st in stats)
+        lanes = self.eng.lanes_per_expert
+        return {
+            "requests": sorted(completed, key=lambda r: r.uid),
+            "ticks": self.tick - tick0,    # simulated span (incl. skipped gaps)
+            "steps": n_steps,              # scheduler iterations actually run
+            "wall_s": wall,
+            "useful_tokens": useful,
+            "early_stops": sum(r.finish_reason == "stop_token"
+                               for r in completed),
+            "tokens_per_s": useful / max(wall, 1e-9),
+            "mean_ttft_s": float(np.mean([r.t_first for r in completed]))
+            if completed else 0.0,
+            "occupancy": lane_steps / max(decode_calls * lanes, 1),
+            "prefill_calls": sum(st.prefill_calls for st in stats),
+            "kv_bytes_per_lane": self.kv_bytes_per_expert() // lanes,
+            "decode_impl": self.decode_impl,
+            "transport": self.eng.transport,
+            "decode_read_bytes": {
+                "paged": paged_rd,
+                "gathered": gathered_rd,
+                "paged_per_tick": paged_rd // max(decode_calls, 1),
+                "gathered_per_tick": gathered_rd // max(decode_calls, 1),
+            },
+            "per_expert": {
+                e: {"served": st.n_served, "decode_calls": st.decode_calls,
+                    "prefills": st.prefill_calls,
+                    "peak_blocks": st.peak_blocks,
+                    "queue_wait_ticks": st.queue_wait_ticks,
+                    "occupancy": st.occupied_lane_steps
+                    / max(st.decode_calls * lanes, 1)}
+                for e, st in enumerate(stats)},
+        }

@@ -1,0 +1,371 @@
+"""Message protocol + transports between the router frontend and experts.
+
+The paper's serving story (App. A.4) is that experts never share state:
+the router's prefix scores pick ONE expert per request and everything
+after that is private to it.  This module is that boundary made
+explicit.  Three serializable message types are the ONLY things that
+cross it:
+
+  * :class:`RequestMsg`   — frontend -> expert: one routed request;
+  * :class:`TokenDeltaMsg` — expert -> frontend: one emitted token
+    (with admission / finish metadata riding on the first / last one);
+  * :class:`StatsMsg`     — expert -> frontend: a counter snapshot.
+
+A :class:`Transport` carries them to E expert servers and knows nothing
+about models, caches, or routing:
+
+  * :class:`LoopbackTransport` (default) holds the
+    :class:`repro.serving.expert_server.ExpertServer` objects in
+    process — messages pass by reference, zero copies, and the jitted
+    programs are shared across servers through the config-keyed compile
+    cache;
+  * :class:`ProcessTransport` spawns ONE OS process per expert, each
+    holding its own params and KV pool; pickled messages over pipes are
+    the only cross-process traffic.  This is the local-machine proof of
+    the multi-host deployment: replace the pipes with RPC and each
+    expert's lanes can live on its own pod, the router score matrix
+    being the only thing on the wire.
+
+Both transports tick experts independently — ``tick(e)`` steps exactly
+one server on its own clock, and ``tick_many`` lets the process backend
+overlap expert compute across processes (send every tick, then collect),
+so a hot expert never waits on an idle one.
+"""
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing as mp
+import traceback
+
+import numpy as np
+
+from repro.serving.sampling import SamplingParams
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestMsg:
+    """Everything an expert server needs to serve one routed request.
+
+    ``enqueue_tick`` is the sender's clock when the request was handed
+    over; the receiving server pulls its own clock forward to it (never
+    backward) so queue-wait accounting stays on one timeline.
+    """
+    uid: int
+    prompt: np.ndarray            # (L,) int32
+    max_new_tokens: int
+    sampling: SamplingParams
+    stop_tokens: frozenset
+    enqueue_tick: int
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenDeltaMsg:
+    """One emitted token, in this expert's local clock.
+
+    ``admit_tick`` is set on a request's first delta (index 0) and
+    ``finish_reason`` on its last (``done=True``); the frontend
+    reassembles these into the live ``Request`` record it handed the
+    caller.
+    """
+    uid: int
+    token: int
+    index: int                    # position within the request's tokens
+    done: bool                    # True on the request's final token
+    tick: int                     # expert-local tick that emitted it
+    admit_tick: int = -1          # set when index == 0
+    finish_reason: str = ""       # "stop_token" | "length" when done
+
+
+@dataclasses.dataclass(frozen=True)
+class StatsMsg:
+    """Counter snapshot of one expert server (see ExpertServer.stats)."""
+    n_served: int
+    decode_calls: int
+    prefill_calls: int
+    occupied_lane_steps: int
+    queue_wait_ticks: int
+    paged_read_bytes: int
+    gathered_read_bytes: int
+    peak_blocks: int
+
+
+@dataclasses.dataclass(frozen=True)
+class _RemoteError:
+    """A worker's exception, shipped back instead of a reply."""
+    trace: str
+
+
+class Transport:
+    """Carries messages between the frontend and ``n_experts`` servers."""
+
+    n_experts: int
+
+    def enqueue(self, e: int, msg: RequestMsg) -> None:
+        raise NotImplementedError
+
+    def tick(self, e: int) -> list[TokenDeltaMsg]:
+        """Step expert ``e`` once on its own clock."""
+        raise NotImplementedError
+
+    def tick_many(self, experts) -> list[tuple[int, list[TokenDeltaMsg]]]:
+        """Tick several experts; results in the given expert order.
+
+        Base implementation steps them one after another; backends with
+        real parallelism (one process per expert) overlap the work.
+        """
+        return [(e, self.tick(e)) for e in experts]
+
+    def busy(self, e: int) -> bool:
+        raise NotImplementedError
+
+    @property
+    def any_busy(self) -> bool:
+        return any(self.busy(e) for e in range(self.n_experts))
+
+    def stats(self, e: int) -> StatsMsg:
+        raise NotImplementedError
+
+    def reset_stats(self) -> None:
+        raise NotImplementedError
+
+    def warmup(self, prompt_len, sampled: bool) -> None:
+        raise NotImplementedError
+
+    def sync(self) -> None:
+        """Block until every expert's queued device work has landed."""
+        raise NotImplementedError
+
+    def close(self) -> None:
+        """Release backend resources (processes/pipes); idempotent."""
+
+
+class LoopbackTransport(Transport):
+    """In-process transport: the default, zero-copy path.
+
+    Holds the ``ExpertServer`` objects directly; messages pass by
+    reference (nothing is pickled) and ``busy`` reuses the server's own
+    idle predicate.
+    """
+
+    def __init__(self, servers):
+        self.servers = list(servers)
+        self.n_experts = len(self.servers)
+
+    def enqueue(self, e, msg):
+        self.servers[e].enqueue(msg)
+
+    def tick(self, e):
+        return self.servers[e].tick()
+
+    def busy(self, e):
+        return self.servers[e].busy
+
+    def stats(self, e):
+        return self.servers[e].stats()
+
+    def reset_stats(self):
+        for s in self.servers:
+            s.reset_stats()
+
+    def warmup(self, prompt_len, sampled):
+        # the jitted programs are shared across in-process servers via the
+        # config-keyed compile cache: one server's shapes warm them all
+        self.servers[0].warmup(prompt_len, sampled=sampled)
+
+    def sync(self):
+        for s in self.servers:
+            s.sync()
+
+
+def _serve_expert(conn, ecfg, eng, host_params) -> None:
+    """Worker loop: one ExpertServer in its own process.
+
+    Runs until a ``close`` op (or EOF).  Imports live inside the
+    function: under the ``spawn`` start method this module is re-imported
+    in a fresh interpreter, and jax must initialize per process.
+    """
+    import jax
+
+    from repro.serving.expert_server import ExpertServer
+
+    try:
+        params = jax.device_put(host_params)   # once, not per jit call
+        server = ExpertServer(ecfg, params, eng)
+        while True:
+            try:
+                op, args = conn.recv()
+            except EOFError:
+                return                          # parent went away
+            if op == "enqueue":
+                server.enqueue(args)            # pipe order == FIFO order
+            elif op == "tick":
+                conn.send(server.tick())
+            elif op == "warmup":
+                server.warmup(args[0], sampled=args[1])
+                conn.send(None)
+            elif op == "stats":
+                conn.send(server.stats())
+            elif op == "reset_stats":
+                server.reset_stats()
+            elif op == "sync":
+                server.sync()
+                conn.send(None)
+            elif op == "close":
+                return
+            else:
+                raise ValueError(f"unknown transport op {op!r}")
+    except Exception:                           # ship the traceback home
+        try:
+            conn.send(_RemoteError(traceback.format_exc()))
+        except OSError:
+            pass
+        raise
+
+
+class ProcessTransport(Transport):
+    """One spawned OS process per expert: params + KV pool live there.
+
+    The local-machine proof of the multi-host story — the only bytes
+    that ever cross a process boundary are pickled ``RequestMsg`` /
+    ``TokenDeltaMsg`` / ``StatsMsg`` records (and the one-time param
+    shipment at spawn).  ``busy`` is tracked parent-side from the
+    message flow itself (enqueues minus ``done`` deltas), so the
+    scheduler never round-trips just to ask who has work.
+
+    Ops that expect a reply are pipelined by ``tick_many`` / ``warmup``
+    / ``sync``: send to every expert first, then collect — E experts
+    really do compute concurrently.
+
+    The usual ``multiprocessing`` spawn rule applies: the parent's main
+    module must be importable by path (a script piped via stdin cannot
+    spawn workers — they die at startup, surfaced here as
+    ``RuntimeError: expert e worker exited``).  A worker that dies for
+    any reason (OOM kill, segfault) is reported the same way, with its
+    exit code; Python-level worker exceptions additionally ship their
+    traceback home.
+    """
+
+    def __init__(self, ecfg, eng, expert_params):
+        import jax                               # parent-side host transfer
+
+        self.n_experts = len(expert_params)
+        self._outstanding = [0] * self.n_experts
+        self._broken = False
+        self._closed = False
+        ctx = mp.get_context("spawn")            # never fork a live jax
+        self._procs, self._conns = [], []
+        for p in expert_params:
+            host = jax.tree_util.tree_map(np.asarray, p)
+            parent, child = ctx.Pipe()
+            proc = ctx.Process(target=_serve_expert,
+                               args=(child, ecfg, eng, host), daemon=True)
+            proc.start()
+            child.close()
+            self._procs.append(proc)
+            self._conns.append(parent)
+
+    def _dead(self, e) -> RuntimeError:
+        """A worker vanished without a Python traceback (OOM kill,
+        segfault): name the expert and its exit code, not just EOF."""
+        self._procs[e].join(timeout=1)
+        return RuntimeError(
+            f"expert {e} worker exited "
+            f"(exitcode={self._procs[e].exitcode})")
+
+    def _check(self):
+        if self._closed:
+            raise RuntimeError("ProcessTransport is closed; build a fresh "
+                               "engine to serve again")
+        # after any worker failure the pipes may hold replies belonging
+        # to an aborted batched op — fail every later op loudly instead
+        # of handing a stale reply to the wrong caller
+        if self._broken:
+            raise RuntimeError("ProcessTransport is broken after a worker "
+                               "failure; build a fresh engine")
+
+    def _send(self, e, op, args):
+        self._check()
+        try:
+            self._conns[e].send((op, args))
+        except (BrokenPipeError, OSError):
+            self._broken = True
+            raise self._dead(e) from None
+
+    def _recv(self, e):
+        self._check()
+        try:
+            out = self._conns[e].recv()
+        except EOFError:
+            self._broken = True
+            raise self._dead(e) from None
+        if isinstance(out, _RemoteError):
+            self._broken = True
+            raise RuntimeError(f"expert {e} worker failed:\n{out.trace}")
+        return out
+
+    def enqueue(self, e, msg):
+        self._outstanding[e] += 1
+        self._send(e, "enqueue", msg)            # fire-and-forget
+
+    def _absorb(self, e, deltas):
+        self._outstanding[e] -= sum(d.done for d in deltas)
+        return deltas
+
+    def tick(self, e):
+        self._send(e, "tick", None)
+        return self._absorb(e, self._recv(e))
+
+    def tick_many(self, experts):
+        experts = list(experts)
+        for e in experts:                        # overlap expert compute
+            self._send(e, "tick", None)
+        return [(e, self._absorb(e, self._recv(e))) for e in experts]
+
+    def busy(self, e):
+        # a request is outstanding exactly from enqueue until its done
+        # delta — equivalent to the server's pending-or-active predicate,
+        # but known parent-side without an RPC
+        return self._outstanding[e] > 0
+
+    def stats(self, e):
+        self._send(e, "stats", None)
+        return self._recv(e)
+
+    def reset_stats(self):
+        for e in range(self.n_experts):
+            self._send(e, "reset_stats", None)
+
+    def warmup(self, prompt_len, sampled):
+        # per-process jit caches: every expert warms itself, concurrently
+        for e in range(self.n_experts):
+            self._send(e, "warmup", (prompt_len, sampled))
+        for e in range(self.n_experts):
+            self._recv(e)
+
+    def sync(self):
+        for e in range(self.n_experts):
+            self._send(e, "sync", None)
+        for e in range(self.n_experts):
+            self._recv(e)
+
+    def close(self):
+        self._closed = True
+        for c in self._conns:
+            try:
+                c.send(("close", None))
+                c.close()
+            except OSError:
+                pass
+        self._conns = []
+        for p in self._procs:
+            p.join(timeout=30)
+            if p.is_alive():
+                p.terminate()
+                p.join(timeout=5)    # reap: no zombie per stuck worker
+        self._procs = []
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass

@@ -1,0 +1,313 @@
+"""The frontend / expert-server / transport seams (serving refactor).
+
+The engine is now three layers: a router frontend, one self-contained
+``ExpertServer`` per expert (its own tick clock, no router/frontend/
+global-barrier references), and a serializable message transport between
+them (in-process loopback or one spawned OS process per expert).  These
+tests pin the seams:
+
+* ``ExpertServer`` alone — enqueue/tick with no frontend, early-stop
+  block recycling, the shared ``busy`` idle predicate;
+* asynchrony — two servers driven wildly unequal tick counts must emit
+  the same tokens as the lockstep engine (the paper's no-talk property
+  applied to serving);
+* a structural check that ``expert_server.py`` imports neither the
+  router nor the frontend;
+* the loopback frontend against the baseline oracle (same recipes as
+  the main fuzz suites in ``tests/test_serving.py``);
+* a spawn-based two-expert ``ProcessTransport`` identity smoke (slow:
+  each worker re-imports jax and compiles its own programs).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import router as routerlib
+from repro.models import model as modellib
+from repro.serving import (EngineConfig, ExpertServer, LoopbackTransport,
+                           MixtureServeEngine, ProcessTransport, RequestMsg,
+                           SamplingParams, StatsMsg, baseline)
+
+ECFG = ModelConfig(name="tr-expert", n_layers=2, d_model=64, n_heads=4,
+                   n_kv_heads=4, d_ff=128, vocab_size=128, ffn_type="gelu",
+                   loss_chunk=32, compute_dtype="float32",
+                   param_dtype="float32")
+RCFG = ModelConfig(name="tr-router", n_layers=1, d_model=32, n_heads=2,
+                   n_kv_heads=2, d_ff=64, vocab_size=128, ffn_type="gelu",
+                   loss_chunk=32, compute_dtype="float32",
+                   param_dtype="float32")
+E, PREFIX, MAXLEN, BS = 2, 16, 48, 16
+ENG = EngineConfig(lanes_per_expert=2, max_len=MAXLEN, prefix_len=PREFIX,
+                   block_size=BS, route_batch=4)
+
+
+@pytest.fixture(scope="module")
+def mixture():
+    key = jax.random.PRNGKey(0)
+    router_params = routerlib.init_ensemble(key, RCFG, E)
+    expert_params = [modellib.init_params(jax.random.fold_in(key, e), ECFG)
+                     for e in range(E)]
+    return expert_params, router_params
+
+
+def _msg(uid, prompt, n_new, sampling=None, stops=(), tick=0):
+    return RequestMsg(uid=uid, prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=n_new,
+                      sampling=sampling or SamplingParams(),
+                      stop_tokens=frozenset(stops), enqueue_tick=tick)
+
+
+def _drain(server):
+    """Tick a lone server until idle; returns its deltas in order."""
+    deltas = []
+    while server.busy:
+        deltas.append(server.tick())
+    return [d for batch in deltas for d in batch]
+
+
+def _oracle(params, prompt, n_new, sampling=None, uid=0, stops=()):
+    return baseline.generate_request(ECFG, params, prompt, n_new,
+                                     sampling=sampling, uid=uid,
+                                     stop_tokens=stops, cache_len=MAXLEN)
+
+
+# ---------------------------------------------------------------------------
+# ExpertServer alone: no frontend, no transport, no router
+# ---------------------------------------------------------------------------
+def test_expert_server_enqueue_tick_matches_oracle(mixture):
+    """A bare ExpertServer must serve greedy + sampled requests bitwise
+    like the one-shot baseline, purely through enqueue()/tick()."""
+    expert_params, _ = mixture
+    rng = np.random.default_rng(50)
+    srv = ExpertServer(ECFG, expert_params[0], ENG)
+    prompts = [rng.integers(0, ECFG.vocab_size,
+                            size=int(rng.integers(PREFIX, 30))).astype(np.int32)
+               for _ in range(4)]
+    sps = [None, SamplingParams(temperature=0.9, top_k=8, seed=9),
+           None, SamplingParams(temperature=1.2, top_p=0.8, seed=10)]
+    for i in range(4):
+        srv.enqueue(_msg(i, prompts[i], 5, sampling=sps[i]))
+    assert srv.busy
+    deltas = _drain(srv)
+    assert not srv.busy
+    toks = {i: [] for i in range(4)}
+    for d in deltas:
+        assert d.index == len(toks[d.uid])
+        toks[d.uid].append(d.token)
+    for i in range(4):
+        want = _oracle(expert_params[0], prompts[i], 5, sampling=sps[i],
+                       uid=i)
+        np.testing.assert_array_equal(np.asarray(toks[i]), want)
+    st = srv.stats()
+    assert isinstance(st, StatsMsg) and st.n_served == 4
+    assert st.queue_wait_ticks >= 0
+
+
+def test_expert_server_early_stop_returns_blocks_same_tick(mixture):
+    """An early stop must free the lane and its pool blocks within the
+    same tick() call — observable with no frontend attached."""
+    expert_params, _ = mixture
+    rng = np.random.default_rng(51)
+    prompt = rng.integers(0, ECFG.vocab_size, size=PREFIX).astype(np.int32)
+    want = _oracle(expert_params[0], prompt, 8)
+    srv = ExpertServer(ECFG, expert_params[0], ENG)
+    lanes = ENG.lanes_per_expert
+    # stop on the very first (prefill-sampled) token: the request must
+    # finish inside the admission tick and give everything back
+    srv.enqueue(_msg(0, prompt, 8, stops={int(want[0])}))
+    deltas = srv.tick()
+    assert [d.done for d in deltas] == [True]
+    assert deltas[0].finish_reason == "stop_token"
+    assert deltas[0].admit_tick == deltas[0].tick
+    assert srv.balloc.n_in_use == 0 and srv.alloc.n_free == lanes
+    assert not srv.busy
+
+
+def test_expert_server_clock_syncs_forward_only(mixture):
+    """enqueue() pulls the clock to the sender's tick, never backward,
+    and admit stamps land on the synced timeline."""
+    expert_params, _ = mixture
+    rng = np.random.default_rng(52)
+    prompt = rng.integers(0, ECFG.vocab_size, size=PREFIX).astype(np.int32)
+    srv = ExpertServer(ECFG, expert_params[0], ENG)
+    srv.enqueue(_msg(0, prompt, 2, tick=500))
+    assert srv.clock == 500
+    deltas = _drain(srv)
+    assert deltas[0].admit_tick == 500
+    srv.enqueue(_msg(1, prompt, 2, tick=3))      # stale sender tick
+    assert srv.clock > 500                        # no time travel
+    _drain(srv)
+    assert srv.stats().n_served == 2
+
+
+def test_unequal_tick_counts_leave_tokens_unchanged(mixture):
+    """Acceptance: no global barrier.  Expert 0 is driven to completion
+    before expert 1 is ticked at all (plus extra no-op ticks), and every
+    request's tokens still match the lockstep engine facade bit for bit."""
+    expert_params, router_params = mixture
+    rng = np.random.default_rng(53)
+    prompts = [rng.integers(0, ECFG.vocab_size, size=PREFIX).astype(np.int32)
+               for _ in range(6)]
+    sps = [None if i % 2 else SamplingParams(temperature=0.8, seed=20 + i)
+           for i in range(6)]
+    # reference: the ordinary lockstep facade
+    eng = MixtureServeEngine(ECFG, RCFG, expert_params, router_params, ENG)
+    ref = [eng.submit(prompts[i], 4, sampling=sps[i]) for i in range(6)]
+    eng.run()
+    by_expert = {0: [], 1: []}
+    for r in ref:
+        by_expert[r.expert].append(r)
+    # async: two standalone servers, wildly unequal tick schedules —
+    # uids/prompts identical to the facade run, so tokens must be too
+    srvs = [ExpertServer(ECFG, expert_params[e], ENG) for e in range(E)]
+    toks = {r.uid: [] for r in ref}
+    for e in range(E):
+        for r in by_expert[e]:
+            srvs[e].enqueue(_msg(r.uid, prompts[r.uid], 4,
+                                 sampling=sps[r.uid]))
+    for d in _drain(srvs[0]):                 # expert 0 runs to the end...
+        toks[d.uid].append(d.token)
+    for _ in range(7):
+        srvs[0].tick()                        # ...then spins empty ticks
+    for d in _drain(srvs[1]):                 # expert 1 only starts now
+        toks[d.uid].append(d.token)
+    assert srvs[0].clock != srvs[1].clock     # genuinely different clocks
+    for r in ref:
+        assert toks[r.uid] == r.tokens, r.uid
+
+
+def test_expert_server_imports_no_router_no_frontend():
+    """Structural: the expert layer must not know about routing or the
+    frontend — the transport messages are its whole world."""
+    import inspect
+
+    from repro.serving import expert_server
+    src = inspect.getsource(expert_server)
+    imports = [ln for ln in src.splitlines()
+               if ln.lstrip().startswith(("import ", "from "))]
+    assert imports, "no imports found — test is broken"
+    for ln in imports:
+        assert "router" not in ln, ln
+        assert "frontend" not in ln, ln
+        assert "assignment" not in ln, ln
+
+
+# ---------------------------------------------------------------------------
+# Loopback frontend vs the baseline oracle (same recipes as test_serving)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", range(4))
+def test_loopback_frontend_fuzz_matches_baseline(mixture, seed):
+    """Random prompts/budgets/recipes/stop sets through the layered stack
+    on LoopbackTransport: tokens bitwise vs the serial oracle."""
+    expert_params, router_params = mixture
+    rng = np.random.default_rng(7000 + seed)
+    R = int(rng.integers(3, 6))
+    prompts = [rng.integers(0, ECFG.vocab_size,
+                            size=int(rng.integers(PREFIX, 33))).astype(np.int32)
+               for _ in range(R)]
+    n_new = [int(rng.integers(2, 8)) for _ in range(R)]
+    sps = [None if rng.random() < 0.4 else
+           SamplingParams(temperature=float(rng.uniform(0.3, 1.3)),
+                          top_k=int(rng.choice([0, 2, 8])),
+                          seed=int(rng.integers(0, 1 << 16)))
+           for _ in range(R)]
+    stops = [frozenset(int(t) for t in
+                       rng.integers(0, ECFG.vocab_size, size=8))
+             if rng.random() < 0.5 else frozenset() for _ in range(R)]
+    eng = MixtureServeEngine(ECFG, RCFG, expert_params, router_params, ENG)
+    assert isinstance(eng._transport, LoopbackTransport)
+    reqs = [eng.submit(prompts[i], n_new[i], sampling=sps[i],
+                       stop_tokens=stops[i],
+                       arrival_tick=int(rng.integers(0, 5)))
+            for i in range(R)]
+    res = eng.run()
+    assert len(res["requests"]) == R
+    for r in res["requests"]:
+        want = _oracle(expert_params[r.expert], prompts[r.uid], n_new[r.uid],
+                       sampling=sps[r.uid], uid=r.uid, stops=stops[r.uid])
+        np.testing.assert_array_equal(np.asarray(r.tokens), want,
+                                      err_msg=f"seed {seed} uid {r.uid}")
+    assert sum(s["served"] for s in res["per_expert"].values()) == R
+
+
+def test_run_report_per_expert_stats(mixture):
+    """Satellite: run() must report per-expert queue_wait_ticks and
+    occupancy next to the global aggregates."""
+    expert_params, router_params = mixture
+    rng = np.random.default_rng(60)
+    eng = MixtureServeEngine(ECFG, RCFG, expert_params, router_params, ENG)
+    for i in range(6):                        # > lanes: someone must queue
+        eng.submit(rng.integers(0, ECFG.vocab_size,
+                                size=PREFIX).astype(np.int32), 4,
+                   arrival_tick=0)
+    res = eng.run()
+    assert set(res["per_expert"]) == set(range(E))
+    for st in res["per_expert"].values():
+        assert st["queue_wait_ticks"] >= 0
+        assert 0.0 <= st["occupancy"] <= 1.0
+    assert res["transport"] == "loopback"
+    # per-expert occupancies aggregate to the global one
+    tot_lane = sum(s["occupancy"] * s["decode_calls"]
+                   for s in res["per_expert"].values())
+    tot_calls = sum(s["decode_calls"] for s in res["per_expert"].values())
+    assert res["occupancy"] == pytest.approx(tot_lane / max(tot_calls, 1))
+
+
+def test_engine_config_rejects_unknown_transport(mixture):
+    expert_params, router_params = mixture
+    with pytest.raises(ValueError, match="transport"):
+        MixtureServeEngine(ECFG, RCFG, expert_params, router_params,
+                           EngineConfig(max_len=MAXLEN, block_size=BS,
+                                        prefix_len=PREFIX, transport="grpc"))
+
+
+# ---------------------------------------------------------------------------
+# ProcessTransport: one spawned process per expert (slow: jax per worker)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_process_transport_identity_smoke(mixture):
+    """Two experts in two spawned processes, router scores the only
+    cross-process traffic: tokens must stay bitwise identical to the
+    baseline oracle (greedy + sampled + early stops), with per-expert
+    stats flowing back as StatsMsg."""
+    expert_params, router_params = mixture
+    rng = np.random.default_rng(80)
+    R = 6
+    prompts = [rng.integers(0, ECFG.vocab_size,
+                            size=int(rng.integers(PREFIX, 30))).astype(np.int32)
+               for _ in range(R)]
+    n_new = [int(rng.integers(2, 7)) for _ in range(R)]
+    sps = [None if i % 2 == 0 else
+           SamplingParams(temperature=0.9, top_k=8, seed=70 + i)
+           for i in range(R)]
+    stops = [frozenset() if i % 3 else
+             frozenset(int(t) for t in
+                       rng.integers(0, ECFG.vocab_size, size=12))
+             for i in range(R)]
+    eng = MixtureServeEngine(
+        ECFG, RCFG, expert_params, router_params,
+        EngineConfig(lanes_per_expert=2, max_len=MAXLEN, prefix_len=PREFIX,
+                     block_size=BS, route_batch=4, transport="process"))
+    with eng:
+        assert isinstance(eng._transport, ProcessTransport)
+        reqs = [eng.submit(prompts[i], n_new[i], sampling=sps[i],
+                           stop_tokens=stops[i], arrival_tick=i // 3)
+                for i in range(R)]
+        res = eng.run()
+    assert len(res["requests"]) == R
+    assert res["transport"] == "process"
+    want_routes = baseline.route(RCFG, router_params,
+                                 np.stack([p[:PREFIX] for p in prompts]),
+                                 PREFIX)
+    for r in res["requests"]:
+        assert r.expert == want_routes[r.uid]
+        want = _oracle(expert_params[r.expert], prompts[r.uid],
+                       n_new[r.uid], sampling=sps[r.uid], uid=r.uid,
+                       stops=stops[r.uid])
+        np.testing.assert_array_equal(np.asarray(r.tokens), want,
+                                      err_msg=f"uid {r.uid}")
+    assert sum(s["served"] for s in res["per_expert"].values()) == R
+    # the facade exposes no local expert state on this transport
+    with pytest.raises(AttributeError):
+        eng._experts
