@@ -8,6 +8,11 @@ BENCH trajectory is *gated*, not just uploaded:
     gate) hard-fail — these are correctness, no tolerance;
   * the paged decode read traffic must stay strictly below the gathered
     ``(lanes, max_len)`` view it replaced — also a hard gate;
+  * a v3 ``open_loop`` section (when present) must carry the full
+    per-expert latency quartet, be token-identical in every run, and —
+    when a replicated run exists — have improved the hot expert's p99
+    TTFT (hard gates; the latency values themselves are informational
+    rows in the delta table);
   * engine tokens/sec must stay within ``--min-ratio`` of the baseline —
     generous by default because shared CI runners are noisy; the full
     delta table lands in ``$GITHUB_STEP_SUMMARY`` either way.
@@ -67,7 +72,45 @@ ROWS = [
     ("early stops", "engine.early_stops"),
     ("paged read B/tick", "decode_read_bytes_per_tick.paged"),
     ("gathered read B/tick", "decode_read_bytes_per_tick.gathered"),
+    # v3 open-loop latency rows: absent in v1/v2 reports, tolerantly
+    # skipped (latency is informational here; the gates below check the
+    # structural invariants, serve_bench gates the improvement itself)
+    ("open-loop p50 TTFT ms (1/expert)", "open_loop.single.ttft_p50_ms"),
+    ("open-loop p99 TTFT ms (1/expert)", "open_loop.single.ttft_p99_ms"),
+    ("open-loop p99 ITL ms (1/expert)", "open_loop.single.itl_p99_ms"),
+    ("open-loop p99 TTFT ms (replicated)", "open_loop.replicated.ttft_p99_ms"),
+    ("open-loop p99 ITL ms (replicated)", "open_loop.replicated.itl_p99_ms"),
 ]
+
+# every per-expert entry of an open_loop run must carry the full latency
+# quartet — a v3 report that dropped one silently would still "compare"
+_LATENCY_KEYS = ("ttft_p50_ms", "ttft_p99_ms", "itl_p50_ms", "itl_p99_ms")
+
+
+def check_open_loop(fresh: dict) -> list[str]:
+    """Structural gates on the v3 ``open_loop`` section (when present):
+    per-expert latency fields complete, every run token-identical, and a
+    replicated run must have improved the hot expert's p99 TTFT."""
+    ol = fresh.get("open_loop")
+    if ol is None:
+        return []
+    failures = []
+    for run_name in ("single", "replicated"):
+        run = ol.get(run_name)
+        if run is None:
+            continue
+        if run.get("tokens_identical") is not True:
+            failures.append(f"token-identity gate failed (open-loop "
+                            f"{run_name} run)")
+        for e, st in (run.get("per_expert") or {}).items():
+            missing = [k for k in _LATENCY_KEYS if k not in st]
+            if missing:
+                failures.append(f"open-loop {run_name} run: expert {e} "
+                                f"report is missing {missing}")
+    if "replicated" in ol and ol.get("p99_ttft_improved") is not True:
+        failures.append("open-loop replicated run did not improve the hot "
+                        "expert's p99 TTFT")
+    return failures
 
 
 def delta_table(fresh: dict, base: dict) -> str:
@@ -138,6 +181,7 @@ def main() -> int:
     if rb and rb["paged"] >= rb["gathered"]:
         failures.append(f"paged decode reads ({rb['paged']} B/tick) not "
                         f"below gathered ({rb['gathered']} B/tick)")
+    failures.extend(check_open_loop(fresh))
     f_tps = _get(fresh, "engine.tokens_per_s") or 0.0
     b_tps = _get(base, "engine.tokens_per_s") or 0.0
     if b_tps and f_tps < args.min_ratio * b_tps:

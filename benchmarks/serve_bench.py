@@ -38,15 +38,30 @@ gates must hold there exactly as on the in-process loopback default.
 (greedy under pool pressure, batched-admission prefill budget, AND a
 sampled + early-stop gate) run in CI on every push; the speedup exit
 check is skipped there because tiny models are dispatch-bound.  The
-``--json`` report follows the ``BENCH_serve/v2`` schema (v1 + transport
-and per-expert queue-wait/occupancy stats), persisted as a CI artifact
-so the perf trajectory accumulates.
+``--json`` report follows the ``BENCH_serve/v3`` schema (v2 + the
+open-loop latency section and per-expert replica breakdowns),
+persisted as a CI artifact so the perf trajectory accumulates.
+
+``--open-loop`` adds the production-facing workload the closed-loop
+sections cannot measure: **Poisson arrivals** (``--arrival-rate``
+requests per engine tick) with a **Zipf expert mix** (``--zipf-a``
+over experts ranked by routed traffic), reporting per-expert p50/p99
+time-to-first-token and inter-token latency in wall milliseconds —
+arrivals keep coming whether or not the engine keeps up, so queueing
+delay shows up in TTFT instead of hiding behind aggregate tokens/sec.
+With ``--hot-replicas R`` (R > 1) the workload runs twice — one server
+per expert, then R replicas of the hottest expert with least-loaded
+admission — and the bench hard-fails unless the hot expert's p99 TTFT
+strictly improves while both runs stay token-identical to the serial
+oracle (replica placement cannot change tokens: the sampler is
+counter-based per ``(seed, uid, step)``).
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
+import time
 
 import jax
 import jax.numpy as jnp
@@ -56,9 +71,10 @@ from repro.configs.base import ModelConfig
 from repro.core import router as routerlib
 from repro.data import DataConfig, SyntheticCorpus
 from repro.models import model as modellib
-from repro.serving import (EngineConfig, MixtureServeEngine, SamplingParams,
+from repro.serving import (EngineConfig, SamplingParams, ServeFrontend,
                            baseline)
 from repro.serving import cache as cachelib
+from repro.serving import cli as servecli
 
 EXPERT = ModelConfig(name="bench-expert", n_layers=4, d_model=256, n_heads=8,
                      n_kv_heads=8, d_ff=1024, vocab_size=512,
@@ -89,38 +105,132 @@ def dense_slab_bytes(ecfg, lanes: int, max_len: int) -> int:
     return cachelib.kv_cache_bytes(modellib.cache_specs(ecfg, lanes, max_len))
 
 
+def _pctl(xs, q: float) -> float:
+    return float(np.percentile(np.asarray(xs, float), q)) if len(xs) else 0.0
+
+
+def open_loop_workload(rcfg, router_params, corpus, args, rng):
+    """Skewed open-loop workload: (prompts, n_new, arrival_ticks, hot_expert).
+
+    A candidate prompt pool is routed once with the real router to learn
+    which prompts land on which expert; experts are ranked by that pool
+    traffic and each request draws its expert rank from a Zipf(--zipf-a)
+    law, then takes the next pooled prompt routed there — so the engine's
+    own router reproduces the intended skew at serve time.  Arrival ticks
+    are Poisson: floored cumsum of Exponential(1/--arrival-rate) gaps.
+    """
+    pool_n = max(4 * args.ol_requests, 8 * args.experts)
+    pool, _ = corpus.sequences(np.arange(pool_n) + 777_555)
+    eids = np.asarray(baseline.route(rcfg, router_params, pool,
+                                     args.prompt_len))
+    by_expert = [np.flatnonzero(eids == e) for e in range(args.experts)]
+    ranked = [e for e in sorted(range(args.experts),
+                                key=lambda e: (-len(by_expert[e]), e))
+              if len(by_expert[e])]
+    ranks = np.minimum(rng.zipf(args.zipf_a, size=args.ol_requests),
+                       len(ranked)) - 1
+    cursors = [0] * args.experts
+    picks = []
+    for k in ranks:
+        e = ranked[int(k)]
+        picks.append(int(by_expert[e][cursors[e] % len(by_expert[e])]))
+        cursors[e] += 1
+    picks = np.asarray(picks)
+    hot = int(np.bincount(eids[picks], minlength=args.experts).argmax())
+    gaps = rng.exponential(1.0 / args.arrival_rate, size=args.ol_requests)
+    arrivals = np.floor(np.cumsum(gaps)).astype(int)
+    n_new = rng.integers(args.min_new, args.max_new + 1,
+                         size=args.ol_requests)
+    return pool[picks], n_new, arrivals, hot
+
+
+def open_loop_run(ecfg, rcfg, expert_params, router_params, args, max_len,
+                  prompts, n_new, arrivals, sampling, serial, replicas):
+    """One open-loop pass: drive the engine tick by tick, wall-stamping
+    each request's arrival and every token delta.  Returns (run report
+    with p50/p99 TTFT + inter-token latency overall and per expert,
+    list of token-mismatch indices vs the serial oracle).
+
+    The engine gets a full KV pool (``pool_blocks=0``) so lane queueing
+    — the thing replication relieves — is what TTFT measures, not block
+    pressure.
+    """
+    eng_cfg = EngineConfig(lanes_per_expert=args.lanes, max_len=max_len,
+                           prefix_len=args.prompt_len,
+                           min_prefill_bucket=args.prompt_len,
+                           block_size=args.block_size,
+                           decode_impl=args.decode_impl,
+                           transport=args.transport)
+    with ServeFrontend(ecfg, rcfg, expert_params, router_params, eng_cfg,
+                       replicas=replicas) as eng:
+        eng.warmup(args.prompt_len, sampled=sampling.temperature > 0)
+        reqs = [eng.submit(prompts[i], int(n_new[i]), sampling=sampling,
+                           arrival_tick=int(arrivals[i]))
+                for i in range(len(prompts))]
+        arrive_wall: dict[int, float] = {}
+        token_walls: dict[int, list[float]] = {r.uid: [] for r in reqs}
+        while eng.busy:
+            eng._skip_idle_gap()      # jump empty gaps to the next arrival
+            now = time.perf_counter()
+            for r in reqs:
+                if r.uid not in arrive_wall and r.arrival_tick <= eng.tick:
+                    arrive_wall[r.uid] = now
+            eng.step()
+            now = time.perf_counter()
+            for d in eng.last_deltas:
+                token_walls[d.request.uid].append(now)
+    bad = [i for i, r in enumerate(reqs)
+           if r.expert != serial["routes"][i]
+           or not np.array_equal(np.asarray(r.tokens), serial["tokens"][i])]
+
+    def lat(sub):
+        ttft = [token_walls[r.uid][0] - arrive_wall[r.uid] for r in sub]
+        itl = [b - a for r in sub
+               for a, b in zip(token_walls[r.uid], token_walls[r.uid][1:])]
+        return {"ttft_p50_ms": round(_pctl(ttft, 50) * 1e3, 2),
+                "ttft_p99_ms": round(_pctl(ttft, 99) * 1e3, 2),
+                "itl_p50_ms": round(_pctl(itl, 50) * 1e3, 2),
+                "itl_p99_ms": round(_pctl(itl, 99) * 1e3, 2)}
+
+    per_expert = {
+        e: {"served": sum(r.expert == e for r in reqs),
+            **lat([r for r in reqs if r.expert == e])}
+        for e in sorted({r.expert for r in reqs})}
+    return {"replicas": {int(e): int(c)
+                         for e, c in dict(replicas or {}).items()},
+            **lat(reqs), "per_expert": per_expert,
+            "tokens_identical": not bad}, bad
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--experts", type=int, default=2)
-    ap.add_argument("--lanes", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--min-new", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=32)
-    ap.add_argument("--block-size", type=int, default=16,
-                    help="tokens per paged KV block")
-    ap.add_argument("--blocks-per-expert", type=int, default=0,
-                    help="KV pool blocks per expert "
-                         "(0 = lanes*max_len/block_size, i.e. no pressure)")
-    ap.add_argument("--decode-impl", choices=["auto", "jnp", "pallas"],
-                    default="auto",
-                    help="paged decode attention: jnp gather reference or "
-                         "the Pallas block-table kernel (interpret-mode on "
-                         "CPU; auto follows the expert config)")
-    ap.add_argument("--transport", choices=["loopback", "process"],
-                    default="loopback",
-                    help="expert backend: in-process loopback or one "
-                         "spawned OS process per expert (router scores the "
-                         "only cross-process traffic)")
+    servecli.add_engine_args(ap)
+    servecli.add_sampling_args(ap, temperature=0.8, top_k=32, top_p=0.95)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mode", choices=["greedy", "sampled"], default="greedy",
                     help="sampled: temperature/top-k/top-p decoding plus a "
                          "random stop-token set (early-stop workload)")
-    ap.add_argument("--temperature", type=float, default=0.8,
-                    help="sampled-mode temperature")
-    ap.add_argument("--top-k", type=int, default=32)
-    ap.add_argument("--top-p", type=float, default=0.95)
-    ap.add_argument("--sample-seed", type=int, default=0)
+    ap.add_argument("--open-loop", action="store_true",
+                    help="also run the skewed open-loop latency workload "
+                         "(Poisson arrivals, Zipf expert mix, p50/p99 TTFT "
+                         "and inter-token latency per expert)")
+    ap.add_argument("--arrival-rate", type=float, default=0.5,
+                    help="open-loop Poisson arrival rate, requests per "
+                         "engine tick")
+    ap.add_argument("--zipf-a", type=float, default=1.5,
+                    help="Zipf exponent of the open-loop expert mix "
+                         "(higher = more skew onto the hot expert)")
+    ap.add_argument("--ol-requests", type=int, default=32,
+                    help="open-loop workload size (smoke clamps to 16)")
+    ap.add_argument("--hot-replicas", type=int, default=1,
+                    help="> 1: re-run the open-loop workload with this many "
+                         "replicas of the hot expert and hard-fail unless "
+                         "its p99 TTFT strictly improves")
     ap.add_argument("--n-stops", type=int, default=-1,
                     help="random stop-token ids shared by all requests "
                          "(-1: vocab/16 in sampled mode, 0 in greedy)")
@@ -137,6 +247,7 @@ def main() -> int:
         args.requests = min(args.requests, 10)
         args.lanes = min(args.lanes, 2)
         args.max_new = min(args.max_new, 16)
+        args.ol_requests = min(args.ol_requests, 16)
         if args.blocks_per_expert == 0:   # force block reuse under pressure
             total = args.prompt_len + args.max_new
             args.blocks_per_expert = -(-total // args.block_size) + 1
@@ -183,7 +294,7 @@ def main() -> int:
     # ---- engine: continuous batching over the paged pool ------------------
     # context managers cover every early-failure return below: worker
     # processes (process transport) are released on all exit paths
-    with MixtureServeEngine(
+    with ServeFrontend(
             ecfg, rcfg, expert_params, router_params,
             EngineConfig(lanes_per_expert=args.lanes, max_len=max_len,
                          prefix_len=prefix_len,
@@ -191,7 +302,8 @@ def main() -> int:
                          block_size=args.block_size,
                          pool_blocks=args.blocks_per_expert,
                          decode_impl=args.decode_impl,
-                         transport=args.transport)) as eng:
+                         transport=args.transport),
+            replicas=args.replicas) as eng:
         # warmup: compile every admission batch width the timed run can
         # hit (routing-independent — see MixtureServeEngine.warmup);
         # greedy mode skips the sampled warmup pass it would never use
@@ -213,10 +325,13 @@ def main() -> int:
     speedup = res["tokens_per_s"] / serial["tokens_per_s"]
     dense = dense_slab_bytes(ecfg, args.lanes, max_len)
     report = {
-        # v2 (PR 5): adds "transport" + per-expert queue_wait_ticks /
-        # occupancy under engine.per_expert; compare_bench.py accepts a
-        # newer fresh report against an older baseline (added keys only)
-        "schema": "BENCH_serve/v2",
+        # v3 (PR 6): adds the open_loop latency section (Poisson arrivals,
+        # Zipf expert mix, per-expert p50/p99 TTFT + inter-token latency)
+        # and per-expert replica breakdowns under engine.per_expert; v2
+        # (PR 5) added "transport" + per-expert queue_wait_ticks /
+        # occupancy; compare_bench.py accepts a newer fresh report
+        # against an older baseline (added keys only)
+        "schema": "BENCH_serve/v3",
         "mode": args.mode,
         "transport": args.transport,
         "workload": {"requests": args.requests, "experts": args.experts,
@@ -243,7 +358,14 @@ def main() -> int:
                        e: {"served": s["served"],
                            "prefills": s["prefills"],
                            "queue_wait_ticks": s["queue_wait_ticks"],
-                           "occupancy": round(s["occupancy"], 3)}
+                           "occupancy": round(s["occupancy"], 3),
+                           "replicas": s["replicas"],
+                           "per_replica": {
+                               rr: {"served": pr["served"],
+                                    "queue_wait_ticks":
+                                        pr["queue_wait_ticks"],
+                                    "occupancy": round(pr["occupancy"], 3)}
+                               for rr, pr in s["per_replica"].items()}}
                        for e, s in res["per_expert"].items()}},
         "paged_kv": {"block_size": args.block_size,
                      "pool_blocks_per_expert": pool_blocks,
@@ -288,11 +410,61 @@ def main() -> int:
         print("FAIL: paged decode reads did not beat the gathered "
               "(lanes, max_len) view")
         return emit(1)
+
+    # ---- open-loop skewed latency workload --------------------------------
+    if args.open_loop:
+        ol_rng = np.random.default_rng(args.seed + 1)
+        ol_prompts, ol_new, ol_arrivals, hot = open_loop_workload(
+            rcfg, router_params, corpus, args, ol_rng)
+        # one serial oracle for both runs: tokens are replica-placement-
+        # invariant, so single and replicated must both match it bitwise
+        serial_ol = baseline.serve_serial(
+            ecfg, rcfg, expert_params, router_params, ol_prompts, ol_new,
+            prefix_len=prefix_len, cache_len=max_len, sampling=sampling)
+        single, bad_ol = open_loop_run(
+            ecfg, rcfg, expert_params, router_params, args, max_len,
+            ol_prompts, ol_new, ol_arrivals, sampling, serial_ol,
+            replicas=None)
+        report["open_loop"] = {
+            "arrival_rate": args.arrival_rate, "zipf_a": args.zipf_a,
+            "requests": int(args.ol_requests), "hot_expert": hot,
+            "hot_replicas": args.hot_replicas, "single": single}
+        if bad_ol:
+            print(f"FAIL: open-loop token mismatch (1 server/expert) on "
+                  f"requests {bad_ol[:8]}")
+            return emit(1)
+        print(f"open-loop ({args.ol_requests} reqs, rate "
+              f"{args.arrival_rate}/tick, zipf {args.zipf_a}): hot expert "
+              f"{hot} served {single['per_expert'][hot]['served']}, "
+              f"p99 TTFT {single['per_expert'][hot]['ttft_p99_ms']}ms, "
+              f"p99 ITL {single['per_expert'][hot]['itl_p99_ms']}ms")
+        if args.hot_replicas > 1:
+            repl, bad_ol = open_loop_run(
+                ecfg, rcfg, expert_params, router_params, args, max_len,
+                ol_prompts, ol_new, ol_arrivals, sampling, serial_ol,
+                replicas={hot: args.hot_replicas})
+            report["open_loop"]["replicated"] = repl
+            if bad_ol:
+                print(f"FAIL: open-loop token mismatch "
+                      f"({args.hot_replicas} replicas of expert {hot}) on "
+                      f"requests {bad_ol[:8]}")
+                return emit(1)
+            p99_1 = single["per_expert"][hot]["ttft_p99_ms"]
+            p99_r = repl["per_expert"][hot]["ttft_p99_ms"]
+            improved = p99_r < p99_1
+            report["open_loop"]["p99_ttft_improved"] = improved
+            print(f"open-loop hot expert {hot} p99 TTFT: {p99_1}ms (1 "
+                  f"server) -> {p99_r}ms ({args.hot_replicas} replicas, "
+                  f"least-loaded admission), tokens identical both runs")
+            if not improved:
+                print(f"FAIL: {args.hot_replicas} replicas did not improve "
+                      f"hot-expert p99 TTFT ({p99_r}ms >= {p99_1}ms)")
+                return emit(1)
     if args.smoke:
         # the pressured pool above serializes admission, so the batching
         # bound needs a second, full-pool engine: k_e simultaneous
         # arrivals per expert must cost <= ceil(k_e / lanes) prefills
-        with MixtureServeEngine(
+        with ServeFrontend(
                 ecfg, rcfg, expert_params, router_params,
                 EngineConfig(lanes_per_expert=args.lanes, max_len=max_len,
                              prefix_len=prefix_len,
@@ -339,7 +511,7 @@ def main() -> int:
             ecfg, rcfg, expert_params, router_params, prompts, n_new,
             prefix_len=prefix_len, cache_len=max_len, sampling=sp,
             stop_tokens=stops3)
-        with MixtureServeEngine(
+        with ServeFrontend(
                 ecfg, rcfg, expert_params, router_params,
                 EngineConfig(lanes_per_expert=args.lanes, max_len=max_len,
                              prefix_len=prefix_len,

@@ -37,7 +37,7 @@ from repro.configs.base import ModelConfig
 from repro.core import router as routerlib
 from repro.data import DataConfig, SyntheticCorpus
 from repro.models import model as modellib
-from repro.serving import EngineConfig, MixtureServeEngine, SamplingParams
+from repro.serving import EngineConfig, SamplingParams, ServeFrontend
 
 
 def main() -> None:
@@ -55,7 +55,9 @@ def main() -> None:
                      for e in range(n_experts)]
 
     # 2. the engine: 4 decode lanes per expert, 96-token KV budget per lane
-    engine = MixtureServeEngine(
+    #    (a hot expert could be cloned with replicas={0: 2} — tokens are
+    #    replica-placement-invariant, so output would be unchanged)
+    engine = ServeFrontend(
         ecfg, rcfg, expert_params, router_params,
         EngineConfig(lanes_per_expert=4, max_len=96, prefix_len=16))
 

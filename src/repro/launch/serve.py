@@ -13,7 +13,9 @@ controlled per request by ``SamplingParams`` — ``--temperature`` /
 its KV blocks to the next queued request the same tick.  ``--transport
 process`` runs each expert in its own spawned OS process (own params +
 KV pool; the router scores are the only cross-process traffic — the
-paper's multi-host story on one machine).
+paper's multi-host story on one machine), and ``--replicas 0:2`` clones
+hot expert 0 into two servers with least-loaded admission between them
+(the shared engine flags live in :mod:`repro.serving.cli`).
 
 Usage (demo on synthetic prompts with randomly-initialized weights, or on
 checkpoints produced by launch/train.py):
@@ -33,8 +35,8 @@ from repro.core import router as routerlib
 from repro.data import SyntheticCorpus
 from repro.launch.train import PRESETS
 from repro.models import model as modellib
-from repro.serving import (EngineConfig, MixtureServeEngine, SamplingParams,
-                           baseline)
+from repro.serving import EngineConfig, ServeFrontend, baseline
+from repro.serving import cli as servecli
 
 
 def build_mixture(preset: str, n_experts: int, ckpt: str | None, seed: int = 0):
@@ -60,35 +62,10 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prefix-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
-    ap.add_argument("--lanes", type=int, default=4,
-                    help="decode lanes per expert (engine batch width)")
-    ap.add_argument("--block-size", type=int, default=16,
-                    help="tokens per paged KV block")
-    ap.add_argument("--blocks-per-expert", type=int, default=0,
-                    help="KV pool blocks per expert "
-                         "(0 = lanes*max_len/block_size)")
-    ap.add_argument("--decode-impl", choices=["auto", "jnp", "pallas"],
-                    default="auto",
-                    help="paged decode attention: jnp gather reference or "
-                         "the Pallas block-table kernel (auto follows the "
-                         "preset's use_pallas)")
-    ap.add_argument("--transport", choices=["loopback", "process"],
-                    default="loopback",
-                    help="expert backend: in-process loopback or one "
-                         "spawned OS process per expert, each with its own "
-                         "params + KV pool (router scores are the only "
-                         "cross-process traffic)")
+    servecli.add_engine_args(ap)
+    servecli.add_sampling_args(ap)
     ap.add_argument("--arrive-every", type=int, default=2,
                     help="simulated arrival: one request per N ticks")
-    ap.add_argument("--temperature", type=float, default=0.0,
-                    help="sampling temperature (0 = greedy argmax)")
-    ap.add_argument("--top-k", type=int, default=0,
-                    help="keep only the k highest logits (0 = disabled)")
-    ap.add_argument("--top-p", type=float, default=1.0,
-                    help="nucleus sampling mass (1 = disabled)")
-    ap.add_argument("--sample-seed", type=int, default=0,
-                    help="RNG root; tokens are a pure function of "
-                         "(seed, request uid, step)")
     ap.add_argument("--stop-tokens", default="",
                     help="comma-separated token ids that end a request "
                          "early (the stop token is kept)")
@@ -97,8 +74,7 @@ def main() -> None:
     ap.add_argument("--baseline", action="store_true",
                     help="run the old one-shot serial per-group path")
     args = ap.parse_args()
-    sampling = SamplingParams(temperature=args.temperature, top_k=args.top_k,
-                              top_p=args.top_p, seed=args.sample_seed)
+    sampling = servecli.sampling_from_args(args)
     stop_tokens = frozenset(int(t) for t in args.stop_tokens.split(",") if t)
 
     ecfg, rcfg, expert_params, router_params = build_mixture(
@@ -123,14 +99,15 @@ def main() -> None:
 
     total = prompts.shape[1] + args.new_tokens
     max_len = -(-total // args.block_size) * args.block_size
-    eng = MixtureServeEngine(ecfg, rcfg, expert_params, router_params,
-                             EngineConfig(lanes_per_expert=args.lanes,
-                                          max_len=max_len,
-                                          prefix_len=args.prefix_len,
-                                          block_size=args.block_size,
-                                          pool_blocks=args.blocks_per_expert,
-                                          decode_impl=args.decode_impl,
-                                          transport=args.transport))
+    eng = ServeFrontend(ecfg, rcfg, expert_params, router_params,
+                        EngineConfig(lanes_per_expert=args.lanes,
+                                     max_len=max_len,
+                                     prefix_len=args.prefix_len,
+                                     block_size=args.block_size,
+                                     pool_blocks=args.blocks_per_expert,
+                                     decode_impl=args.decode_impl,
+                                     transport=args.transport),
+                        replicas=args.replicas)
     with eng:                      # releases worker processes on exit
         for i in range(args.requests):
             eng.submit(prompts[i], args.new_tokens, sampling=sampling,

@@ -1,23 +1,47 @@
 """Continuous-batching serving for the asynchronous mixture.
 
-:class:`MixtureServeEngine` is the production path: router-scored
-batched admission into per-expert fixed-lane decode batches over a paged
-block-pool KV cache (:mod:`repro.serving.cache`), with per-request
-:class:`SamplingParams` (greedy by default) and stop-token conditions
-sampled inside the jitted decode step (:mod:`repro.serving.sampling`)
-and a streaming interface (:meth:`MixtureServeEngine.stream`) yielding
-:class:`TokenDelta` records as tokens decode.
+The public entry point is :class:`ServeFrontend` — construct it with the
+mixture (expert configs/params + router ensemble), an
+:class:`EngineConfig` for the shape/scheduling knobs, and an optional
+``replicas`` map cloning hot experts (the paper's no-talk premise makes
+replication free: replicas share nothing, and each request is admitted
+to the least-loaded replica of its argmax expert)::
 
-Internally the engine is split into a router frontend
+    from repro.serving import EngineConfig, SamplingParams, ServeFrontend
+
+    with ServeFrontend(ecfg, rcfg, expert_params, router_params,
+                       EngineConfig(lanes_per_expert=4, max_len=128),
+                       replicas={0: 2}) as eng:        # expert 0 is hot
+        req = eng.submit(prompt, max_new_tokens=32,
+                         sampling=SamplingParams(temperature=0.8, seed=1),
+                         stop_tokens={0})
+        for delta in eng.stream():                     # or eng.run()
+            ...
+
+Per-request generation is controlled by :class:`SamplingParams`
+(temperature/top-k/top-p/seed; temperature 0 = greedy) and stop tokens,
+sampled inside the per-expert jitted decode step with counter-based RNG
+— tokens are a pure function of ``(seed, uid, step)``, invariant to
+lane placement, tick interleaving, transport, and replica count.
+Callers hold the :class:`Request` records ``submit`` returns; the
+engine folds per-token deltas back into them.
+
+Internally the engine is a router frontend
 (:mod:`repro.serving.frontend`), one self-contained
-:class:`ExpertServer` per expert (:mod:`repro.serving.expert_server`),
-and a pluggable message transport (:mod:`repro.serving.transport`) —
-in-process loopback by default, or one OS process per expert with
+:class:`ExpertServer` per (expert, replica) slot
+(:mod:`repro.serving.expert_server`), and a pluggable versioned message
+transport (:mod:`repro.serving.transport`) — in-process loopback by
+default, or one OS process per slot with
 ``EngineConfig(transport="process")``.  See
-``src/repro/serving/README.md`` for the layering and the message
-protocol.  :mod:`repro.serving.baseline` keeps the original one-shot
-serial path — extended with the identical sampler — as the numerical
-oracle and benchmark baseline.
+``src/repro/serving/README.md`` for the layering, the message protocol,
+and the replication/admission policy.  :mod:`repro.serving.cli` defines
+the shared command-line surface for the serving entry points;
+:mod:`repro.serving.baseline` keeps the original one-shot serial path
+as the numerical oracle and benchmark baseline.
+
+:class:`MixtureServeEngine` is the deprecated pre-split name for
+:class:`ServeFrontend`; it still works (old import paths included) but
+warns on construction.
 """
 from repro.serving.engine import EngineConfig, MixtureServeEngine, TokenDelta
 from repro.serving.expert_server import ExpertServer
@@ -27,10 +51,10 @@ from repro.serving.scheduler import (BlockAllocator, Request, RequestQueue,
                                      SlotAllocator)
 from repro.serving.transport import (LoopbackTransport, ProcessTransport,
                                      RequestMsg, StatsMsg, TokenDeltaMsg,
-                                     Transport)
+                                     Transport, WIRE_VERSION, check_version)
 
 __all__ = ["BlockAllocator", "EngineConfig", "ExpertServer",
            "LoopbackTransport", "MixtureServeEngine", "ProcessTransport",
            "Request", "RequestMsg", "RequestQueue", "SamplingParams",
            "ServeFrontend", "SlotAllocator", "StatsMsg", "TokenDelta",
-           "TokenDeltaMsg", "Transport"]
+           "TokenDeltaMsg", "Transport", "WIRE_VERSION", "check_version"]

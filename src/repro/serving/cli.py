@@ -1,0 +1,96 @@
+"""Shared command-line surface for the serving entry points.
+
+``repro.launch.serve``, ``examples/serve_mixture.py`` and
+``benchmarks/serve_bench.py`` all expose the same engine knobs —
+transport, decode kernel, paged-KV shape, replication, sampling recipe.
+Defining the flags once here keeps them from drifting across the three
+front-ends: a new knob (like ``--replicas``) lands everywhere with one
+edit, with identical names, types, and help text.
+
+Only ``argparse`` and :mod:`repro.serving.sampling` are imported — this
+module stays importable without touching jax, so ``--help`` is instant.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.serving.sampling import SamplingParams
+
+
+def parse_replicas(spec: str) -> dict[int, int]:
+    """``"0:2,3:4"`` -> ``{0: 2, 3: 4}`` (expert id -> replica count).
+
+    The empty string means no replication.  Validation beyond syntax —
+    expert ids in range, counts >= 1 — happens in
+    :class:`repro.serving.ServeFrontend`, which knows the mixture size.
+    """
+    out: dict[int, int] = {}
+    for part in filter(None, (p.strip() for p in spec.split(","))):
+        e, sep, r = part.partition(":")
+        try:
+            if not sep:
+                raise ValueError
+            expert, count = int(e), int(r)
+        except ValueError:
+            raise ValueError(
+                f"bad --replicas entry {part!r}: expected EXPERT:COUNT "
+                f"(e.g. 0:2,3:4)") from None
+        if expert in out:
+            raise ValueError(f"--replicas names expert {expert} twice")
+        out[expert] = count
+    return out
+
+
+def add_engine_args(ap: argparse.ArgumentParser, *, lanes: int = 4,
+                    block_size: int = 16) -> argparse.ArgumentParser:
+    """The engine-shape/backend flags every serving front-end exposes."""
+    g = ap.add_argument_group("engine")
+    g.add_argument("--lanes", type=int, default=lanes,
+                   help="decode lanes per expert server (fixed batch width)")
+    g.add_argument("--block-size", type=int, default=block_size,
+                   help="tokens per paged KV block")
+    g.add_argument("--blocks-per-expert", type=int, default=0,
+                   help="KV pool blocks per expert server "
+                        "(0 = lanes*max_len/block_size, i.e. no pressure)")
+    g.add_argument("--decode-impl", choices=["auto", "jnp", "pallas"],
+                   default="auto",
+                   help="paged decode attention: jnp gather reference or "
+                        "the Pallas block-table kernel (interpret-mode on "
+                        "CPU; auto follows the expert config)")
+    g.add_argument("--transport", choices=["loopback", "process"],
+                   default="loopback",
+                   help="expert backend: in-process loopback or one "
+                        "spawned OS process per (expert, replica) server, "
+                        "each with its own params + KV pool (router scores "
+                        "are the only cross-process traffic)")
+    g.add_argument("--replicas", type=parse_replicas, default={},
+                   help="hot-expert replication as EXPERT:COUNT pairs, "
+                        "e.g. '0:2' runs two servers for expert 0; "
+                        "requests go to the least-loaded replica "
+                        "(default: one server per expert)")
+    return ap
+
+
+def add_sampling_args(ap: argparse.ArgumentParser, *,
+                      temperature: float = 0.0, top_k: int = 0,
+                      top_p: float = 1.0) -> argparse.ArgumentParser:
+    """The per-request sampling-recipe flags (defaults differ per tool:
+    the CLI serves greedy unless asked, the bench's sampled mode wants a
+    spicier recipe — hence the keyword overrides)."""
+    g = ap.add_argument_group("sampling")
+    g.add_argument("--temperature", type=float, default=temperature,
+                   help="sampling temperature (0 = greedy argmax)")
+    g.add_argument("--top-k", type=int, default=top_k,
+                   help="keep only the k highest logits (0 = disabled)")
+    g.add_argument("--top-p", type=float, default=top_p,
+                   help="nucleus sampling mass (1 = disabled)")
+    g.add_argument("--sample-seed", type=int, default=0,
+                   help="RNG root; tokens are a pure function of "
+                        "(seed, request uid, step)")
+    return ap
+
+
+def sampling_from_args(args: argparse.Namespace) -> SamplingParams:
+    """The frozen recipe the ``add_sampling_args`` flags describe."""
+    return SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                          top_p=args.top_p, seed=args.sample_seed)

@@ -16,17 +16,21 @@ router's prefix scores are the only cross-expert traffic (§1, App. A.4):
     OS process per expert (``EngineConfig(transport="process")``), the
     local-machine proof of the multi-host deployment story.
 
-:class:`MixtureServeEngine` keeps the historical API —
-``submit`` / ``step`` / ``stream`` / ``run`` / ``warmup`` plus the
-``_experts`` introspection the tests use — while the implementation
-lives in the layers above.  The bitwise contract survives the split by
-construction: tokens are keyed by
+:class:`MixtureServeEngine` is the **deprecated** historical name for
+:class:`repro.serving.frontend.ServeFrontend` — constructing it emits a
+``DeprecationWarning`` and everything else is inherited unchanged.  New
+code imports ``ServeFrontend`` (plus ``EngineConfig``, ``Request``,
+``SamplingParams``) straight from :mod:`repro.serving`; this module
+only keeps the old import paths alive.  The bitwise contract survives
+by construction: tokens are keyed by
 ``fold_in(fold_in(PRNGKey(seed), uid), step)`` and lane-placement-
 invariant, so per-expert async ticking cannot change any request's
 stream vs :mod:`repro.serving.baseline`, greedy or sampled — the fuzz
 oracles in ``tests/test_serving.py`` hold on every transport.
 """
 from __future__ import annotations
+
+import warnings
 
 from repro.serving.expert_server import (EngineConfig, ExpertServer,
                                          PAD_SAFE_KINDS, bucket_len,
@@ -43,9 +47,17 @@ __all__ = ["EngineConfig", "ExpertServer", "LoopbackTransport",
 
 
 class MixtureServeEngine(ServeFrontend):
-    """Queue + router + per-expert continuous decode batches.
+    """Deprecated alias of :class:`repro.serving.frontend.ServeFrontend`.
 
-    A pure facade: everything is inherited from
-    :class:`repro.serving.frontend.ServeFrontend` — this class only
-    pins the historical name and import path.
+    A pure facade: everything is inherited — this class only pins the
+    historical name and import path, and warns once per construction so
+    downstream callers migrate to ``ServeFrontend``.
     """
+
+    def __init__(self, *args, **kwargs):
+        warnings.warn(
+            "MixtureServeEngine is deprecated; construct "
+            "repro.serving.ServeFrontend instead (same signature — it "
+            "also accepts the replicas= map)",
+            DeprecationWarning, stacklevel=2)
+        super().__init__(*args, **kwargs)

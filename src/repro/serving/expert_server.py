@@ -270,7 +270,9 @@ class ExpertServer:
             queue_wait_ticks=self.queue_wait_ticks,
             paged_read_bytes=self.paged_read_bytes,
             gathered_read_bytes=self.gathered_read_bytes,
-            peak_blocks=self.balloc.peak_in_use)
+            peak_blocks=self.balloc.peak_in_use,
+            pending=len(self.pending),
+            active_lanes=int(self.active.sum()))
 
     def reset_stats(self) -> None:
         """Zero the run counters (a warmup must not pollute a timed run)."""

@@ -23,6 +23,18 @@ The transport boundary is pluggable (:mod:`repro.serving.transport`):
 ``EngineConfig.transport`` selects the in-process loopback default or
 one spawned process per expert — the frontend code is identical either
 way, because only serializable messages ever cross it.
+
+**Replication** (the ``replicas`` constructor map) is the paper's
+no-talk premise cashed in at serving time: because experts share
+nothing, a hot expert can be cloned R times with zero coordination —
+the frontend spins up R :class:`ExpertServer` slots holding the same
+params and admits each routed request to the **least-loaded** replica
+(queue depth + occupied lanes, tracked from the message flow; ties
+break to the lowest replica index).  Replicas never learn of each
+other, and tokens cannot depend on the placement: the counter-based
+sampler keys on ``(seed, uid, step)`` and replicas hold identical
+params, so ``replicas=1`` vs ``replicas=R`` streams are bitwise equal
+(the fuzz oracles in ``tests/test_serving_replicas.py``).
 """
 from __future__ import annotations
 
@@ -74,25 +86,52 @@ class ServeFrontend:
     reassembled here.  See :class:`repro.serving.expert_server`
     for everything per-expert and :mod:`repro.serving.transport` for the
     boundary.
+
+    ``replicas`` maps expert id -> R >= 1 (unlisted experts get 1): the
+    frontend runs R server slots per hot expert — same params, disjoint
+    KV pools — and admits each request to the least-loaded replica of
+    its argmax expert.  Router scores stay the only cross-replica
+    traffic, and tokens are placement-invariant (see module docstring).
     """
 
     def __init__(self, ecfg, rcfg, expert_params: list, router_params,
-                 eng: EngineConfig = EngineConfig()):
+                 eng: EngineConfig = EngineConfig(), replicas=None):
         shapes = resolve_shapes(ecfg, eng)    # validate before any spawn
         self.ecfg, self.rcfg, self.eng = ecfg, rcfg, eng
         self.expert_params = list(expert_params)
         self.router_params = router_params
         self.n_experts = len(self.expert_params)
+        self.replicas = [1] * self.n_experts
+        for e, r in dict(replicas or {}).items():
+            e, r = int(e), int(r)
+            if not 0 <= e < self.n_experts:
+                raise ValueError(f"replicas names expert {e}, but the "
+                                 f"mixture has {self.n_experts}")
+            if r < 1:
+                raise ValueError(f"expert {e} needs >= 1 replica, got {r}")
+            self.replicas[e] = r
+        # flat server slots: expert e occupies R_e consecutive slots, and
+        # the transport addresses slots — it never hears about experts
+        self.placements = [(e, r) for e in range(self.n_experts)
+                           for r in range(self.replicas[e])]
+        self._slots_of = {e: [s for s, (pe, _) in enumerate(self.placements)
+                              if pe == e] for e in range(self.n_experts)}
+        self.n_servers = len(self.placements)
         self.pad_safe = shapes.pad_safe
         self.has_pool = shapes.has_pool
         self.lane_blocks = shapes.lane_blocks
         self.pool_blocks = shapes.pool_blocks
         self.decode_impl = shapes.decode_impl
+        slot_params = [self.expert_params[e] for e, _ in self.placements]
+        labels = [f"expert {e}" if self.replicas[e] == 1
+                  else f"expert {e} replica {r}"
+                  for e, r in self.placements]
         if eng.transport == "process":
-            self._transport = ProcessTransport(ecfg, eng, self.expert_params)
+            self._transport = ProcessTransport(ecfg, eng, slot_params,
+                                               labels)
         else:
             self._transport = LoopbackTransport(
-                [ExpertServer(ecfg, p, eng) for p in self.expert_params])
+                [ExpertServer(ecfg, p, eng) for p in slot_params], labels)
         self.queue = RequestQueue()
         self.tick = 0
         self._uid = 0
@@ -181,9 +220,18 @@ class ServeFrontend:
         return req
 
     # -- routing -----------------------------------------------------------
+    def _pick_replica(self, e: int) -> int:
+        """Least-loaded admission: the slot of expert ``e`` with the
+        fewest in-flight requests (queued + in a lane, tracked from the
+        message flow — no stats round-trip).  Ties break to the lowest
+        replica index, so placement is deterministic."""
+        return min(self._slots_of[e],
+                   key=lambda s: (self._transport.load(s), s))
+
     def _route(self, reqs: list[Request]) -> None:
         """Score prefixes in padded fixed-width batches, argmax an expert,
-        and hand each request across the transport."""
+        and hand each request across the transport — to the least-loaded
+        replica when the expert has several."""
         pl, rb = self.eng.prefix_len, self.eng.route_batch
         prefixes = np.stack([r.prompt[:pl] for r in reqs])
         for i in range(0, len(reqs), rb):
@@ -198,7 +246,9 @@ class ServeFrontend:
             for r, e in zip(reqs[i:i + n], eids):
                 r.expert = int(e)
                 r.route_tick = self.tick
-                self._transport.enqueue(r.expert, RequestMsg(
+                slot = self._pick_replica(r.expert)
+                r.replica = self.placements[slot][1]
+                self._transport.enqueue(slot, RequestMsg(
                     uid=r.uid, prompt=r.prompt,
                     max_new_tokens=r.max_new_tokens, sampling=r.sampling,
                     stop_tokens=r.stop_tokens, enqueue_tick=self.tick))
@@ -240,8 +290,8 @@ class ServeFrontend:
         if arrived:
             self._route(arrived)
         completed: list[Request] = []
-        working = [e for e in range(self.n_experts)
-                   if self._transport.busy(e)]
+        working = [s for s in range(self.n_servers)
+                   if self._transport.busy(s)]
         for _, msgs in self._transport.tick_many(working):
             for msg in msgs:
                 self._deliver(msg, completed)
@@ -308,13 +358,39 @@ class ServeFrontend:
         self._transport.sync()
         wall = time.perf_counter() - t_start
         self._t0 = None
-        stats = [self._transport.stats(e) for e in range(self.n_experts)]
+        # one StatsMsg per server slot, aggregated per expert (a hot
+        # expert's counters sum over its replicas; the per-replica
+        # breakdown rides along for load-balance observability)
+        slot_stats = [self._transport.stats(s)
+                      for s in range(self.n_servers)]
         useful = sum(len(r.tokens) for r in completed)
-        decode_calls = sum(st.decode_calls for st in stats)
-        lane_steps = sum(st.occupied_lane_steps for st in stats)
-        paged_rd = sum(st.paged_read_bytes for st in stats)
-        gathered_rd = sum(st.gathered_read_bytes for st in stats)
+        decode_calls = sum(st.decode_calls for st in slot_stats)
+        lane_steps = sum(st.occupied_lane_steps for st in slot_stats)
+        paged_rd = sum(st.paged_read_bytes for st in slot_stats)
+        gathered_rd = sum(st.gathered_read_bytes for st in slot_stats)
         lanes = self.eng.lanes_per_expert
+
+        def expert_stats(e):
+            slots = self._slots_of[e]
+            ss = [slot_stats[s] for s in slots]
+            dc = sum(st.decode_calls for st in ss)
+            return {
+                "served": sum(st.n_served for st in ss),
+                "decode_calls": dc,
+                "prefills": sum(st.prefill_calls for st in ss),
+                "peak_blocks": max(st.peak_blocks for st in ss),
+                "queue_wait_ticks": sum(st.queue_wait_ticks for st in ss),
+                "occupancy": sum(st.occupied_lane_steps for st in ss)
+                / max(dc * lanes, 1),
+                "replicas": self.replicas[e],
+                "per_replica": {
+                    self.placements[s][1]: {
+                        "served": st.n_served,
+                        "queue_wait_ticks": st.queue_wait_ticks,
+                        "occupancy": st.occupied_lane_steps
+                        / max(st.decode_calls * lanes, 1)}
+                    for s, st in zip(slots, ss)},
+            }
         return {
             "requests": sorted(completed, key=lambda r: r.uid),
             "ticks": self.tick - tick0,    # simulated span (incl. skipped gaps)
@@ -327,7 +403,7 @@ class ServeFrontend:
             "mean_ttft_s": float(np.mean([r.t_first for r in completed]))
             if completed else 0.0,
             "occupancy": lane_steps / max(decode_calls * lanes, 1),
-            "prefill_calls": sum(st.prefill_calls for st in stats),
+            "prefill_calls": sum(st.prefill_calls for st in slot_stats),
             "kv_bytes_per_lane": self.kv_bytes_per_expert() // lanes,
             "decode_impl": self.decode_impl,
             "transport": self.eng.transport,
@@ -337,12 +413,6 @@ class ServeFrontend:
                 "paged_per_tick": paged_rd // max(decode_calls, 1),
                 "gathered_per_tick": gathered_rd // max(decode_calls, 1),
             },
-            "per_expert": {
-                e: {"served": st.n_served, "decode_calls": st.decode_calls,
-                    "prefills": st.prefill_calls,
-                    "peak_blocks": st.peak_blocks,
-                    "queue_wait_ticks": st.queue_wait_ticks,
-                    "occupancy": st.occupied_lane_steps
-                    / max(st.decode_calls * lanes, 1)}
-                for e, st in enumerate(stats)},
+            "per_expert": {e: expert_stats(e)
+                           for e in range(self.n_experts)},
         }

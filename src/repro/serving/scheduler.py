@@ -36,6 +36,7 @@ class Request:
     arrival_tick: int = 0
 
     expert: int = -1
+    replica: int = 0                    # which replica of the expert served it
     tokens: list = dataclasses.field(default_factory=list)
     finish_reason: str = ""             # "stop_token" | "length" once done
     route_tick: int = -1                # tick the router scored the prefix

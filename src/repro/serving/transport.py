@@ -11,8 +11,18 @@ cross it:
     (with admission / finish metadata riding on the first / last one);
   * :class:`StatsMsg`     — expert -> frontend: a counter snapshot.
 
-A :class:`Transport` carries them to E expert servers and knows nothing
-about models, caches, or routing:
+Every message carries the wire protocol ``version`` (module constant
+:data:`WIRE_VERSION`); transports reject a mismatched message loudly at
+the boundary instead of letting two builds desync silently — the
+forward-compat groundwork for the network RPC transport, where the two
+ends really can run different code.
+
+A :class:`Transport` carries them to N expert *servers* and knows
+nothing about models, caches, or routing.  A server slot is just an
+index — the frontend may map several slots to replicas of one hot
+expert (the paper's no-talk premise makes replication free: replicas
+share nothing and never know about each other), so transports count
+``n_servers``, not experts:
 
   * :class:`LoopbackTransport` (default) holds the
     :class:`repro.serving.expert_server.ExpertServer` objects in
@@ -41,6 +51,22 @@ import numpy as np
 
 from repro.serving.sampling import SamplingParams
 
+# Bump on ANY change to the message dataclasses below.  Each message
+# carries it, and the transports refuse to pass a mismatched message —
+# two serving builds must be upgraded together, never mixed silently.
+WIRE_VERSION = 1
+
+
+def check_version(msg):
+    """Reject a wire message from a different protocol build, loudly."""
+    v = getattr(msg, "version", None)
+    if v != WIRE_VERSION:
+        raise RuntimeError(
+            f"wire protocol mismatch: {type(msg).__name__} carries "
+            f"version {v!r} but this build speaks v{WIRE_VERSION} — "
+            f"frontend and expert servers must run the same serving build")
+    return msg
+
 
 @dataclasses.dataclass(frozen=True)
 class RequestMsg:
@@ -56,6 +82,7 @@ class RequestMsg:
     sampling: SamplingParams
     stop_tokens: frozenset
     enqueue_tick: int
+    version: int = WIRE_VERSION
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,11 +101,19 @@ class TokenDeltaMsg:
     tick: int                     # expert-local tick that emitted it
     admit_tick: int = -1          # set when index == 0
     finish_reason: str = ""       # "stop_token" | "length" when done
+    version: int = WIRE_VERSION
 
 
 @dataclasses.dataclass(frozen=True)
 class StatsMsg:
-    """Counter snapshot of one expert server (see ExpertServer.stats)."""
+    """Counter snapshot of one expert server (see ExpertServer.stats).
+
+    ``pending`` + ``active_lanes`` are the server's instantaneous load —
+    queued requests plus occupied decode lanes — the quantity the
+    frontend's least-loaded replica admission minimizes (it tracks the
+    same number sender-side from the message flow; ``StatsMsg`` is the
+    ground truth the tests check that tracker against).
+    """
     n_served: int
     decode_calls: int
     prefill_calls: int
@@ -87,6 +122,9 @@ class StatsMsg:
     paged_read_bytes: int
     gathered_read_bytes: int
     peak_blocks: int
+    pending: int = 0              # queued, not yet in a lane
+    active_lanes: int = 0         # lanes currently decoding
+    version: int = WIRE_VERSION
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,33 +134,53 @@ class _RemoteError:
 
 
 class Transport:
-    """Carries messages between the frontend and ``n_experts`` servers."""
+    """Carries messages between the frontend and ``n_servers`` servers.
 
-    n_experts: int
+    Servers are addressed by a flat slot index; the frontend owns the
+    (expert, replica) -> slot mapping.  ``labels`` name each slot for
+    error reports (e.g. ``"expert 1 replica 0"``) so a dead worker is
+    surfaced with its identity, not a bare index.
+    """
 
-    def enqueue(self, e: int, msg: RequestMsg) -> None:
+    n_servers: int
+    labels: list
+
+    @property
+    def n_experts(self) -> int:
+        """Historical alias from before replication: slots, not experts."""
+        return self.n_servers
+
+    def enqueue(self, s: int, msg: RequestMsg) -> None:
         raise NotImplementedError
 
-    def tick(self, e: int) -> list[TokenDeltaMsg]:
-        """Step expert ``e`` once on its own clock."""
+    def tick(self, s: int) -> list[TokenDeltaMsg]:
+        """Step server ``s`` once on its own clock."""
         raise NotImplementedError
 
-    def tick_many(self, experts) -> list[tuple[int, list[TokenDeltaMsg]]]:
-        """Tick several experts; results in the given expert order.
+    def tick_many(self, servers) -> list[tuple[int, list[TokenDeltaMsg]]]:
+        """Tick several servers; results in the given slot order.
 
         Base implementation steps them one after another; backends with
-        real parallelism (one process per expert) overlap the work.
+        real parallelism (one process per server) overlap the work.
         """
-        return [(e, self.tick(e)) for e in experts]
+        return [(s, self.tick(s)) for s in servers]
 
-    def busy(self, e: int) -> bool:
+    def busy(self, s: int) -> bool:
         raise NotImplementedError
 
     @property
     def any_busy(self) -> bool:
-        return any(self.busy(e) for e in range(self.n_experts))
+        return any(self.busy(s) for s in range(self.n_servers))
 
-    def stats(self, e: int) -> StatsMsg:
+    def load(self, s: int) -> int:
+        """Server ``s``'s instantaneous load: queued requests + occupied
+        decode lanes — the quantity least-loaded admission minimizes.
+        Known sender-side (no round-trip): a request contributes from
+        enqueue until its ``done`` delta, and it is in exactly one of
+        the two states for that whole span."""
+        raise NotImplementedError
+
+    def stats(self, s: int) -> StatsMsg:
         raise NotImplementedError
 
     def reset_stats(self) -> None:
@@ -147,21 +205,30 @@ class LoopbackTransport(Transport):
     idle predicate.
     """
 
-    def __init__(self, servers):
+    def __init__(self, servers, labels=None):
         self.servers = list(servers)
-        self.n_experts = len(self.servers)
+        self.n_servers = len(self.servers)
+        self.labels = list(labels) if labels is not None else \
+            [f"expert {s}" for s in range(self.n_servers)]
 
-    def enqueue(self, e, msg):
-        self.servers[e].enqueue(msg)
+    def enqueue(self, s, msg):
+        self.servers[s].enqueue(check_version(msg))
 
-    def tick(self, e):
-        return self.servers[e].tick()
+    def tick(self, s):
+        deltas = self.servers[s].tick()
+        for d in deltas:
+            check_version(d)
+        return deltas
 
-    def busy(self, e):
-        return self.servers[e].busy
+    def busy(self, s):
+        return self.servers[s].busy
 
-    def stats(self, e):
-        return self.servers[e].stats()
+    def load(self, s):
+        srv = self.servers[s]
+        return len(srv.pending) + int(srv.active.sum())
+
+    def stats(self, s):
+        return check_version(self.servers[s].stats())
 
     def reset_stats(self):
         for s in self.servers:
@@ -223,38 +290,43 @@ def _serve_expert(conn, ecfg, eng, host_params) -> None:
 
 
 class ProcessTransport(Transport):
-    """One spawned OS process per expert: params + KV pool live there.
+    """One spawned OS process per server slot: params + KV pool live there.
 
     The local-machine proof of the multi-host story — the only bytes
     that ever cross a process boundary are pickled ``RequestMsg`` /
     ``TokenDeltaMsg`` / ``StatsMsg`` records (and the one-time param
-    shipment at spawn).  ``busy`` is tracked parent-side from the
-    message flow itself (enqueues minus ``done`` deltas), so the
-    scheduler never round-trips just to ask who has work.
+    shipment at spawn).  ``busy``/``load`` are tracked parent-side from
+    the message flow itself (enqueues minus ``done`` deltas), so the
+    scheduler never round-trips just to ask who has work.  Replicas of a
+    hot expert are just slots whose spawn params happen to be equal —
+    the workers never know.
 
     Ops that expect a reply are pipelined by ``tick_many`` / ``warmup``
-    / ``sync``: send to every expert first, then collect — E experts
-    really do compute concurrently.
+    / ``sync``: send to every server first, then collect — N servers
+    really do compute concurrently (this is what makes replication a
+    wall-clock win: a hot expert's replicas decode in parallel).
 
     The usual ``multiprocessing`` spawn rule applies: the parent's main
     module must be importable by path (a script piped via stdin cannot
-    spawn workers — they die at startup, surfaced here as
-    ``RuntimeError: expert e worker exited``).  A worker that dies for
-    any reason (OOM kill, segfault) is reported the same way, with its
-    exit code; Python-level worker exceptions additionally ship their
-    traceback home.
+    spawn workers — they die at startup, surfaced here with the slot's
+    label, e.g. ``RuntimeError: expert 1 replica 0 worker exited``).  A
+    worker that dies for any reason (OOM kill, segfault) is reported the
+    same way, with its exit code; Python-level worker exceptions
+    additionally ship their traceback home.
     """
 
-    def __init__(self, ecfg, eng, expert_params):
+    def __init__(self, ecfg, eng, server_params, labels=None):
         import jax                               # parent-side host transfer
 
-        self.n_experts = len(expert_params)
-        self._outstanding = [0] * self.n_experts
+        self.n_servers = len(server_params)
+        self.labels = list(labels) if labels is not None else \
+            [f"expert {s}" for s in range(self.n_servers)]
+        self._outstanding = [0] * self.n_servers
         self._broken = False
         self._closed = False
         ctx = mp.get_context("spawn")            # never fork a live jax
         self._procs, self._conns = [], []
-        for p in expert_params:
+        for p in server_params:
             host = jax.tree_util.tree_map(np.asarray, p)
             parent, child = ctx.Pipe()
             proc = ctx.Process(target=_serve_expert,
@@ -264,13 +336,14 @@ class ProcessTransport(Transport):
             self._procs.append(proc)
             self._conns.append(parent)
 
-    def _dead(self, e) -> RuntimeError:
+    def _dead(self, s) -> RuntimeError:
         """A worker vanished without a Python traceback (OOM kill,
-        segfault): name the expert and its exit code, not just EOF."""
-        self._procs[e].join(timeout=1)
+        segfault): name the expert+replica and its exit code, not just
+        a bare EOF."""
+        self._procs[s].join(timeout=1)
         return RuntimeError(
-            f"expert {e} worker exited "
-            f"(exitcode={self._procs[e].exitcode})")
+            f"{self.labels[s]} worker exited "
+            f"(exitcode={self._procs[s].exitcode})")
 
     def _check(self):
         if self._closed:
@@ -283,70 +356,79 @@ class ProcessTransport(Transport):
             raise RuntimeError("ProcessTransport is broken after a worker "
                                "failure; build a fresh engine")
 
-    def _send(self, e, op, args):
+    def _send(self, s, op, args):
         self._check()
         try:
-            self._conns[e].send((op, args))
+            self._conns[s].send((op, args))
         except (BrokenPipeError, OSError):
             self._broken = True
-            raise self._dead(e) from None
+            raise self._dead(s) from None
 
-    def _recv(self, e):
+    def _recv(self, s):
         self._check()
         try:
-            out = self._conns[e].recv()
+            out = self._conns[s].recv()
         except EOFError:
             self._broken = True
-            raise self._dead(e) from None
+            raise self._dead(s) from None
         if isinstance(out, _RemoteError):
             self._broken = True
-            raise RuntimeError(f"expert {e} worker failed:\n{out.trace}")
+            raise RuntimeError(f"{self.labels[s]} worker failed:\n"
+                               f"{out.trace}")
         return out
 
-    def enqueue(self, e, msg):
-        self._outstanding[e] += 1
-        self._send(e, "enqueue", msg)            # fire-and-forget
+    def enqueue(self, s, msg):
+        self._outstanding[s] += 1
+        self._send(s, "enqueue", check_version(msg))  # fire-and-forget
 
-    def _absorb(self, e, deltas):
-        self._outstanding[e] -= sum(d.done for d in deltas)
+    def _absorb(self, s, deltas):
+        for d in deltas:
+            check_version(d)
+        self._outstanding[s] -= sum(d.done for d in deltas)
         return deltas
 
-    def tick(self, e):
-        self._send(e, "tick", None)
-        return self._absorb(e, self._recv(e))
+    def tick(self, s):
+        self._send(s, "tick", None)
+        return self._absorb(s, self._recv(s))
 
-    def tick_many(self, experts):
-        experts = list(experts)
-        for e in experts:                        # overlap expert compute
-            self._send(e, "tick", None)
-        return [(e, self._absorb(e, self._recv(e))) for e in experts]
+    def tick_many(self, servers):
+        servers = list(servers)
+        for s in servers:                        # overlap server compute
+            self._send(s, "tick", None)
+        return [(s, self._absorb(s, self._recv(s))) for s in servers]
 
-    def busy(self, e):
+    def busy(self, s):
         # a request is outstanding exactly from enqueue until its done
         # delta — equivalent to the server's pending-or-active predicate,
         # but known parent-side without an RPC
-        return self._outstanding[e] > 0
+        return self._outstanding[s] > 0
 
-    def stats(self, e):
-        self._send(e, "stats", None)
-        return self._recv(e)
+    def load(self, s):
+        # outstanding == pending + active lanes: every unfinished request
+        # is in exactly one of the two states (checked against StatsMsg
+        # ground truth in the tests)
+        return self._outstanding[s]
+
+    def stats(self, s):
+        self._send(s, "stats", None)
+        return check_version(self._recv(s))
 
     def reset_stats(self):
-        for e in range(self.n_experts):
-            self._send(e, "reset_stats", None)
+        for s in range(self.n_servers):
+            self._send(s, "reset_stats", None)
 
     def warmup(self, prompt_len, sampled):
-        # per-process jit caches: every expert warms itself, concurrently
-        for e in range(self.n_experts):
-            self._send(e, "warmup", (prompt_len, sampled))
-        for e in range(self.n_experts):
-            self._recv(e)
+        # per-process jit caches: every server warms itself, concurrently
+        for s in range(self.n_servers):
+            self._send(s, "warmup", (prompt_len, sampled))
+        for s in range(self.n_servers):
+            self._recv(s)
 
     def sync(self):
-        for e in range(self.n_experts):
-            self._send(e, "sync", None)
-        for e in range(self.n_experts):
-            self._recv(e)
+        for s in range(self.n_servers):
+            self._send(s, "sync", None)
+        for s in range(self.n_servers):
+            self._recv(s)
 
     def close(self):
         self._closed = True

@@ -1,0 +1,290 @@
+"""Hot-expert replication, least-loaded admission, and the wire version.
+
+The frontend may run R >= 1 server slots per expert (``replicas=`` map):
+same params, disjoint KV pools, requests admitted to the least-loaded
+replica of their argmax expert.  The paper's no-talk premise is what
+makes this free — replicas never learn of each other — and the
+counter-based sampler (``(seed, uid, step)``) is what makes it safe:
+tokens cannot depend on replica placement.  These tests pin that down:
+
+* replica-invariance fuzz — ``replicas=1`` vs ``{0: 2, 1: 3}`` streams
+  bitwise equal, both equal to the serial oracle;
+* least-loaded admission units — a hot expert's requests spread across
+  its replicas, ties break deterministically to replica 0;
+* a dead replica surfaces a ``RuntimeError`` naming the expert AND the
+  replica (slow, process transport);
+* the explicit wire ``version`` on every message — a mismatch is
+  rejected loudly at the transport boundary;
+* ``StatsMsg.pending``/``active_lanes`` as the ground truth the
+  sender-side ``Transport.load`` tracker is checked against;
+* the consolidated API — ``MixtureServeEngine`` warns
+  ``DeprecationWarning`` and is a thin alias of ``ServeFrontend``;
+* ``repro.serving.cli.parse_replicas`` spec parsing.
+"""
+import dataclasses
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import router as routerlib
+from repro.models import model as modellib
+from repro.serving import (EngineConfig, ExpertServer, LoopbackTransport,
+                           MixtureServeEngine, RequestMsg, SamplingParams,
+                           ServeFrontend, WIRE_VERSION, baseline,
+                           check_version)
+from repro.serving.cli import parse_replicas
+
+ECFG = ModelConfig(name="rep-expert", n_layers=2, d_model=64, n_heads=4,
+                   n_kv_heads=4, d_ff=128, vocab_size=128, ffn_type="gelu",
+                   loss_chunk=32, compute_dtype="float32",
+                   param_dtype="float32")
+RCFG = ModelConfig(name="rep-router", n_layers=1, d_model=32, n_heads=2,
+                   n_kv_heads=2, d_ff=64, vocab_size=128, ffn_type="gelu",
+                   loss_chunk=32, compute_dtype="float32",
+                   param_dtype="float32")
+E, PREFIX, MAXLEN, BS = 2, 16, 48, 16
+ENG = EngineConfig(lanes_per_expert=2, max_len=MAXLEN, prefix_len=PREFIX,
+                   block_size=BS, route_batch=4)
+
+
+@pytest.fixture(scope="module")
+def mixture():
+    key = jax.random.PRNGKey(0)
+    router_params = routerlib.init_ensemble(key, RCFG, E)
+    expert_params = [modellib.init_params(jax.random.fold_in(key, e), ECFG)
+                     for e in range(E)]
+    return expert_params, router_params
+
+
+def _oracle(params, prompt, n_new, sampling=None, uid=0, stops=()):
+    return baseline.generate_request(ECFG, params, prompt, n_new,
+                                     sampling=sampling, uid=uid,
+                                     stop_tokens=stops, cache_len=MAXLEN)
+
+
+def _workload(rng, n):
+    prompts = [rng.integers(0, ECFG.vocab_size,
+                            size=int(rng.integers(PREFIX, 30))).astype(np.int32)
+               for _ in range(n)]
+    n_new = [int(rng.integers(2, 7)) for _ in range(n)]
+    sps = [None if rng.random() < 0.4 else
+           SamplingParams(temperature=float(rng.uniform(0.3, 1.3)),
+                          top_k=int(rng.choice([0, 2, 8])),
+                          seed=int(rng.integers(0, 1 << 16)))
+           for _ in range(n)]
+    stops = [frozenset(int(t) for t in
+                       rng.integers(0, ECFG.vocab_size, size=8))
+             if rng.random() < 0.5 else frozenset() for _ in range(n)]
+    return prompts, n_new, sps, stops
+
+
+def _serve(mixture, prompts, n_new, sps, stops, arrivals, replicas=None):
+    expert_params, router_params = mixture
+    with ServeFrontend(ECFG, RCFG, expert_params, router_params, ENG,
+                       replicas=replicas) as eng:
+        reqs = [eng.submit(prompts[i], n_new[i], sampling=sps[i],
+                           stop_tokens=stops[i], arrival_tick=arrivals[i])
+                for i in range(len(prompts))]
+        res = eng.run()
+    return reqs, res
+
+
+# ---------------------------------------------------------------------------
+# replica invariance: tokens cannot depend on placement
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", range(3))
+def test_replica_invariance_fuzz(mixture, seed):
+    """Acceptance: the same workload served with one server per expert
+    and with replicas {0: 2, 1: 3} yields bitwise-identical tokens, both
+    equal to the serial oracle — replica placement is unobservable."""
+    expert_params, _ = mixture
+    rng = np.random.default_rng(9100 + seed)
+    n = int(rng.integers(5, 9))
+    prompts, n_new, sps, stops = _workload(rng, n)
+    arrivals = [int(rng.integers(0, 4)) for _ in range(n)]
+    r1, _ = _serve(mixture, prompts, n_new, sps, stops, arrivals)
+    rR, resR = _serve(mixture, prompts, n_new, sps, stops, arrivals,
+                      replicas={0: 2, 1: 3})
+    assert len(rR) == n
+    for a, b in zip(r1, rR):
+        assert a.uid == b.uid and a.expert == b.expert
+        assert a.tokens == b.tokens, f"seed {seed} uid {a.uid}"
+        want = _oracle(expert_params[a.expert], prompts[a.uid],
+                       n_new[a.uid], sampling=sps[a.uid], uid=a.uid,
+                       stops=stops[a.uid])
+        np.testing.assert_array_equal(np.asarray(b.tokens), want,
+                                      err_msg=f"seed {seed} uid {a.uid}")
+    # the replicated run really used several slots per expert
+    assert resR["per_expert"][0]["replicas"] == 2
+    assert resR["per_expert"][1]["replicas"] == 3
+    served = sum(s["served"] for s in resR["per_expert"].values())
+    assert served == n
+
+
+# ---------------------------------------------------------------------------
+# least-loaded admission
+# ---------------------------------------------------------------------------
+def test_least_loaded_spreads_hot_expert(mixture):
+    """Identical prompts all route to one expert; with 2 replicas the
+    load tracker must alternate them, so both replicas end up serving."""
+    expert_params, router_params = mixture
+    rng = np.random.default_rng(9200)
+    prompt = rng.integers(0, ECFG.vocab_size, size=PREFIX).astype(np.int32)
+    with ServeFrontend(ECFG, RCFG, expert_params, router_params, ENG,
+                       replicas={0: 2, 1: 2}) as eng:
+        reqs = [eng.submit(prompt, 3, arrival_tick=0) for _ in range(6)]
+        res = eng.run()
+    e = reqs[0].expert
+    assert all(r.expert == e for r in reqs)       # same prompt, same expert
+    # simultaneous arrivals: load increments on every enqueue, so the
+    # picks alternate 0,1,0,1,... deterministically
+    assert [r.replica for r in reqs] == [0, 1, 0, 1, 0, 1]
+    per_rep = res["per_expert"][e]["per_replica"]
+    assert {rr: st["served"] for rr, st in per_rep.items()} == {0: 3, 1: 3}
+    # the cold expert's replicas exist but served nothing
+    cold = res["per_expert"][1 - e]
+    assert cold["served"] == 0 and cold["replicas"] == 2
+
+
+def test_tie_break_goes_to_lowest_replica(mixture):
+    """All replicas idle = all loads equal: the first request must land
+    on replica 0 (deterministic placement, not dict order)."""
+    expert_params, router_params = mixture
+    rng = np.random.default_rng(9201)
+    prompt = rng.integers(0, ECFG.vocab_size, size=PREFIX).astype(np.int32)
+    with ServeFrontend(ECFG, RCFG, expert_params, router_params, ENG,
+                       replicas={0: 3, 1: 3}) as eng:
+        r = eng.submit(prompt, 2, arrival_tick=0)
+        eng.run()
+    assert r.replica == 0
+
+
+def test_replicas_map_validated(mixture):
+    expert_params, router_params = mixture
+    with pytest.raises(ValueError, match="names expert 5"):
+        ServeFrontend(ECFG, RCFG, expert_params, router_params, ENG,
+                      replicas={5: 2})
+    with pytest.raises(ValueError, match=">= 1 replica"):
+        ServeFrontend(ECFG, RCFG, expert_params, router_params, ENG,
+                      replicas={0: 0})
+
+
+# ---------------------------------------------------------------------------
+# wire version: mismatches rejected loudly at the boundary
+# ---------------------------------------------------------------------------
+def test_wire_version_mismatch_rejected(mixture):
+    expert_params, _ = mixture
+    rng = np.random.default_rng(9300)
+    prompt = rng.integers(0, ECFG.vocab_size, size=PREFIX).astype(np.int32)
+    msg = RequestMsg(uid=0, prompt=prompt, max_new_tokens=2,
+                     sampling=SamplingParams(), stop_tokens=frozenset(),
+                     enqueue_tick=0)
+    assert msg.version == WIRE_VERSION
+    assert check_version(msg) is msg
+    lt = LoopbackTransport([ExpertServer(ECFG, expert_params[0], ENG)])
+    stale = dataclasses.replace(msg, version=99)
+    with pytest.raises(RuntimeError, match="wire protocol mismatch"):
+        lt.enqueue(0, stale)
+    with pytest.raises(RuntimeError, match="version None"):
+        check_version(object())
+    lt.enqueue(0, msg)                     # current version passes
+    while lt.busy(0):
+        lt.tick(0)
+    assert lt.stats(0).version == WIRE_VERSION
+
+
+def test_stats_msg_is_load_ground_truth(mixture):
+    """``load(s)`` is tracked sender-side; ``StatsMsg.pending`` +
+    ``active_lanes`` is the server's own word — they must agree, both
+    mid-flight (queued + decoding) and when drained."""
+    expert_params, _ = mixture
+    rng = np.random.default_rng(9301)
+    lt = LoopbackTransport([ExpertServer(ECFG, expert_params[0], ENG)])
+    for uid in range(3):                   # lanes=2: one must queue
+        prompt = rng.integers(0, ECFG.vocab_size,
+                              size=PREFIX).astype(np.int32)
+        lt.enqueue(0, RequestMsg(uid=uid, prompt=prompt, max_new_tokens=4,
+                                 sampling=SamplingParams(),
+                                 stop_tokens=frozenset(), enqueue_tick=0))
+    assert lt.load(0) == 3
+    lt.tick(0)                             # admits up to `lanes` requests
+    st = lt.stats(0)
+    assert st.pending == 1 and st.active_lanes == 2
+    assert lt.load(0) == st.pending + st.active_lanes == 3
+    while lt.busy(0):
+        lt.tick(0)
+    st = lt.stats(0)
+    assert lt.load(0) == st.pending + st.active_lanes == 0
+
+
+# ---------------------------------------------------------------------------
+# consolidated API: ServeFrontend is the entry point, the facade warns
+# ---------------------------------------------------------------------------
+def test_facade_warns_and_aliases_servefrontend(mixture):
+    expert_params, router_params = mixture
+    with pytest.warns(DeprecationWarning, match="ServeFrontend"):
+        eng = MixtureServeEngine(ECFG, RCFG, expert_params, router_params,
+                                 ENG)
+    assert isinstance(eng, ServeFrontend)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        ServeFrontend(ECFG, RCFG, expert_params, router_params, ENG)
+
+
+def test_parse_replicas_spec():
+    assert parse_replicas("") == {}
+    assert parse_replicas("0:2") == {0: 2}
+    assert parse_replicas(" 0:2 , 3:4 ") == {0: 2, 3: 4}
+    with pytest.raises(ValueError, match="EXPERT:COUNT"):
+        parse_replicas("0")
+    with pytest.raises(ValueError, match="EXPERT:COUNT"):
+        parse_replicas("0:x")
+    with pytest.raises(ValueError, match="twice"):
+        parse_replicas("0:2,0:3")
+
+
+# ---------------------------------------------------------------------------
+# process transport (slow: one spawned jax worker per slot)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_process_transport_replica_identity_smoke(mixture):
+    """2 replicas of expert 0 = 3 worker processes; tokens must stay
+    bitwise identical to the serial oracle, and a replica worker killed
+    under the engine must surface an error naming expert AND replica."""
+    expert_params, router_params = mixture
+    rng = np.random.default_rng(9400)
+    n = 6
+    prompts, n_new, sps, stops = _workload(rng, n)
+    eng = ServeFrontend(
+        ECFG, RCFG, expert_params, router_params,
+        EngineConfig(lanes_per_expert=2, max_len=MAXLEN, prefix_len=PREFIX,
+                     block_size=BS, route_batch=4, transport="process"),
+        replicas={0: 2})
+    with eng:
+        assert eng._transport.labels == ["expert 0 replica 0",
+                                         "expert 0 replica 1", "expert 1"]
+        reqs = [eng.submit(prompts[i], n_new[i], sampling=sps[i],
+                           stop_tokens=stops[i], arrival_tick=i // 3)
+                for i in range(n)]
+        res = eng.run()
+        assert len(res["requests"]) == n
+        for r in res["requests"]:
+            want = _oracle(expert_params[r.expert], prompts[r.uid],
+                           n_new[r.uid], sampling=sps[r.uid], uid=r.uid,
+                           stops=stops[r.uid])
+            np.testing.assert_array_equal(np.asarray(r.tokens), want,
+                                          err_msg=f"uid {r.uid}")
+        assert res["per_expert"][0]["replicas"] == 2
+        # dead-replica surfacing: kill slot 1 (expert 0, replica 1) and
+        # the next op on it must name the placement, not a bare index
+        tr = eng._transport
+        tr._procs[1].terminate()
+        tr._procs[1].join(timeout=10)
+        with pytest.raises(RuntimeError, match="expert 0 replica 1"):
+            tr.tick(1)
+        # after a worker failure the transport refuses further traffic
+        with pytest.raises(RuntimeError, match="broken"):
+            tr.stats(0)
