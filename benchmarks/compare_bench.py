@@ -13,6 +13,10 @@ BENCH trajectory is *gated*, not just uploaded:
     when a replicated run exists — have improved the hot expert's p99
     TTFT (hard gates; the latency values themselves are informational
     rows in the delta table);
+  * a v4 ``prefix_sharing`` section (when present and enabled on a
+    shared-prefix workload) must report ``prefill_tokens_saved > 0``
+    while the token-identity gates above stay green — the cache must
+    actually shortcut prefill work AND must not change a single token;
   * engine tokens/sec must stay within ``--min-ratio`` of the baseline —
     generous by default because shared CI runners are noisy; the full
     delta table lands in ``$GITHUB_STEP_SUMMARY`` either way.
@@ -80,6 +84,11 @@ ROWS = [
     ("open-loop p99 ITL ms (1/expert)", "open_loop.single.itl_p99_ms"),
     ("open-loop p99 TTFT ms (replicated)", "open_loop.replicated.ttft_p99_ms"),
     ("open-loop p99 ITL ms (replicated)", "open_loop.replicated.itl_p99_ms"),
+    # v4 prefix-sharing rows: absent in older reports, tolerantly skipped
+    ("prefix hit blocks", "prefix_sharing.hit_blocks"),
+    ("prefill tokens saved", "prefix_sharing.prefill_tokens_saved"),
+    ("cached blocks", "prefix_sharing.cached_blocks"),
+    ("unadmitted requests", "n_unadmitted"),
 ]
 
 # every per-expert entry of an open_loop run must carry the full latency
@@ -182,6 +191,15 @@ def main() -> int:
         failures.append(f"paged decode reads ({rb['paged']} B/tick) not "
                         f"below gathered ({rb['gathered']} B/tick)")
     failures.extend(check_open_loop(fresh))
+    ps = fresh.get("prefix_sharing")
+    if ps is not None and ps.get("enabled") and \
+            _get(fresh, "workload.shared_prefix_len"):
+        # on a shared-prefix workload an enabled cache must save work;
+        # zero savings means sharing silently stopped engaging (the
+        # identity gates above already guarantee it changed no tokens)
+        if not ps.get("prefill_tokens_saved", 0) > 0:
+            failures.append("prefix sharing enabled on a shared-prefix "
+                            "workload but prefill_tokens_saved is not > 0")
     f_tps = _get(fresh, "engine.tokens_per_s") or 0.0
     b_tps = _get(base, "engine.tokens_per_s") or 0.0
     if b_tps and f_tps < args.min_ratio * b_tps:

@@ -34,13 +34,26 @@ overhead, dominates — wasted lane-tokens then cost real wall time.
 messages over pipes are the only cross-expert traffic) — the identity
 gates must hold there exactly as on the in-process loopback default.
 
+Every prompt shares its leading ``--shared-prefix-len`` tokens (default
+half the prompt) — the prefix-sharing workload: each expert's radix
+cache maps those block-aligned leading tokens to pool blocks, so once
+one request has prefilled them, later admissions reserve only the novel
+suffix and replay it through the decode path (copy-on-write: shared
+blocks are read-only, refcounted, evicted LRU under pool pressure).
+The report's ``prefix_sharing`` section counts hit blocks and prefill
+tokens saved; in ``--smoke`` mode saved tokens must be > 0 with tokens
+still bitwise identical, or the bench fails.  ``--no-prefix-cache``
+turns sharing off; ``--prefill-chunk-tokens`` caps suffix replay per
+tick (the chunked-admission state machine).
+
 ``--smoke`` shrinks the models/workload so the token-identity gates
 (greedy under pool pressure, batched-admission prefill budget, AND a
 sampled + early-stop gate) run in CI on every push; the speedup exit
 check is skipped there because tiny models are dispatch-bound.  The
-``--json`` report follows the ``BENCH_serve/v3`` schema (v2 + the
-open-loop latency section and per-expert replica breakdowns),
-persisted as a CI artifact so the perf trajectory accumulates.
+``--json`` report follows the ``BENCH_serve/v4`` schema (v3 + the
+prefix_sharing section, ``n_unadmitted``, and the shared-prefix
+workload knobs), persisted as a CI artifact so the perf trajectory
+accumulates.
 
 ``--open-loop`` adds the production-facing workload the closed-loop
 sections cannot measure: **Poisson arrivals** (``--arrival-rate``
@@ -160,7 +173,9 @@ def open_loop_run(ecfg, rcfg, expert_params, router_params, args, max_len,
                            min_prefill_bucket=args.prompt_len,
                            block_size=args.block_size,
                            decode_impl=args.decode_impl,
-                           transport=args.transport)
+                           transport=args.transport,
+                           prefix_cache=not args.no_prefix_cache,
+                           prefill_chunk_tokens=args.prefill_chunk_tokens)
     with ServeFrontend(ecfg, rcfg, expert_params, router_params, eng_cfg,
                        replicas=replicas) as eng:
         eng.warmup(args.prompt_len, sampled=sampling.temperature > 0)
@@ -202,11 +217,15 @@ def open_loop_run(ecfg, rcfg, expert_params, router_params, args, max_len,
             "tokens_identical": not bad}, bad
 
 
-def main() -> int:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--experts", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--shared-prefix-len", type=int, default=-1,
+                    help="leading tokens every prompt shares (the prefix-"
+                         "sharing workload; -1 = prompt_len // 2, 0 = "
+                         "fully distinct prompts)")
     ap.add_argument("--min-new", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=32)
     servecli.add_engine_args(ap)
@@ -241,7 +260,11 @@ def main() -> int:
                          "no speedup exit check")
     ap.add_argument("--no-check", action="store_true",
                     help="skip the engine-beats-baseline exit check")
-    args = ap.parse_args()
+    return ap
+
+
+def main() -> int:
+    args = build_parser().parse_args()
     if args.smoke:
         ecfg, rcfg = SMOKE_EXPERT, SMOKE_ROUTER
         args.requests = min(args.requests, 10)
@@ -260,6 +283,14 @@ def main() -> int:
                                         seq_len=args.prompt_len,
                                         n_domains=args.experts))
     prompts, _ = corpus.sequences(np.arange(args.requests) + 555_000)
+    # shared-prefix workload: every prompt opens with the same "system
+    # prompt" tokens, so once one request per expert has prefilled them
+    # the radix cache serves the leading blocks to every later admission
+    shared_len = (args.prompt_len // 2 if args.shared_prefix_len < 0
+                  else args.shared_prefix_len)
+    if shared_len:
+        prompts = prompts.copy()
+        prompts[:, :shared_len] = prompts[0, :shared_len]
     rng = np.random.default_rng(args.seed)
     n_new = rng.integers(args.min_new, args.max_new + 1, size=args.requests)
     max_len = -(-(args.prompt_len + args.max_new) // args.block_size) \
@@ -302,7 +333,9 @@ def main() -> int:
                          block_size=args.block_size,
                          pool_blocks=args.blocks_per_expert,
                          decode_impl=args.decode_impl,
-                         transport=args.transport),
+                         transport=args.transport,
+                         prefix_cache=not args.no_prefix_cache,
+                         prefill_chunk_tokens=args.prefill_chunk_tokens),
             replicas=args.replicas) as eng:
         # warmup: compile every admission batch width the timed run can
         # hit (routing-independent — see MixtureServeEngine.warmup);
@@ -325,17 +358,19 @@ def main() -> int:
     speedup = res["tokens_per_s"] / serial["tokens_per_s"]
     dense = dense_slab_bytes(ecfg, args.lanes, max_len)
     report = {
-        # v3 (PR 6): adds the open_loop latency section (Poisson arrivals,
-        # Zipf expert mix, per-expert p50/p99 TTFT + inter-token latency)
-        # and per-expert replica breakdowns under engine.per_expert; v2
-        # (PR 5) added "transport" + per-expert queue_wait_ticks /
-        # occupancy; compare_bench.py accepts a newer fresh report
-        # against an older baseline (added keys only)
-        "schema": "BENCH_serve/v3",
+        # v4 (PR 7): adds the prefix_sharing section (hit blocks, prefill
+        # tokens saved, cached blocks), n_unadmitted, and the shared-
+        # prefix workload knobs; v3 (PR 6) added open_loop + per-replica
+        # breakdowns; v2 (PR 5) added "transport" + per-expert
+        # queue_wait_ticks / occupancy; compare_bench.py accepts a newer
+        # fresh report against an older baseline (added keys only)
+        "schema": "BENCH_serve/v4",
         "mode": args.mode,
         "transport": args.transport,
         "workload": {"requests": args.requests, "experts": args.experts,
                      "lanes": args.lanes, "prompt_len": args.prompt_len,
+                     "shared_prefix_len": shared_len,
+                     "prefill_chunk_tokens": args.prefill_chunk_tokens,
                      "max_len": max_len,
                      "new_tokens": [int(x) for x in n_new],
                      "sampling": {"temperature": sampling.temperature,
@@ -373,6 +408,8 @@ def main() -> int:
                                      res["per_expert"].items()},
                      "hbm_bytes_per_lane": res["kv_bytes_per_lane"],
                      "dense_slab_bytes_per_lane": dense // args.lanes},
+        "prefix_sharing": res["prefix_sharing"],
+        "n_unadmitted": res["n_unadmitted"],
         "decode_impl": res["decode_impl"],
         "decode_read_bytes_per_tick": {
             # what the paged kernel reads (live blocks only) vs the
@@ -409,6 +446,17 @@ def main() -> int:
     if rb["paged"] >= rb["gathered"]:
         print("FAIL: paged decode reads did not beat the gathered "
               "(lanes, max_len) view")
+        return emit(1)
+    ps = report["prefix_sharing"]
+    print(f"prefix sharing: {'on' if ps['enabled'] else 'off'}, "
+          f"{shared_len}-token shared prompt head, {ps['hit_blocks']} hit "
+          f"blocks, {ps['prefill_tokens_saved']} prefill tokens saved, "
+          f"{report['n_unadmitted']} never admitted")
+    if ps["enabled"] and shared_len >= args.block_size and \
+            ps["prefill_tokens_saved"] <= 0:
+        # staggered admissions over a shared prompt head MUST hit the
+        # radix cache; zero savings means sharing silently broke
+        print("FAIL: shared-prefix workload saved no prefill tokens")
         return emit(1)
 
     # ---- open-loop skewed latency workload --------------------------------
@@ -471,7 +519,10 @@ def main() -> int:
                              min_prefill_bucket=args.prompt_len,
                              block_size=args.block_size,
                              decode_impl=args.decode_impl,
-                             transport=args.transport)) as eng2:
+                             transport=args.transport,
+                             prefix_cache=not args.no_prefix_cache,
+                             prefill_chunk_tokens=
+                             args.prefill_chunk_tokens)) as eng2:
             eng2.warmup(args.prompt_len, sampled=False)
             # uniform budget: lanes then free together, so admission
             # drains `lanes` requests per prefill and the ceil bound is
@@ -519,7 +570,10 @@ def main() -> int:
                              block_size=args.block_size,
                              pool_blocks=args.blocks_per_expert,
                              decode_impl=args.decode_impl,
-                             transport=args.transport)) as eng3:
+                             transport=args.transport,
+                             prefix_cache=not args.no_prefix_cache,
+                             prefill_chunk_tokens=
+                             args.prefill_chunk_tokens)) as eng3:
             eng3.warmup(args.prompt_len)
             reqs3 = [eng3.submit(prompts[i], int(n_new[i]), sampling=sp,
                                  stop_tokens=stops3, arrival_tick=eng3.tick)

@@ -21,11 +21,15 @@ and drives the engine's generation API end to end:
 
     PYTHONPATH=src python examples/serve_mixture.py
 
+The engine knobs come from the shared flag surface in
+:mod:`repro.serving.cli` (same names as the other front-ends — try
+``--transport process``, ``--replicas 0:2`` or ``--no-prefix-cache``).
 For the full CLI (presets, checkpoints, sampling flags, the old serial
 baseline):
 
     PYTHONPATH=src python -m repro.launch.serve --help
 """
+import argparse
 import sys
 
 sys.path.insert(0, "src")
@@ -38,9 +42,16 @@ from repro.core import router as routerlib
 from repro.data import DataConfig, SyntheticCorpus
 from repro.models import model as modellib
 from repro.serving import EngineConfig, SamplingParams, ServeFrontend
+from repro.serving import cli as servecli
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    return servecli.add_engine_args(ap)
 
 
 def main() -> None:
+    args = build_parser().parse_args()
     # 1. a tiny mixture: E experts + E prefix routers (stacked for vmap)
     n_experts = 2
     ecfg = ModelConfig(name="qs-expert", n_layers=2, d_model=128, n_heads=4,
@@ -59,7 +70,14 @@ def main() -> None:
     #    replica-placement-invariant, so output would be unchanged)
     engine = ServeFrontend(
         ecfg, rcfg, expert_params, router_params,
-        EngineConfig(lanes_per_expert=4, max_len=96, prefix_len=16))
+        EngineConfig(lanes_per_expert=args.lanes, max_len=96, prefix_len=16,
+                     block_size=args.block_size,
+                     pool_blocks=args.blocks_per_expert,
+                     decode_impl=args.decode_impl,
+                     transport=args.transport,
+                     prefix_cache=not args.no_prefix_cache,
+                     prefill_chunk_tokens=args.prefill_chunk_tokens),
+        replicas=args.replicas)
 
     # 3. a staggered stream of requests: mixed prompt/completion lengths,
     #    mixed recipes (greedy + sampled), and per-request stop tokens
@@ -80,15 +98,17 @@ def main() -> None:
                       arrival_tick=i // 3)         # 3 arrivals per tick
     # 4. stream tokens as they decode (engine.run() drains in batch mode)
     n_tokens = 0
-    for delta in engine.stream():
-        n_tokens += 1
-        if delta.done:
-            r = delta.request
-            print(f"req{r.uid}: expert {r.expert}, "
-                  f"T={r.sampling.temperature}, prompt {len(r.prompt)} tok, "
-                  f"+{len(r.tokens)}/{r.max_new_tokens} new "
-                  f"({r.finish_reason}, queued {r.queue_ticks} ticks): "
-                  f"{r.tokens[:8]}{'...' if len(r.tokens) > 8 else ''}")
+    with engine:                   # releases process-transport workers
+        for delta in engine.stream():
+            n_tokens += 1
+            if delta.done:
+                r = delta.request
+                print(f"req{r.uid}: expert {r.expert}, "
+                      f"T={r.sampling.temperature}, "
+                      f"prompt {len(r.prompt)} tok, "
+                      f"+{len(r.tokens)}/{r.max_new_tokens} new "
+                      f"({r.finish_reason}, queued {r.queue_ticks} ticks): "
+                      f"{r.tokens[:8]}{'...' if len(r.tokens) > 8 else ''}")
     print(f"streamed {n_tokens} tokens over {engine.tick} ticks")
 
 

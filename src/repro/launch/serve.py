@@ -55,7 +55,7 @@ def build_mixture(preset: str, n_experts: int, ckpt: str | None, seed: int = 0):
     return ecfg, rcfg, expert_params, router_params
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--preset", default="tiny", choices=list(PRESETS))
     ap.add_argument("--experts", type=int, default=4)
@@ -73,7 +73,11 @@ def main() -> None:
                     help="directory from launch/train.py (else random init)")
     ap.add_argument("--baseline", action="store_true",
                     help="run the old one-shot serial per-group path")
-    args = ap.parse_args()
+    return ap
+
+
+def main() -> None:
+    args = build_parser().parse_args()
     sampling = servecli.sampling_from_args(args)
     stop_tokens = frozenset(int(t) for t in args.stop_tokens.split(",") if t)
 
@@ -106,7 +110,10 @@ def main() -> None:
                                      block_size=args.block_size,
                                      pool_blocks=args.blocks_per_expert,
                                      decode_impl=args.decode_impl,
-                                     transport=args.transport),
+                                     transport=args.transport,
+                                     prefix_cache=not args.no_prefix_cache,
+                                     prefill_chunk_tokens=
+                                     args.prefill_chunk_tokens),
                         replicas=args.replicas)
     with eng:                      # releases worker processes on exit
         for i in range(args.requests):
@@ -128,6 +135,11 @@ def main() -> None:
     print(f"decode KV reads ({res['decode_impl']}): paged "
           f"{rb['paged_per_tick']} B/tick vs gathered "
           f"{rb['gathered_per_tick']} B/tick")
+    ps = res["prefix_sharing"]
+    print(f"prefix sharing: {'on' if ps['enabled'] else 'off'}, "
+          f"{ps['hit_blocks']} hit blocks, "
+          f"{ps['prefill_tokens_saved']} prefill tokens saved, "
+          f"{res['n_unadmitted']} never admitted")
     print("per-expert:", res["per_expert"])
     print("routes:", [r.expert for r in res["requests"]],
           " domains:", doms.tolist())

@@ -32,7 +32,12 @@ Internally the engine is a router frontend
 (:mod:`repro.serving.expert_server`), and a pluggable versioned message
 transport (:mod:`repro.serving.transport`) — in-process loopback by
 default, or one OS process per slot with
-``EngineConfig(transport="process")``.  See
+``EngineConfig(transport="process")``.  Each server shares prompt
+prefixes copy-on-write through a refcounted radix cache over its paged
+KV pool (:class:`PrefixCache`): repeated system prompts prefill once,
+later admissions replay only their novel suffix (chunked by
+``EngineConfig.prefill_chunk_tokens``), and tokens stay bitwise
+identical with the cache on or off (``prefix_cache=False`` disables).  See
 ``src/repro/serving/README.md`` for the layering, the message protocol,
 and the replication/admission policy.  :mod:`repro.serving.cli` defines
 the shared command-line surface for the serving entry points;
@@ -47,14 +52,15 @@ from repro.serving.engine import EngineConfig, MixtureServeEngine, TokenDelta
 from repro.serving.expert_server import ExpertServer
 from repro.serving.frontend import ServeFrontend
 from repro.serving.sampling import SamplingParams
-from repro.serving.scheduler import (BlockAllocator, Request, RequestQueue,
-                                     SlotAllocator)
+from repro.serving.scheduler import (BlockAllocator, PrefixCache, Request,
+                                     RequestQueue, SlotAllocator)
 from repro.serving.transport import (LoopbackTransport, ProcessTransport,
                                      RequestMsg, StatsMsg, TokenDeltaMsg,
                                      Transport, WIRE_VERSION, check_version)
 
 __all__ = ["BlockAllocator", "EngineConfig", "ExpertServer",
-           "LoopbackTransport", "MixtureServeEngine", "ProcessTransport",
-           "Request", "RequestMsg", "RequestQueue", "SamplingParams",
-           "ServeFrontend", "SlotAllocator", "StatsMsg", "TokenDelta",
-           "TokenDeltaMsg", "Transport", "WIRE_VERSION", "check_version"]
+           "LoopbackTransport", "MixtureServeEngine", "PrefixCache",
+           "ProcessTransport", "Request", "RequestMsg", "RequestQueue",
+           "SamplingParams", "ServeFrontend", "SlotAllocator", "StatsMsg",
+           "TokenDelta", "TokenDeltaMsg", "Transport", "WIRE_VERSION",
+           "check_version"]

@@ -132,6 +132,29 @@ def insert_requests(cfg, caches, request_caches, block_rows, slots,
     return jax.tree_util.tree_map_with_path(ins, caches, request_caches)
 
 
+def clear_block_pos(cfg, caches, block_ids):
+    """Reset the ``pos`` rows of the given pool blocks to -1 (masked).
+
+    Used by the prefix-sharing hit path: a hit lane's *novel* blocks are
+    filled through the decode scatter (one position per step) rather
+    than :func:`insert_requests` (which overwrites a reused block's
+    every slot), so a previous tenant's stale positions must be masked
+    out before the first read.  ``block_ids`` is a fixed-width int32
+    vector; pad unused entries with the scratch row index (``n_blocks``)
+    — scratch positions are -1 already, so re-clearing them is a no-op.
+    Only ``pos`` leaves change; k/v payloads are left as garbage behind
+    the mask, exactly like a fresh pool.
+    """
+    block_ids = jnp.asarray(block_ids, jnp.int32)
+
+    def clr(path, leaf):
+        if _is_pool_leaf(cfg, path) and _is_pos_leaf(path):
+            return leaf.at[:, block_ids].set(-1)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(clr, caches)
+
+
 def kv_cache_bytes(caches) -> int:
     """Total bytes held by a cache pytree (pools + lane state)."""
     return sum(x.size * x.dtype.itemsize

@@ -17,11 +17,21 @@ import argparse
 from repro.serving.sampling import SamplingParams
 
 
+class ReplicaSpecError(ValueError, argparse.ArgumentTypeError):
+    """A malformed ``--replicas`` spec.  Doubly derived on purpose:
+    library callers catch the plain :class:`ValueError`, while argparse
+    shows :class:`argparse.ArgumentTypeError` messages verbatim — a bare
+    ValueError from a ``type=`` callable would be swallowed into an
+    unhelpful "invalid parse_replicas value"."""
+
+
 def parse_replicas(spec: str) -> dict[int, int]:
     """``"0:2,3:4"`` -> ``{0: 2, 3: 4}`` (expert id -> replica count).
 
-    The empty string means no replication.  Validation beyond syntax —
-    expert ids in range, counts >= 1 — happens in
+    The empty string means no replication.  A repeated expert id raises
+    (two counts for one expert is always a typo, and silently letting
+    the last one win would mask it).  Validation beyond syntax — expert
+    ids in range, counts >= 1 — happens in
     :class:`repro.serving.ServeFrontend`, which knows the mixture size.
     """
     out: dict[int, int] = {}
@@ -32,11 +42,11 @@ def parse_replicas(spec: str) -> dict[int, int]:
                 raise ValueError
             expert, count = int(e), int(r)
         except ValueError:
-            raise ValueError(
+            raise ReplicaSpecError(
                 f"bad --replicas entry {part!r}: expected EXPERT:COUNT "
                 f"(e.g. 0:2,3:4)") from None
         if expert in out:
-            raise ValueError(f"--replicas names expert {expert} twice")
+            raise ReplicaSpecError(f"--replicas names expert {expert} twice")
         out[expert] = count
     return out
 
@@ -68,6 +78,14 @@ def add_engine_args(ap: argparse.ArgumentParser, *, lanes: int = 4,
                         "e.g. '0:2' runs two servers for expert 0; "
                         "requests go to the least-loaded replica "
                         "(default: one server per expert)")
+    g.add_argument("--no-prefix-cache", action="store_true",
+                   help="disable prefix-sharing KV: every request "
+                        "prefills its full prompt even when the leading "
+                        "blocks are cached")
+    g.add_argument("--prefill-chunk-tokens", type=int, default=0,
+                   help="per-tick token budget for replaying a cached-"
+                        "prefix request's novel prompt suffix "
+                        "(0 = unlimited: finish the suffix in one tick)")
     return ap
 
 

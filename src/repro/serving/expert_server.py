@@ -50,7 +50,8 @@ from repro.models import model as modellib
 from repro.serving import cache as cachelib
 from repro.serving import sampling as samplib
 from repro.serving.sampling import SamplingParams
-from repro.serving.scheduler import BlockAllocator, Request, SlotAllocator
+from repro.serving.scheduler import (BlockAllocator, PrefixCache, Request,
+                                     SlotAllocator)
 from repro.serving.transport import RequestMsg, StatsMsg, TokenDeltaMsg
 
 PAD_SAFE_KINDS = (cfglib.ATTN, cfglib.ATTN_SHARED)
@@ -70,6 +71,9 @@ class EngineConfig:
     decode_impl: str = "auto"     # paged decode kernel: auto|jnp|pallas
                                   # (auto follows the expert cfg's use_pallas)
     transport: str = "loopback"   # expert backend: loopback|process
+    prefix_cache: bool = True     # share full prompt-prefix KV blocks
+    prefill_chunk_tokens: int = 0  # per-tick suffix-prefill token budget on
+                                   # the shared-prefix path (0 = unlimited)
 
 
 def bucket_len(n: int, min_bucket: int, max_len: int) -> int:
@@ -93,6 +97,7 @@ class ServingShapes:
     pool_blocks: int              # resolved pool size per expert
     dcfg: object                  # decode-side expert config (use_pallas flip)
     decode_impl: str              # "jnp" | "pallas" after `auto` resolution
+    prefix_ok: bool               # prefix-sharing KV cache is usable
 
 
 def resolve_shapes(ecfg, eng: EngineConfig) -> ServingShapes:
@@ -113,6 +118,9 @@ def resolve_shapes(ecfg, eng: EngineConfig) -> ServingShapes:
     if eng.transport not in TRANSPORTS:
         raise ValueError(f"transport must be one of {TRANSPORTS}, "
                          f"got {eng.transport!r}")
+    if eng.prefill_chunk_tokens < 0:
+        raise ValueError(f"prefill_chunk_tokens must be >= 0, "
+                         f"got {eng.prefill_chunk_tokens}")
     # prompt-length bucketing pads on the right; that is exact for full
     # attention (causal mask hides the future) but would pollute rotating-
     # window KV buffers and recurrent (SSM/xLSTM) states, so those archs
@@ -134,10 +142,18 @@ def resolve_shapes(ecfg, eng: EngineConfig) -> ServingShapes:
     # only: prefill keeps the expert config's own kernel choice
     dcfg = ecfg if eng.decode_impl == "auto" else \
         ecfg.replace(use_pallas=eng.decode_impl == "pallas")
+    # the hit path skips prefill for cached blocks and replays only the
+    # suffix through the decode scatter — sound only when every layer's
+    # prefix state lives in the paged pool (pure full-attention archs);
+    # sliding-window / recurrent layers would lack their prefix state
+    prefix_ok = bool(eng.prefix_cache and pad_safe and has_pool
+                     and all(k in cachelib.POOL_KINDS
+                             for k in ecfg.layer_pattern))
     return ServingShapes(pad_safe=pad_safe, has_pool=has_pool,
                          lane_blocks=lane_blocks, pool_blocks=pool,
                          dcfg=dcfg,
-                         decode_impl="pallas" if dcfg.use_pallas else "jnp")
+                         decode_impl="pallas" if dcfg.use_pallas else "jnp",
+                         prefix_ok=prefix_ok)
 
 
 @functools.lru_cache(maxsize=None)
@@ -175,7 +191,8 @@ def _jit_fns(ecfg, dcfg, max_len: int):
         lambda p, toks, last: modellib.prefill(
             p, ecfg, {"tokens": toks}, cache_len=max_len, last_index=last))
     insert = jax.jit(functools.partial(cachelib.insert_requests, ecfg))
-    return decode, decode_g, prefill, insert, samplib.sample_tokens_jit
+    clear = jax.jit(functools.partial(cachelib.clear_block_pos, ecfg))
+    return decode, decode_g, prefill, insert, samplib.sample_tokens_jit, clear
 
 
 class ExpertServer:
@@ -207,10 +224,20 @@ class ExpertServer:
                                                  bs, M)
         self.alloc = SlotAllocator(L)
         self.balloc = BlockAllocator(self.pool_blocks)
+        self.prefix = PrefixCache(self.balloc, bs) if shapes.prefix_ok \
+            else None
+        self._prefix_bypass = False   # warmup: synthetic prompts stay uncached
         self.pending: deque = deque()
         self.tok = np.zeros(L, np.int32)     # last emitted token per lane
         self.pos = np.zeros(L, np.int32)     # next decode position per lane
         self.active = np.zeros(L, bool)
+        # prefix-sharing hit lanes: admitted but still replaying their novel
+        # prompt suffix through the decode scatter, one position per fill
+        # call (multi-tick when EngineConfig.prefill_chunk_tokens caps the
+        # per-tick budget); promoted to active when the last prompt
+        # position's logits produce the first token
+        self.filling = np.zeros(L, bool)
+        self.fill_pos = np.zeros(L, np.int32)  # next prompt position to feed
         self.req: list = [None] * L          # slot -> local Request | None
         self.block_tables = np.full((L, self.lane_blocks), -1, np.int32)
         self.blocks: list = [[] for _ in range(L)]  # slot -> reserved blocks
@@ -232,14 +259,24 @@ class ExpertServer:
         # replaced (bookkeeping from reserved-block counts, impl-independent)
         self.paged_read_bytes = 0
         self.gathered_read_bytes = 0
+        self.prefix_hit_blocks = 0    # blocks acquired from the prefix cache
+        self.prefill_tokens_saved = 0  # prompt tokens never (re)prefilled
         (self._decode_fn, self._decode_greedy_fn, self._prefill_fn,
-         self._insert_fn, self._sample_fn) = _jit_fns(ecfg, shapes.dcfg, M)
+         self._insert_fn, self._sample_fn, self._clear_fn) = \
+            _jit_fns(ecfg, shapes.dcfg, M)
 
     # -- the narrow API ----------------------------------------------------
     @property
     def busy(self) -> bool:
-        """THE idle predicate: queued work or an active decode lane."""
-        return bool(self.pending) or bool(self.active.any())
+        """THE idle predicate: queued work, an active decode lane, or a
+        hit lane still replaying its prompt suffix."""
+        return (bool(self.pending) or bool(self.active.any())
+                or bool(self.filling.any()))
+
+    @property
+    def cached_blocks(self) -> int:
+        """Pool blocks currently held by the prefix cache."""
+        return self.prefix.n_blocks if self.prefix is not None else 0
 
     def enqueue(self, msg: RequestMsg) -> None:
         """Accept one request; FIFO behind whatever is already queued."""
@@ -258,6 +295,7 @@ class ExpertServer:
         """
         out: list[TokenDeltaMsg] = []
         self._admit(out)
+        self._fill(out)
         self._decode(out)
         self.clock += 1
         return out
@@ -272,13 +310,17 @@ class ExpertServer:
             gathered_read_bytes=self.gathered_read_bytes,
             peak_blocks=self.balloc.peak_in_use,
             pending=len(self.pending),
-            active_lanes=int(self.active.sum()))
+            active_lanes=int(self.active.sum()) + int(self.filling.sum()),
+            prefix_hit_blocks=self.prefix_hit_blocks,
+            prefill_tokens_saved=self.prefill_tokens_saved,
+            cached_blocks=self.cached_blocks)
 
     def reset_stats(self) -> None:
         """Zero the run counters (a warmup must not pollute a timed run)."""
         self.n_served = self.decode_calls = self.prefill_calls = 0
         self.occupied_lane_steps = self.queue_wait_ticks = 0
         self.paged_read_bytes = self.gathered_read_bytes = 0
+        self.prefix_hit_blocks = self.prefill_tokens_saved = 0
         self.balloc.peak_in_use = self.balloc.n_in_use
 
     def sync(self) -> None:
@@ -305,19 +347,32 @@ class ExpertServer:
         pl = min(prompt_len or self.eng.prefix_len, self.eng.max_len - 2)
         L = self.eng.lanes_per_expert
         clock0 = self.clock
-        # one greedy pass (argmax-only decode program) and one sampled pass
-        # (mixed decode program + per-width sampler) so a live mix of
-        # recipes hits only warm compiles
-        for temp in (0.0, 1.0) if sampled else (0.0,):
-            for k in sorted({min(1 << (b - 1).bit_length(), L)
-                             for b in range(1, L + 1)}):
-                for _ in range(k):
-                    self.pending.append(Request(
-                        uid=-1, prompt=np.zeros(pl, np.int32),
-                        max_new_tokens=2,
-                        sampling=SamplingParams(temperature=temp)))
-                while self.busy:
-                    self.tick()       # synthetic deltas dropped on the floor
+        # synthetic zero prompts must neither hit nor seed the prefix
+        # cache — warmup KV is real data but the repeated prompt would
+        # make later identical-prompt traffic read warmup-written blocks
+        # the timed run never accounted for
+        self._prefix_bypass = True
+        try:
+            # one greedy pass (argmax-only decode program) and one sampled
+            # pass (mixed decode program + per-width sampler) so a live mix
+            # of recipes hits only warm compiles
+            for temp in (0.0, 1.0) if sampled else (0.0,):
+                for k in sorted({min(1 << (b - 1).bit_length(), L)
+                                 for b in range(1, L + 1)}):
+                    for _ in range(k):
+                        self.pending.append(Request(
+                            uid=-1, prompt=np.zeros(pl, np.int32),
+                            max_new_tokens=2,
+                            sampling=SamplingParams(temperature=temp)))
+                    while self.busy:
+                        self.tick()   # synthetic deltas dropped on the floor
+        finally:
+            self._prefix_bypass = False
+        if self.prefix is not None:
+            # compile the novel-block pos-clear scatter (all-scratch = no-op)
+            self.caches = self._clear_fn(
+                self.caches,
+                jnp.full(self.lane_blocks, self.pool_blocks, jnp.int32))
         self.clock = clock0
         self.reset_stats()
 
@@ -339,6 +394,15 @@ class ExpertServer:
         used = len(req.prompt) + req.max_new_tokens - 1
         return -(-used // self.eng.block_size)
 
+    def _alloc_evicting(self, k: int) -> list[int] | None:
+        """``alloc_n`` with LRU eviction of cached-but-unreferenced
+        prefix blocks as the fallback under pool pressure."""
+        got = self.balloc.alloc_n(k)
+        if got is None and self.prefix is not None \
+                and self.prefix.evict(k):
+            got = self.balloc.alloc_n(k)
+        return got
+
     def _admit(self, out: list[TokenDeltaMsg]) -> None:
         """Drain pending requests into free lanes with one batched prefill.
 
@@ -348,19 +412,67 @@ class ExpertServer:
         width and the largest prompt bucket among them (non-pad-safe archs
         prefill one request at a time at exact length), then land in the
         caches via one jitted scatter.
+
+        With the prefix cache on, a request whose leading full blocks are
+        cached takes a reference on those pool blocks, reserves only the
+        novel remainder, and becomes a *filling* lane: its prompt suffix
+        is replayed through the decode scatter by :meth:`_fill` instead
+        of joining the batched prefill.  Under pool pressure, LRU
+        cached-but-unreferenced blocks are evicted before admission gives
+        up.
         """
         batch: list[tuple[Request, int, np.ndarray]] = []
+        hits: list[tuple[Request, int, int, list[int]]] = []
         while self.pending and self.alloc.n_free:
             req = self.pending[0]
-            blocks = self.balloc.alloc_n(self._blocks_needed(req))
+            shared: list[int] = []
+            if self.prefix is not None and not self._prefix_bypass:
+                shared = self.prefix.acquire(req.prompt)
+            blocks = self._alloc_evicting(self._blocks_needed(req)
+                                          - len(shared))
             if blocks is None:
+                if shared:                  # roll back the acquired refs
+                    self.balloc.free_n(shared)
                 break                       # pool full: wait, keep FIFO order
             self.pending.popleft()
             slot = self.alloc.alloc()
             row = np.full(self.lane_blocks, -1, np.int32)
-            row[:len(blocks)] = blocks
-            self.blocks[slot] = blocks
-            batch.append((req, slot, row))
+            row[:len(shared)] = shared
+            row[len(shared):len(shared) + len(blocks)] = blocks
+            self.blocks[slot] = shared + blocks
+            if shared:
+                self.block_tables[slot] = row
+                hits.append((req, slot, len(shared), blocks))
+            else:
+                batch.append((req, slot, row))
+
+        bs = self.eng.block_size
+        for req, slot, n_hit, novel in hits:
+            # lane acquired now — admit/queue-wait accounting is the time
+            # to a lane, not to the (possibly chunked) first token
+            req.admit_tick = self.clock
+            self.queue_wait_ticks += self.clock - req.arrival_tick
+            self.req[slot] = req
+            self.filling[slot] = True
+            self.fill_pos[slot] = n_hit * bs
+            self.tok[slot] = self.pos[slot] = 0
+            # real sampler operands at counter 0: the final fill call's
+            # in-program sample IS the request's first token
+            self.keys[slot] = (np.zeros(2, np.uint32) if req.sampling.greedy
+                               else samplib.request_key(req.sampling.seed,
+                                                        req.uid))
+            self.steps[slot] = 0
+            self.temp[slot], self.topk[slot], self.topp[slot] = \
+                req.sampling.temperature, req.sampling.top_k, \
+                req.sampling.top_p
+            # the novel blocks skip insert_requests' full-span overwrite,
+            # so a previous tenant's stale positions must be masked before
+            # the first read through this lane's table
+            ids = np.full(self.lane_blocks, self.pool_blocks, np.int32)
+            ids[:len(novel)] = novel
+            self.caches = self._clear_fn(self.caches, jnp.asarray(ids))
+            self.prefix_hit_blocks += n_hit
+            self.prefill_tokens_saved += n_hit * bs
         if not batch:
             return
 
@@ -439,6 +551,11 @@ class ExpertServer:
             self.steps[slot] = 1
             self.temp[slot], self.topk[slot], self.topp[slot] = \
                 temps[i], topks[i], topps[i]
+            if self.prefix is not None and not self._prefix_bypass:
+                # prompt KV is fully written (insert overwrites every slot
+                # of the reserved blocks): the full prompt blocks are now
+                # shareable; decode writes start past them
+                self.prefix.register(req.prompt, row)
             done = req.max_new_tokens == 1 or first in req.stop_tokens
             reason = self._retire(slot) if done else ""
             out.append(TokenDeltaMsg(
@@ -456,6 +573,8 @@ class ExpertServer:
                              and req.tokens[-1] in req.stop_tokens
                              else "length")
         self.active[slot] = False
+        self.filling[slot] = False
+        self.fill_pos[slot] = 0
         self.req[slot] = None
         self.tok[slot] = self.pos[slot] = 0
         self.block_tables[slot] = -1
@@ -467,6 +586,87 @@ class ExpertServer:
         self.alloc.free(slot)
         self.n_served += 1
         return req.finish_reason
+
+    def _fill(self, out: list[TokenDeltaMsg]) -> None:
+        """Replay hit lanes' novel prompt suffixes through the decode
+        scatter, one position per lane per call.
+
+        Each call feeds every filling lane its next prompt token at its
+        next position (active and free lanes ride along masked at -1), so
+        the KV lands in the lane's novel blocks while the shared prefix
+        blocks are only ever read — copy-on-write by construction.  The
+        call that feeds a lane's final prompt position produces the
+        request's first token (in-program sample at counter 0, same
+        computation the batched-prefill path runs on its logits row) and
+        promotes the lane to active decode in the same tick, matching the
+        no-hit admission cadence.
+
+        ``EngineConfig.prefill_chunk_tokens`` caps the prompt tokens fed
+        per tick (0 = unlimited): a long novel suffix then spreads over
+        multiple ticks instead of stalling this tick's decode behind an
+        unbounded replay.  At least one call always runs, so progress is
+        guaranteed even with a budget below the filling-lane count.
+        Chunking cannot change tokens — the sampler is counter-based and
+        KV writes are position-addressed.
+        """
+        if not self.filling.any():
+            return
+        L = self.eng.lanes_per_expert
+        budget = self.eng.prefill_chunk_tokens
+        fed = 0
+        while self.filling.any():
+            lanes = np.nonzero(self.filling)[0]
+            pos = np.full(L, -1, np.int32)
+            toks = np.zeros(L, np.int32)
+            for slot in lanes:
+                p = int(self.fill_pos[slot])
+                pos[slot] = p
+                toks[slot] = int(self.req[slot].prompt[p])
+            if (self.temp > 0.0).any():
+                nxt, self.caches = self._decode_fn(
+                    self.params, jnp.asarray(toks[:, None]),
+                    jnp.asarray(pos[:, None]), jnp.asarray(pos),
+                    jnp.asarray(self.block_tables), self.caches,
+                    self.keys, self.steps, self.temp, self.topk, self.topp)
+            else:
+                nxt, self.caches = self._decode_greedy_fn(
+                    self.params, jnp.asarray(toks[:, None]),
+                    jnp.asarray(pos[:, None]), jnp.asarray(pos),
+                    jnp.asarray(self.block_tables), self.caches)
+            self.decode_calls += 1
+            self.occupied_lane_steps += len(lanes)
+            if self.has_pool:
+                live = sum(len(self.blocks[s]) for s in lanes)
+                per_layer = self._block_read_bytes * self._pool_layers
+                self.paged_read_bytes += live * per_layer
+                self.gathered_read_bytes += L * self.lane_blocks * per_layer
+            nxt = np.asarray(nxt).astype(np.int32)
+            fed += len(lanes)
+            for slot in lanes:
+                req = self.req[slot]
+                p = int(self.fill_pos[slot])
+                if p + 1 < len(req.prompt):
+                    self.fill_pos[slot] = p + 1
+                    continue
+                first = int(nxt[slot])
+                req.tokens.append(first)
+                self.filling[slot] = False
+                self.fill_pos[slot] = 0
+                self.active[slot] = True
+                self.tok[slot], self.pos[slot] = first, len(req.prompt)
+                self.steps[slot] = 1
+                if self.prefix is not None and not self._prefix_bypass:
+                    # every prompt position of this lane is now written
+                    # (shared blocks were, novel ones just got filled)
+                    self.prefix.register(req.prompt, self.blocks[slot])
+                done = req.max_new_tokens == 1 or first in req.stop_tokens
+                reason = self._retire(int(slot)) if done else ""
+                out.append(TokenDeltaMsg(
+                    uid=req.uid, token=first, index=0, done=done,
+                    tick=self.clock, admit_tick=req.admit_tick,
+                    finish_reason=reason))
+            if budget > 0 and fed >= budget:
+                break
 
     def _decode(self, out: list[TokenDeltaMsg]) -> None:
         if not self.active.any():

@@ -326,6 +326,18 @@ class ServeFrontend:
     def busy(self) -> bool:
         return bool(len(self.queue)) or self._transport.any_busy
 
+    @property
+    def n_unadmitted(self) -> int:
+        """Live requests that never got a decode lane (still in the
+        arrival queue, or queued inside an expert under pool pressure).
+
+        Their ``queue_ticks`` is still the 0 placeholder, so queue-wait
+        aggregates silently undercount if they are folded in — report
+        them separately instead (``run()`` surfaces this as
+        ``n_unadmitted``; mid-run ``step()`` drivers can watch it live).
+        """
+        return sum(r.admit_tick < 0 for r in self._live.values())
+
     def kv_bytes_per_expert(self) -> int:
         """Device bytes held by one expert's decode caches.
 
@@ -380,6 +392,9 @@ class ServeFrontend:
                 "prefills": sum(st.prefill_calls for st in ss),
                 "peak_blocks": max(st.peak_blocks for st in ss),
                 "queue_wait_ticks": sum(st.queue_wait_ticks for st in ss),
+                "prefix_hit_blocks": sum(st.prefix_hit_blocks for st in ss),
+                "prefill_tokens_saved": sum(st.prefill_tokens_saved
+                                            for st in ss),
                 "occupancy": sum(st.occupied_lane_steps for st in ss)
                 / max(dc * lanes, 1),
                 "replicas": self.replicas[e],
@@ -399,6 +414,16 @@ class ServeFrontend:
             "useful_tokens": useful,
             "early_stops": sum(r.finish_reason == "stop_token"
                                for r in completed),
+            "n_unadmitted": self.n_unadmitted,
+            "prefix_sharing": {
+                "enabled": self.eng.prefix_cache,
+                "hit_blocks": sum(st.prefix_hit_blocks
+                                  for st in slot_stats),
+                "prefill_tokens_saved": sum(st.prefill_tokens_saved
+                                            for st in slot_stats),
+                "cached_blocks": sum(st.cached_blocks
+                                     for st in slot_stats),
+            },
             "tokens_per_s": useful / max(wall, 1e-9),
             "mean_ttft_s": float(np.mean([r.t_first for r in completed]))
             if completed else 0.0,

@@ -2,9 +2,11 @@
 
 Host-side, pure-python: a :class:`Request` record per served sequence, a
 FIFO :class:`RequestQueue` with (simulated or wall-clock) arrival ticks,
-a :class:`SlotAllocator` free list handing out decode-lane slots, and a
-:class:`BlockAllocator` free list over the paged KV block pool (see
-:mod:`repro.serving.cache` for the device-side layout it indexes).
+a :class:`SlotAllocator` free list handing out decode-lane slots, a
+refcounting :class:`BlockAllocator` over the paged KV block pool (see
+:mod:`repro.serving.cache` for the device-side layout it indexes), and
+the :class:`PrefixCache` radix tree that lets requests with a common
+prompt prefix share full KV blocks copy-on-write.
 """
 from __future__ import annotations
 
@@ -93,19 +95,36 @@ class RequestQueue:
 
 
 class SlotAllocator:
-    """LIFO free list over ``n`` decode-lane slots."""
+    """LIFO free list over ``n`` decode-lane slots.
+
+    ``_owned`` (currently-held slots) makes :meth:`free` an O(1) check
+    and lets a bad free say *which* bug it is: freeing a slot that was
+    handed out and already returned is a double free; freeing one that
+    was never handed out is a phantom free.
+    """
 
     def __init__(self, n: int):
         self.n = n
         self._free = list(range(n - 1, -1, -1))   # pop() hands out slot 0 first
+        self._owned: set[int] = set()
+        self._ever: set[int] = set()              # ever handed out
 
     def alloc(self) -> int | None:
-        return self._free.pop() if self._free else None
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self._owned.add(slot)
+        self._ever.add(slot)
+        return slot
 
     def free(self, slot: int) -> None:
-        if not 0 <= slot < self.n or slot in self._free:
-            raise ValueError(f"bad free of slot {slot}")
-        self._free.append(slot)
+        if slot in self._owned:
+            self._owned.remove(slot)
+            self._free.append(slot)
+            return
+        if slot in self._ever:
+            raise ValueError(f"double free of slot {slot}")
+        raise ValueError(f"free of never-allocated slot {slot}")
 
     @property
     def n_free(self) -> int:
@@ -113,19 +132,25 @@ class SlotAllocator:
 
 
 class BlockAllocator:
-    """LIFO free list over ``n`` KV-pool blocks with atomic group alloc.
+    """Refcounting LIFO free list over ``n`` KV-pool blocks.
 
     A lane's whole block reservation is taken with :meth:`alloc_n` (all
     or nothing — a partially admitted request could deadlock the pool)
-    and returned with :meth:`free_n` when the lane finishes.  ``free`` of
-    a block that is not currently allocated raises, so scheduler bugs
-    surface as exceptions instead of silent cache corruption.
+    at refcount 1.  Prefix sharing adds references with :meth:`ref_n`
+    (the cache holds one ref per cached block, each lane reading a
+    shared block holds another); :meth:`free_n` drops references and a
+    block only returns to the free list at refcount 0.  Both ``free_n``
+    and ``ref_n`` validate the *whole* batch before mutating anything,
+    so a bad id mid-list raises without leaving the allocator half
+    updated.  ``free`` of a block that is not currently allocated
+    raises, so scheduler bugs surface as exceptions instead of silent
+    cache corruption.
     """
 
     def __init__(self, n: int):
         self.n = n
         self._free = list(range(n - 1, -1, -1))   # pop() hands out block 0 first
-        self._owned: set[int] = set()
+        self._refs: dict[int, int] = {}
         self.peak_in_use = 0
 
     def alloc(self) -> int | None:
@@ -139,19 +164,49 @@ class BlockAllocator:
         if len(self._free) < k:
             return None
         got = [self._free.pop() for _ in range(k)]
-        self._owned.update(got)
-        self.peak_in_use = max(self.peak_in_use, len(self._owned))
+        for b in got:
+            self._refs[b] = 1
+        self.peak_in_use = max(self.peak_in_use, len(self._refs))
         return got
 
+    def ref_n(self, blocks) -> None:
+        """Add one reference to each listed block (atomic: validates the
+        whole batch, then increments; a repeated id counts twice)."""
+        blocks = [int(b) for b in blocks]
+        for b in blocks:
+            if b not in self._refs:
+                raise ValueError(f"ref of unallocated block {b}")
+        for b in blocks:
+            self._refs[b] += 1
+
     def free(self, block: int) -> None:
-        if block not in self._owned:
-            raise ValueError(f"bad free of block {block}")
-        self._owned.remove(block)
-        self._free.append(block)
+        self.free_n([block])
 
     def free_n(self, blocks) -> None:
+        """Drop one reference per listed block; refcount 0 returns the
+        block to the free list.  Atomic: the whole batch is validated
+        first (including repeated ids exceeding a block's refcount), so
+        a bad id leaves ``n_free``/``n_in_use`` untouched."""
+        blocks = [int(b) for b in blocks]
+        drops: dict[int, int] = {}
         for b in blocks:
-            self.free(int(b))
+            drops[b] = drops.get(b, 0) + 1
+        for b, k in drops.items():
+            have = self._refs.get(b, 0)
+            if k > have:
+                raise ValueError(f"bad free of block {b}")
+        for b in blocks:                  # preserve LIFO order of the batch
+            self._refs[b] -= 1
+            if self._refs[b] == 0:
+                del self._refs[b]
+                self._free.append(b)
+
+    def refcount(self, block: int) -> int:
+        return self._refs.get(int(block), 0)
+
+    @property
+    def _owned(self) -> set[int]:
+        return set(self._refs)
 
     @property
     def n_free(self) -> int:
@@ -159,4 +214,132 @@ class BlockAllocator:
 
     @property
     def n_in_use(self) -> int:
-        return len(self._owned)
+        return len(self._refs)
+
+
+class _PrefixNode:
+    """One full prompt block in the prefix trie."""
+    __slots__ = ("chunk", "block", "children", "parent", "stamp")
+
+    def __init__(self, chunk, block, parent):
+        self.chunk = chunk                  # block_size prompt tokens (tuple)
+        self.block = block                  # pool block holding their KV
+        self.children: dict[tuple, _PrefixNode] = {}
+        self.parent = parent
+        self.stamp = 0                      # LRU clock, bumped on touch
+
+
+class PrefixCache:
+    """Per-expert radix tree mapping full prompt-prefix blocks to pool
+    blocks, enabling copy-on-write block reuse across requests.
+
+    Keys are exact ``block_size``-token tuples (no hash collisions), one
+    trie level per full block.  The cache holds its own reference on
+    every registered block (via :meth:`BlockAllocator.ref_n`), so a
+    cached block survives its writer lane retiring; each lane that
+    acquires a prefix holds one more ref per shared block.  A block with
+    refcount 1 is *cached-but-unreferenced* — reclaimable.  Eviction is
+    LRU over childless such nodes (interior nodes become eligible once
+    their children are evicted), triggered only under pool pressure.
+    """
+
+    def __init__(self, balloc: BlockAllocator, block_size: int):
+        self.balloc = balloc
+        self.block_size = int(block_size)
+        self._root = _PrefixNode(None, -1, None)
+        self._clock = 0
+        self.hits = 0                       # lifetime acquired blocks
+        self.evictions = 0
+
+    def _touch(self, node: _PrefixNode) -> None:
+        self._clock += 1
+        node.stamp = self._clock
+
+    def _walk(self, prompt) -> list[_PrefixNode]:
+        """Longest cached path for ``prompt``, capped so the prompt's
+        final position is never inside a hit (its logits must always be
+        computed to emit the first token)."""
+        bs = self.block_size
+        cap = (len(prompt) - 1) // bs
+        path, node = [], self._root
+        for i in range(cap):
+            chunk = tuple(int(t) for t in prompt[i * bs:(i + 1) * bs])
+            nxt = node.children.get(chunk)
+            if nxt is None:
+                break
+            path.append(nxt)
+            node = nxt
+        return path
+
+    def match_blocks(self, prompt) -> int:
+        """How many leading full blocks of ``prompt`` are cached."""
+        return len(self._walk(prompt))
+
+    def acquire(self, prompt) -> list[int]:
+        """Take one reference on each block of the longest cached prefix
+        and return the pool block ids (possibly empty).  The caller owns
+        the refs: pass them to ``balloc.free_n`` on lane retirement (or
+        on admission rollback)."""
+        path = self._walk(prompt)
+        if not path:
+            return []
+        blocks = [n.block for n in path]
+        self.balloc.ref_n(blocks)
+        for n in path:
+            self._touch(n)
+        self.hits += len(blocks)
+        return blocks
+
+    def register(self, prompt, blocks) -> None:
+        """Record ``prompt``'s full blocks (KV fully written) as cached.
+
+        ``blocks`` is the lane's block-table prefix covering the prompt;
+        only the first ``len(prompt) // block_size`` entries (full
+        blocks) are eligible.  Existing trie nodes win — the lane's own
+        block for an already-cached chunk is NOT swapped in (both hold
+        identical tokens' KV); new chunks take a cache-owned reference
+        on the lane's block."""
+        bs = self.block_size
+        n_full = len(prompt) // bs
+        node = self._root
+        for i in range(n_full):
+            chunk = tuple(int(t) for t in prompt[i * bs:(i + 1) * bs])
+            nxt = node.children.get(chunk)
+            if nxt is None:
+                nxt = _PrefixNode(chunk, int(blocks[i]), node)
+                self.balloc.ref_n([nxt.block])
+                node.children[chunk] = nxt
+            self._touch(nxt)
+            node = nxt
+
+    def evict(self, want_free: int) -> bool:
+        """Drop LRU cached-but-unreferenced blocks until the allocator
+        has ``want_free`` free blocks.  Returns True on success, False
+        if no evictable block remains (all cached blocks still shared
+        with live lanes)."""
+        while self.balloc.n_free < want_free:
+            victim = None
+            stack = list(self._root.children.values())
+            while stack:
+                n = stack.pop()
+                if n.children:
+                    stack.extend(n.children.values())
+                elif self.balloc.refcount(n.block) == 1:
+                    if victim is None or n.stamp < victim.stamp:
+                        victim = n
+            if victim is None:
+                return False
+            self.balloc.free_n([victim.block])
+            del victim.parent.children[victim.chunk]
+            self.evictions += 1
+        return True
+
+    @property
+    def n_blocks(self) -> int:
+        """Blocks currently held by the cache (one ref each)."""
+        count, stack = 0, list(self._root.children.values())
+        while stack:
+            n = stack.pop()
+            count += 1
+            stack.extend(n.children.values())
+        return count

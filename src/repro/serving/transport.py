@@ -54,7 +54,9 @@ from repro.serving.sampling import SamplingParams
 # Bump on ANY change to the message dataclasses below.  Each message
 # carries it, and the transports refuse to pass a mismatched message —
 # two serving builds must be upgraded together, never mixed silently.
-WIRE_VERSION = 1
+# v2: StatsMsg grew prefix_hit_blocks / prefill_tokens_saved /
+# cached_blocks (prefix-sharing KV cache).
+WIRE_VERSION = 2
 
 
 def check_version(msg):
@@ -123,7 +125,11 @@ class StatsMsg:
     gathered_read_bytes: int
     peak_blocks: int
     pending: int = 0              # queued, not yet in a lane
-    active_lanes: int = 0         # lanes currently decoding
+    active_lanes: int = 0         # lanes holding a request (decoding or
+                                  # still replaying a novel prompt suffix)
+    prefix_hit_blocks: int = 0    # KV blocks served from the prefix cache
+    prefill_tokens_saved: int = 0  # prompt tokens never (re)prefilled
+    cached_blocks: int = 0        # blocks the prefix cache holds right now
     version: int = WIRE_VERSION
 
 
@@ -225,7 +231,8 @@ class LoopbackTransport(Transport):
 
     def load(self, s):
         srv = self.servers[s]
-        return len(srv.pending) + int(srv.active.sum())
+        return (len(srv.pending) + int(srv.active.sum())
+                + int(srv.filling.sum()))
 
     def stats(self, s):
         return check_version(self.servers[s].stats())

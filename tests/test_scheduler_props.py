@@ -1,21 +1,23 @@
 """Property/fuzz suite for the host-side serving schedulers.
 
 Allocator invariants under random alloc/free interleavings (never
-double-allocate, never leak, unowned frees raise), RequestQueue
-arrival-ordering (a late-submitted early arrival pops first), and the
-prompt-length bucketing function (power-of-two ladder, monotone,
-capped).  Each property runs twice: a hypothesis-driven version (skipped
-on minimal environments via ``_hypothesis_compat``) and a seeded-rng
-version that always runs, so the invariants stay covered even without
-hypothesis.
+double-allocate, never leak, unowned frees raise), the refcounting
+lifecycle prefix sharing leans on (``ref_n``/``free_n`` interleavings
+against a reference model: refcount 0 iff the block is on the free
+list, no double-free, no leak), RequestQueue arrival-ordering (a
+late-submitted early arrival pops first), and the prompt-length
+bucketing function (power-of-two ladder, monotone, capped).  Each
+property runs twice: a hypothesis-driven version (skipped on minimal
+environments via ``_hypothesis_compat``) and a seeded-rng version that
+always runs, so the invariants stay covered even without hypothesis.
 """
 import numpy as np
 import pytest
 
 from _hypothesis_compat import given, settings, st
 from repro.serving.engine import bucket_len
-from repro.serving.scheduler import (BlockAllocator, Request, RequestQueue,
-                                     SlotAllocator)
+from repro.serving.scheduler import (BlockAllocator, PrefixCache, Request,
+                                     RequestQueue, SlotAllocator)
 
 
 # ---------------------------------------------------------------------------
@@ -74,6 +76,49 @@ def _drive_block_allocator(n, choices):
     assert a.n_free == n and a.n_in_use == 0
 
 
+def _drive_refcounts(n, choices):
+    """Refcounting lifecycle against a dict reference model: alloc_n
+    births at refcount 1, ref_n increments (sharing), free_n decrements
+    — a block returns to the free list exactly when its count hits 0."""
+    a = BlockAllocator(n)
+    model: dict[int, int] = {}            # block -> expected refcount
+    for c in choices:
+        live = sorted(model)
+        if c < 0.4:
+            k = int(c * 1000) % (n + 2)
+            got = a.alloc_n(k)
+            if len(model) + k > n:
+                assert got is None, "allocated past capacity"
+                continue
+            assert got is not None and not (set(got) & set(model))
+            for b in got:
+                assert a.refcount(b) == 1, "fresh block not at refcount 1"
+                model[b] = 1
+        elif c < 0.7 and live:
+            b = live[int(c * 1000) % len(live)]
+            reps = 1 + int(c * 10000) % 2         # duplicates count twice
+            a.ref_n([b] * reps)
+            model[b] += reps
+        elif live:
+            b = live[int(c * 1000) % len(live)]
+            reps = 1 + int(c * 10000) % 2
+            if reps > model[b]:
+                reps = model[b]
+            a.free_n([b] * reps)
+            model[b] -= reps
+            if model[b] == 0:
+                del model[b]
+        # refcount 0 <=> on the free list, counts match the model exactly
+        assert a.n_in_use == len(model), "leaked or fabricated blocks"
+        assert a.n_free == n - len(model)
+        for b in range(n):
+            assert a.refcount(b) == model.get(b, 0)
+            assert (a.refcount(b) == 0) == (b in a._free)
+    for b, k in list(model.items()):
+        a.free_n([b] * k)
+    assert a.n_free == n and a.n_in_use == 0
+
+
 def _drive_queue(arrivals):
     """arrivals: submission-ordered list of arrival ticks (arbitrary order)."""
     q = RequestQueue()
@@ -111,6 +156,12 @@ def test_prop_slot_allocator(n, choices):
 @given(st.integers(1, 32), st.lists(st.floats(0, 0.999), max_size=120))
 def test_prop_block_allocator(n, choices):
     _drive_block_allocator(n, choices)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 16), st.lists(st.floats(0, 0.999), max_size=120))
+def test_prop_block_refcounts(n, choices):
+    _drive_refcounts(n, choices)
 
 
 @settings(max_examples=50, deadline=None)
@@ -158,6 +209,12 @@ def test_fuzz_slot_allocator(seed):
 def test_fuzz_block_allocator(seed):
     rng = np.random.default_rng(100 + seed)
     _drive_block_allocator(int(rng.integers(1, 33)), rng.random(200))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_fuzz_block_refcounts(seed):
+    rng = np.random.default_rng(400 + seed)
+    _drive_refcounts(int(rng.integers(1, 17)), rng.random(200))
 
 
 @pytest.mark.parametrize("seed", range(8))
@@ -244,6 +301,89 @@ def test_alloc_n_failed_allocation_rolls_back_fully():
     a.free_n(got)
     a.free_n(held)
     assert a.n_free == 8 and a.n_in_use == 0
+
+
+def test_block_allocator_free_n_atomic():
+    """Satellite regression: a ``free_n`` batch naming ANY bad block —
+    never-allocated, out-of-range, or more drops than the block has
+    references — must raise and leave the allocator exactly as it was
+    (the old code freed list-order prefixes before noticing, leaking
+    partially-freed state that desynced ``n_free`` from the engine's
+    block tables)."""
+    a = BlockAllocator(6)
+    held = a.alloc_n(3)
+    a.ref_n([held[0]])                    # held[0] shared at refcount 2
+    never = ({0, 1, 2, 3, 4, 5} - set(held)).pop()
+    before = (list(a._free), {b: a.refcount(b) for b in range(6)})
+    for bad in ([held[1], never],         # valid then never-allocated
+                [never, held[1]],         # bad id first
+                [held[1], held[1]],       # drops exceed refcount 1
+                [held[0]] * 3,            # drops exceed refcount 2
+                [held[2], 99]):           # out of range
+        with pytest.raises(ValueError):
+            a.free_n(bad)
+        assert a._free == before[0], f"free_n({bad}) mutated the free list"
+        assert {b: a.refcount(b) for b in range(6)} == before[1]
+        assert a.n_free == 3 and a.n_in_use == 3
+    a.free_n([held[0], held[0]])          # both refs in one batch is fine
+    a.free_n([held[1], held[2]])
+    assert a.n_free == 6 and a.n_in_use == 0
+
+
+def test_slot_allocator_distinguishes_double_free():
+    """Satellite: freeing a previously-owned slot twice and freeing a
+    slot that was never handed out are different bugs — the error must
+    say which one happened."""
+    a = SlotAllocator(4)
+    s = a.alloc()
+    a.free(s)
+    with pytest.raises(ValueError, match="double free"):
+        a.free(s)
+    fresh = next(x for x in range(4) if x != s)
+    with pytest.raises(ValueError, match="never-allocated"):
+        a.free(fresh)
+    with pytest.raises(ValueError, match="never-allocated"):
+        a.free(99)                        # out of range is never-allocated
+
+
+def test_prefix_cache_refcount_lifecycle():
+    """register takes a cache-owned ref; acquire adds a per-lane ref;
+    eviction only touches refcount-1 (cache-only) leaves, LRU-first."""
+    balloc = BlockAllocator(8)
+    pc = PrefixCache(balloc, block_size=4)
+    prompt = np.arange(9, dtype=np.int32)          # 2 full blocks + 1 tail
+    lane = balloc.alloc_n(3)
+    pc.register(prompt, lane)
+    assert pc.n_blocks == 2                        # tail block not cached
+    assert [balloc.refcount(b) for b in lane] == [2, 2, 1]
+    assert pc.match_blocks(prompt) == 2
+    # a sharer: acquire bumps the cached blocks, caller owns those refs
+    got = pc.acquire(prompt)
+    assert got == lane[:2]
+    assert [balloc.refcount(b) for b in lane] == [3, 3, 1]
+    # a one-block prompt can never hit: its only full block holds the
+    # last prompt position, which must be computed to emit token 0
+    assert pc.match_blocks(prompt[:4]) == 0
+    # nothing evictable while the cache's blocks are shared with lanes
+    balloc.free_n(got)                             # sharer retires
+    pc2_prompt = np.arange(100, 106, dtype=np.int32)   # 1 full block + tail
+    lane2 = balloc.alloc_n(2)
+    pc.register(pc2_prompt, lane2)                 # younger single-block entry
+    balloc.free_n(lane)                            # first lane retires too
+    balloc.free_n(lane2)
+    # pool: 3 cached blocks all at refcount 1, 5 free; ask for 7 free —
+    # LRU evicts the older chain (deep leaf first), keeps the young one
+    assert pc.evict(7) is True
+    assert balloc.n_free == 7 and pc.n_blocks == 1
+    assert pc.match_blocks(prompt) == 0
+    assert pc.match_blocks(pc2_prompt) == 1
+    # asking beyond what eviction can reach reports failure, not a hang
+    held = balloc.alloc_n(1)
+    pc3 = np.arange(200, 205, dtype=np.int32)
+    pc.register(pc3, held)
+    assert pc.evict(8) is False                    # held still referenced
+    balloc.free_n(held)
+    assert pc.evict(8) is True and balloc.n_free == 8
 
 
 def test_request_queue_ticks_guard():

@@ -117,10 +117,11 @@ def test_staggered_arrival_slot_reuse_and_eviction(mixture):
     res = eng.run()
     assert len(res["requests"]) == R
     # every lane drained, block tables cleared, free lists whole again
+    # (the prefix cache may retain blocks — each accounted by one ref)
     for st in eng._experts:
         assert not st.active.any() and not st.pending
         assert st.alloc.n_free == lanes
-        assert st.balloc.n_in_use == 0
+        assert st.balloc.n_in_use == st.cached_blocks
         assert (st.block_tables == -1).all()
     # with R > total lanes somebody had to wait for an eviction
     assert any(r.queue_ticks > 0 for r in res["requests"])
@@ -396,7 +397,8 @@ def test_fuzz_engine_matches_baseline(mixture, seed):
             np.asarray(r.tokens), want,
             err_msg=f"seed {seed} uid {r.uid} pool {pool}")
     for st in eng._experts:                   # no leaks, trial after trial
-        assert st.balloc.n_in_use == 0 and st.alloc.n_free == lanes
+        assert st.balloc.n_in_use == st.cached_blocks
+        assert st.alloc.n_free == lanes
 
 
 # ---------------------------------------------------------------------------
@@ -496,9 +498,9 @@ def test_early_stop_frees_blocks_same_tick_under_pool_pressure(mixture):
         done = eng.step()
     assert A in done
     # the tick A stopped, its blocks are already back in the pool (B has
-    # not been admitted yet, so nothing else can be holding them)
+    # not been admitted yet, so only the prefix cache may retain any)
     assert not B.done and B.admit_tick < 0
-    assert st.balloc.n_in_use == 0
+    assert st.balloc.n_in_use == st.cached_blocks
     assert A.finish_reason == "stop_token" and len(A.tokens) == j + 1
     eng.run()
     assert B.admit_tick == A.finish_tick + 1      # admitted with A's blocks
@@ -599,7 +601,8 @@ def test_fuzz_sampled_engine_matches_baseline(mixture, seed):
     assert res["early_stops"] == sum(r.finish_reason == "stop_token"
                                      for r in reqs)
     for st in eng._experts:                   # no leaks, trial after trial
-        assert st.balloc.n_in_use == 0 and st.alloc.n_free == lanes
+        assert st.balloc.n_in_use == st.cached_blocks
+        assert st.alloc.n_free == lanes
 
 
 def test_engine_decode_impl_pallas_matches_baseline(mixture):
@@ -652,6 +655,117 @@ def test_lane_placement_invariance(mixture):
     assert crowd.tokens == solo.tokens
     want = _oracle(mixture, prompt, solo.expert, 6, sampling=sp, uid=solo.uid)
     np.testing.assert_array_equal(np.asarray(solo.tokens), want)
+
+
+# ---------------------------------------------------------------------------
+# Prefix-sharing fuzz: shared system prompts, chunked suffix replay, and
+# cache pressure — tokens must stay bitwise identical to the oracle
+# ---------------------------------------------------------------------------
+N_PREFIX_TRIALS = 12
+
+
+@pytest.mark.parametrize("seed", range(N_PREFIX_TRIALS))
+def test_fuzz_shared_prefix_matches_baseline(mixture, seed):
+    """Every request opens with the same "system prompt": admissions
+    after the first per expert take the cached leading blocks and replay
+    only the novel suffix through the decode path (chunked when
+    ``prefill_chunk_tokens`` is small — odd trials use 1- and 3-token
+    chunks, so one admission spans many ticks).  Tokens must stay
+    bitwise identical to the one-shot oracle — greedy and sampled mixed,
+    stop sets included — under full pools AND block pressure (where the
+    cache itself must be evicted to admit), and the run must report real
+    cache traffic (saved prefill tokens > 0: the shared head routes
+    every request to one expert, whose lanes are outnumbered)."""
+    rng = np.random.default_rng(7000 + seed)
+    lanes = 2
+    pool = FULL_POOL if seed % 2 == 0 else MAXLEN // BS + 2
+    chunk = int(rng.choice([0, 1, 3, BS]))    # 0 = whole suffix in one tick
+    sys_len = int(rng.choice([BS, BS + 5, 2 * BS]))
+    system = rng.integers(0, ECFG.vocab_size, size=sys_len).astype(np.int32)
+    R = int(rng.integers(4, 7))
+    prompts, n_new, sps, stops = [], [], [], []
+    for _ in range(R):
+        tail = rng.integers(0, ECFG.vocab_size,
+                            size=int(rng.integers(1, 13))).astype(np.int32)
+        prompts.append(np.concatenate([system, tail]))
+        n_new.append(int(min(rng.integers(1, 7),
+                             MAXLEN - len(prompts[-1]))))
+        sps.append(_random_sampling(rng))
+        stops.append(frozenset(
+            int(t) for t in rng.integers(0, ECFG.vocab_size, size=8))
+            if rng.random() < 0.4 else frozenset())
+    eng = _engine(mixture, lanes=lanes, pool_blocks=pool,
+                  prefill_chunk_tokens=chunk)
+    reqs = [eng.submit(prompts[i], n_new[i], sampling=sps[i],
+                       stop_tokens=stops[i],
+                       arrival_tick=int(rng.integers(0, 4)))
+            for i in range(R)]
+    res = eng.run()
+    assert len(res["requests"]) == R
+    for r in res["requests"]:
+        want = _oracle(mixture, prompts[r.uid], r.expert, n_new[r.uid],
+                       sampling=sps[r.uid], uid=r.uid,
+                       stop_tokens=stops[r.uid])
+        np.testing.assert_array_equal(
+            np.asarray(r.tokens), want,
+            err_msg=f"seed {seed} uid {r.uid} chunk {chunk} pool {pool}")
+    ps = res["prefix_sharing"]
+    assert ps["enabled"]
+    # the identical PREFIX-token head routes all R requests to ONE
+    # expert with 2 lanes, so at least one admission found the system
+    # prompt's leading block(s) cached
+    assert len({r.expert for r in reqs}) == 1
+    assert ps["hit_blocks"] > 0 and ps["prefill_tokens_saved"] > 0
+    assert ps["prefill_tokens_saved"] == BS * ps["hit_blocks"]
+    assert res["n_unadmitted"] == 0           # run() drains everything
+    for st in eng._experts:                   # no leaks, trial after trial
+        assert st.balloc.n_in_use == st.cached_blocks
+        assert st.alloc.n_free == lanes
+
+
+def test_prefix_cache_off_still_matches_baseline(mixture):
+    """``prefix_cache=False`` is the paranoia escape hatch: same shared-
+    prompt workload, zero cache traffic, tokens still oracle-exact."""
+    rng = np.random.default_rng(7777)
+    system = rng.integers(0, ECFG.vocab_size, size=2 * BS).astype(np.int32)
+    prompts = [np.concatenate([system, rng.integers(
+        0, ECFG.vocab_size, size=4 + i).astype(np.int32)]) for i in range(4)]
+    eng = _engine(mixture, lanes=2, prefix_cache=False)
+    for i, p in enumerate(prompts):
+        eng.submit(p, 4)
+    res = eng.run()
+    ps = res["prefix_sharing"]
+    assert not ps["enabled"]
+    assert ps["hit_blocks"] == 0 == ps["prefill_tokens_saved"]
+    assert all(st.cached_blocks == 0 for st in eng._experts)
+    for r in res["requests"]:
+        want = _oracle(mixture, prompts[r.uid], r.expert, 4)
+        np.testing.assert_array_equal(np.asarray(r.tokens), want)
+
+
+def test_n_unadmitted_counts_requests_without_a_lane(mixture):
+    """Satellite: requests still waiting for a lane (queued on arrival
+    tick or on pool blocks) show up in ``n_unadmitted`` mid-run, keeping
+    them out of the queue-wait aggregates, and drop to 0 once drained."""
+    rng = np.random.default_rng(88)
+    system = rng.integers(0, ECFG.vocab_size, size=PREFIX).astype(np.int32)
+    mk = lambda n: np.concatenate(
+        [system, rng.integers(0, ECFG.vocab_size, size=n).astype(np.int32)])
+    # one lane, minimal legal pool: B cannot be admitted while A decodes
+    eng = _engine(mixture, lanes=1, pool_blocks=MAXLEN // BS)
+    a = eng.submit(mk(8), 6, arrival_tick=0)
+    b = eng.submit(mk(4), 2, arrival_tick=0)
+    late = eng.submit(mk(2), 1, arrival_tick=10 ** 6)   # far-future arrival
+    assert eng.n_unadmitted == 3              # nothing routed yet
+    eng.step()
+    assert a.admit_tick >= 0 and b.admit_tick < 0
+    assert eng.n_unadmitted == 2              # b (pool), late (arrival)
+    while b.admit_tick < 0:
+        eng.step()
+    assert eng.n_unadmitted == 1              # only the far-future one
+    res = eng.run()
+    assert res["n_unadmitted"] == 0
+    assert [len(r.tokens) for r in (a, b, late)] == [6, 2, 1]
 
 
 # ---------------------------------------------------------------------------

@@ -246,6 +246,35 @@ def test_parse_replicas_spec():
         parse_replicas("0:2,0:3")
 
 
+def test_duplicate_replicas_rejected_by_every_frontend(capsys):
+    """Satellite: ``--replicas 0:2,0:3`` (one expert, two counts) must
+    die at argument parsing in all three front-ends — and since
+    :class:`ReplicaSpecError` is also an ``argparse.ArgumentTypeError``,
+    the "names expert 0 twice" diagnosis reaches stderr instead of being
+    swallowed into argparse's generic "invalid value"."""
+    import importlib
+    import pathlib
+    import sys
+    root = pathlib.Path(__file__).resolve().parents[1]
+    for extra in ("examples", "benchmarks"):
+        p = str(root / extra)
+        if p not in sys.path:
+            sys.path.append(p)
+    parsers = {
+        "launch": importlib.import_module("repro.launch.serve").build_parser,
+        "example": importlib.import_module("serve_mixture").build_parser,
+        "bench": importlib.import_module("serve_bench").build_parser,
+    }
+    for name, build in parsers.items():
+        ap = build()
+        with pytest.raises(SystemExit):
+            ap.parse_args(["--replicas", "0:2,0:3"])
+        err = capsys.readouterr().err
+        assert "twice" in err and "expert 0" in err, (name, err)
+        # a well-formed spec still parses identically everywhere
+        assert build().parse_args(["--replicas", "1:2"]).replicas == {1: 2}
+
+
 # ---------------------------------------------------------------------------
 # process transport (slow: one spawned jax worker per slot)
 # ---------------------------------------------------------------------------

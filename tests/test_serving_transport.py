@@ -120,8 +120,56 @@ def test_expert_server_early_stop_returns_blocks_same_tick(mixture):
     assert [d.done for d in deltas] == [True]
     assert deltas[0].finish_reason == "stop_token"
     assert deltas[0].admit_tick == deltas[0].tick
-    assert srv.balloc.n_in_use == 0 and srv.alloc.n_free == lanes
+    assert srv.balloc.n_in_use == srv.cached_blocks
+    assert srv.alloc.n_free == lanes
     assert not srv.busy
+
+
+def test_expert_server_prefix_hit_then_evict_under_pressure(mixture):
+    """Deterministic cache lifecycle on a bare 1-lane server with the
+    minimum legal pool (3 blocks): a second request sharing the first's
+    full 2-block prompt admits off the cache (prefilling only its novel
+    suffix via decode replay), then an unrelated request under pool
+    pressure forces LRU eviction of those cached blocks — tokens stay
+    oracle-exact at every stage and the StatsMsg counters tell the
+    story."""
+    import dataclasses
+    expert_params, _ = mixture
+    rng = np.random.default_rng(53)
+    eng1 = dataclasses.replace(ENG, lanes_per_expert=1,
+                               pool_blocks=MAXLEN // BS)
+    srv = ExpertServer(ECFG, expert_params[0], eng1)
+    system = rng.integers(0, ECFG.vocab_size, size=2 * BS).astype(np.int32)
+
+    def serve(uid, prompt, n_new=4):
+        srv.enqueue(_msg(uid, prompt, n_new))
+        toks = [d.token for d in _drain(srv)]
+        np.testing.assert_array_equal(
+            np.asarray(toks), _oracle(expert_params[0], prompt, n_new,
+                                      uid=uid))
+
+    serve(0, system)                          # cold: registers both blocks
+    assert srv.prefix_hit_blocks == 0 and srv.cached_blocks == 2
+    follow = np.concatenate(
+        [system, rng.integers(0, ECFG.vocab_size, size=8).astype(np.int32)])
+    assert srv.prefix.match_blocks(follow) == 2
+    serve(1, follow)                          # warm: 2 of 3 blocks cached
+    assert srv.prefix_hit_blocks == 2
+    assert srv.prefill_tokens_saved == 2 * BS
+    st = srv.stats()
+    assert isinstance(st, StatsMsg)
+    assert st.prefix_hit_blocks == 2 and st.prefill_tokens_saved == 2 * BS
+    assert st.cached_blocks == 2
+    # an unrelated max-size request needs all 3 blocks: only eviction of
+    # the (now unreferenced) cached pair can free them
+    other = rng.integers(0, ECFG.vocab_size, size=2 * BS).astype(np.int32)
+    serve(2, other)
+    assert srv.prefix.match_blocks(follow) == 0      # old chain evicted
+    assert srv.prefix.match_blocks(
+        np.concatenate([other, other[:1]])) == 2     # new chain cached
+    assert srv.prefix_hit_blocks == 2                # eviction != a hit
+    assert srv.balloc.n_in_use == srv.cached_blocks == 2
+    assert srv.alloc.n_free == 1 and not srv.busy
 
 
 def test_expert_server_clock_syncs_forward_only(mixture):
