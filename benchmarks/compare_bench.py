@@ -17,6 +17,11 @@ BENCH trajectory is *gated*, not just uploaded:
     shared-prefix workload) must report ``prefill_tokens_saved > 0``
     while the token-identity gates above stay green — the cache must
     actually shortcut prefill work AND must not change a single token;
+  * a v5 ``two_frontend`` section (present on ``--transport tcp`` runs:
+    two stateless frontends sharing one worker fleet) must report
+    distinct leased uid namespaces, ``uids_disjoint`` and
+    ``tokens_identical`` — any cross-frontend stream corruption is a
+    hard failure;
   * engine tokens/sec must stay within ``--min-ratio`` of the baseline —
     generous by default because shared CI runners are noisy; the full
     delta table lands in ``$GITHUB_STEP_SUMMARY`` either way.
@@ -91,6 +96,26 @@ ROWS = [
     ("unadmitted requests", "n_unadmitted"),
 ]
 
+
+def check_two_frontend(fresh: dict) -> list[str]:
+    """Structural gates on the v5 ``two_frontend`` section (present on
+    tcp runs): the two stateless frontends must have leased distinct uid
+    namespaces, allocated disjoint uid ranges, and produced tokens
+    identical to the serial reference."""
+    tf = fresh.get("two_frontend")
+    if tf is None:
+        return []
+    failures = []
+    spaces = tf.get("namespaces") or []
+    if len(spaces) != len(set(spaces)):
+        failures.append(f"two-frontend run leased colliding uid "
+                        f"namespaces {spaces}")
+    if tf.get("uids_disjoint") is not True:
+        failures.append("two-frontend run allocated overlapping uids")
+    if tf.get("tokens_identical") is not True:
+        failures.append("token-identity gate failed (two-frontend run)")
+    return failures
+
 # every per-expert entry of an open_loop run must carry the full latency
 # quartet — a v3 report that dropped one silently would still "compare"
 _LATENCY_KEYS = ("ttft_p50_ms", "ttft_p99_ms", "itl_p50_ms", "itl_p99_ms")
@@ -136,7 +161,11 @@ def delta_table(fresh: dict, base: dict) -> str:
         lines.append(f"| {label} | {_fmt(b)} | {_fmt(f)} | {delta} |")
     gates = [("tokens_identical", _get(fresh, "tokens_identical")),
              ("smoke_sampled.tokens_identical",
-              _get(fresh, "smoke_sampled.tokens_identical"))]
+              _get(fresh, "smoke_sampled.tokens_identical")),
+             ("two_frontend.tokens_identical",
+              _get(fresh, "two_frontend.tokens_identical")),
+             ("two_frontend.uids_disjoint",
+              _get(fresh, "two_frontend.uids_disjoint"))]
     lines.append("")
     lines.append("gates: " + ", ".join(
         f"`{name}` = {val}" for name, val in gates if val is not None))
@@ -191,6 +220,7 @@ def main() -> int:
         failures.append(f"paged decode reads ({rb['paged']} B/tick) not "
                         f"below gathered ({rb['gathered']} B/tick)")
     failures.extend(check_open_loop(fresh))
+    failures.extend(check_two_frontend(fresh))
     ps = fresh.get("prefix_sharing")
     if ps is not None and ps.get("enabled") and \
             _get(fresh, "workload.shared_prefix_len"):

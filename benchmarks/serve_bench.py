@@ -33,6 +33,16 @@ overhead, dominates — wasted lane-tokens then cost real wall time.
 (the multi-host story proven on one machine: pickled request/token
 messages over pipes are the only cross-expert traffic) — the identity
 gates must hold there exactly as on the in-process loopback default.
+``--transport tcp`` goes one further: expert workers are discovered
+through a ``repro.serving.net`` registry and reached over raw TCP, and
+the bench self-starts a local fleet (registry + one worker process per
+expert, via the real module CLIs) when ``--registry`` is omitted.  The
+same identity gates apply bitwise, and a **two-frontend** section
+connects two stateless frontends to the one fleet concurrently — each
+leases its own uid namespace from the registry, they split the workload
+and decode interleaved, and the bench hard-fails on any uid collision
+or token deviation from the serial reference (zero cross-frontend
+stream corruption).
 
 Every prompt shares its leading ``--shared-prefix-len`` tokens (default
 half the prompt) — the prefix-sharing workload: each expert's radix
@@ -50,10 +60,9 @@ tick (the chunked-admission state machine).
 (greedy under pool pressure, batched-admission prefill budget, AND a
 sampled + early-stop gate) run in CI on every push; the speedup exit
 check is skipped there because tiny models are dispatch-bound.  The
-``--json`` report follows the ``BENCH_serve/v4`` schema (v3 + the
-prefix_sharing section, ``n_unadmitted``, and the shared-prefix
-workload knobs), persisted as a CI artifact so the perf trajectory
-accumulates.
+``--json`` report follows the ``BENCH_serve/v5`` schema (v4 + the
+``two_frontend`` section and ``"tcp"`` as a transport value), persisted
+as a CI artifact so the perf trajectory accumulates.
 
 ``--open-loop`` adds the production-facing workload the closed-loop
 sections cannot measure: **Poisson arrivals** (``--arrival-rate``
@@ -72,6 +81,7 @@ counter-based per ``(seed, uid, step)``).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import sys
 import time
@@ -84,8 +94,7 @@ from repro.configs.base import ModelConfig
 from repro.core import router as routerlib
 from repro.data import DataConfig, SyntheticCorpus
 from repro.models import model as modellib
-from repro.serving import (EngineConfig, SamplingParams, ServeFrontend,
-                           baseline)
+from repro.serving import SamplingParams, ServeFrontend, baseline
 from repro.serving import cache as cachelib
 from repro.serving import cli as servecli
 
@@ -168,14 +177,11 @@ def open_loop_run(ecfg, rcfg, expert_params, router_params, args, max_len,
     — the thing replication relieves — is what TTFT measures, not block
     pressure.
     """
-    eng_cfg = EngineConfig(lanes_per_expert=args.lanes, max_len=max_len,
-                           prefix_len=args.prompt_len,
-                           min_prefill_bucket=args.prompt_len,
-                           block_size=args.block_size,
-                           decode_impl=args.decode_impl,
-                           transport=args.transport,
-                           prefix_cache=not args.no_prefix_cache,
-                           prefill_chunk_tokens=args.prefill_chunk_tokens)
+    eng_cfg = dataclasses.replace(
+        servecli.engine_config_from_args(args, max_len=max_len,
+                                         prefix_len=args.prompt_len,
+                                         min_prefill_bucket=args.prompt_len),
+        pool_blocks=0)
     with ServeFrontend(ecfg, rcfg, expert_params, router_params, eng_cfg,
                        replicas=replicas) as eng:
         eng.warmup(args.prompt_len, sampled=sampling.temperature > 0)
@@ -277,7 +283,35 @@ def main() -> int:
     else:
         ecfg, rcfg = EXPERT, ROUTER
     assert args.requests >= 8 and args.experts >= 2, "workload too small"
+    max_len = -(-(args.prompt_len + args.max_new) // args.block_size) \
+        * args.block_size                 # round lane budget up to blocks
 
+    fleet = None
+    if args.transport == "tcp" and not args.registry:
+        # no --registry given: boot a local fleet through the real module
+        # CLIs (one registry + one expert_worker process per expert); the
+        # workers re-derive their params from --seed exactly like build().
+        # The spec config carries the engine *shape*; its transport field
+        # is neutralized because workers are servers, not tcp clients.
+        from repro.serving.net.fleet import LocalFleet
+        spec_cfg = dataclasses.replace(
+            servecli.engine_config_from_args(
+                args, max_len=max_len, prefix_len=args.prompt_len,
+                min_prefill_bucket=args.prompt_len),
+            transport="loopback", registry="")
+        fleet = LocalFleet(ecfg, spec_cfg, args.experts, seed=args.seed,
+                           warmup_len=args.prompt_len)
+        args.registry = fleet.registry_addr
+        print(f"local worker fleet up: registry {fleet.registry_addr}, "
+              f"{args.experts} expert workers")
+    try:
+        return run_bench(args, ecfg, rcfg, max_len)
+    finally:
+        if fleet is not None:
+            fleet.close()
+
+
+def run_bench(args, ecfg, rcfg, max_len: int) -> int:
     expert_params, router_params = build(ecfg, rcfg, args.experts, args.seed)
     corpus = SyntheticCorpus(DataConfig(vocab_size=ecfg.vocab_size,
                                         seq_len=args.prompt_len,
@@ -293,8 +327,6 @@ def main() -> int:
         prompts[:, :shared_len] = prompts[0, :shared_len]
     rng = np.random.default_rng(args.seed)
     n_new = rng.integers(args.min_new, args.max_new + 1, size=args.requests)
-    max_len = -(-(args.prompt_len + args.max_new) // args.block_size) \
-        * args.block_size                 # round lane budget up to blocks
     prefix_len = args.prompt_len
 
     # ---- generation recipe (shared by both paths) -------------------------
@@ -324,19 +356,16 @@ def main() -> int:
 
     # ---- engine: continuous batching over the paged pool ------------------
     # context managers cover every early-failure return below: worker
-    # processes (process transport) are released on all exit paths
-    with ServeFrontend(
-            ecfg, rcfg, expert_params, router_params,
-            EngineConfig(lanes_per_expert=args.lanes, max_len=max_len,
-                         prefix_len=prefix_len,
-                         min_prefill_bucket=args.prompt_len,
-                         block_size=args.block_size,
-                         pool_blocks=args.blocks_per_expert,
-                         decode_impl=args.decode_impl,
-                         transport=args.transport,
-                         prefix_cache=not args.no_prefix_cache,
-                         prefill_chunk_tokens=args.prefill_chunk_tokens),
-            replicas=args.replicas) as eng:
+    # processes (process transport) are released on all exit paths.
+    # uid_namespace=0 pins engine uids to 0..N-1 — the serial oracle's —
+    # so sampled tokens (a pure function of (seed, uid, step)) stay
+    # bitwise comparable even on tcp, where a frontend would otherwise
+    # lease a namespace from the registry.
+    eng_cfg = servecli.engine_config_from_args(
+        args, max_len=max_len, prefix_len=prefix_len,
+        min_prefill_bucket=args.prompt_len)
+    with ServeFrontend(ecfg, rcfg, expert_params, router_params, eng_cfg,
+                       replicas=args.replicas, uid_namespace=0) as eng:
         # warmup: compile every admission batch width the timed run can
         # hit (routing-independent — see MixtureServeEngine.warmup);
         # greedy mode skips the sampled warmup pass it would never use
@@ -358,13 +387,16 @@ def main() -> int:
     speedup = res["tokens_per_s"] / serial["tokens_per_s"]
     dense = dense_slab_bytes(ecfg, args.lanes, max_len)
     report = {
-        # v4 (PR 7): adds the prefix_sharing section (hit blocks, prefill
-        # tokens saved, cached blocks), n_unadmitted, and the shared-
-        # prefix workload knobs; v3 (PR 6) added open_loop + per-replica
-        # breakdowns; v2 (PR 5) added "transport" + per-expert
-        # queue_wait_ticks / occupancy; compare_bench.py accepts a newer
-        # fresh report against an older baseline (added keys only)
-        "schema": "BENCH_serve/v4",
+        # v5 (PR 8): "transport" may now be "tcp" (registry-discovered
+        # network worker fleet) and the two_frontend section gates two
+        # replicated stateless frontends on one fleet; v4 (PR 7) added
+        # the prefix_sharing section (hit blocks, prefill tokens saved,
+        # cached blocks), n_unadmitted, and the shared-prefix workload
+        # knobs; v3 (PR 6) added open_loop + per-replica breakdowns; v2
+        # (PR 5) added "transport" + per-expert queue_wait_ticks /
+        # occupancy; compare_bench.py accepts a newer fresh report
+        # against an older baseline (added keys only)
+        "schema": "BENCH_serve/v5",
         "mode": args.mode,
         "transport": args.transport,
         "workload": {"requests": args.requests, "experts": args.experts,
@@ -459,8 +491,66 @@ def main() -> int:
         print("FAIL: shared-prefix workload saved no prefill tokens")
         return emit(1)
 
+    # ---- two stateless frontends sharing one tcp worker fleet -------------
+    if args.transport == "tcp":
+        # each frontend leases its own uid namespace from the registry,
+        # the workload splits even/odd across them, and they decode
+        # interleaved against the same workers: any uid collision or
+        # token deviation is cross-frontend stream corruption.  Greedy
+        # submissions, so tokens are uid-independent and the serial
+        # reference covers both halves regardless of namespace.
+        ref = serial if args.mode == "greedy" else baseline.serve_serial(
+            ecfg, rcfg, expert_params, router_params, prompts, n_new,
+            prefix_len=prefix_len, cache_len=max_len)
+        with ServeFrontend(ecfg, rcfg, expert_params, router_params,
+                           eng_cfg) as fa, \
+                ServeFrontend(ecfg, rcfg, expert_params, router_params,
+                              eng_cfg) as fb:
+            fa.warmup(args.prompt_len, sampled=False)
+            ra = [(i, fa.submit(prompts[i], int(n_new[i]),
+                                arrival_tick=fa.tick))
+                  for i in range(0, args.requests, 2)]
+            rb = [(i, fb.submit(prompts[i], int(n_new[i]),
+                                arrival_tick=fb.tick))
+                  for i in range(1, args.requests, 2)]
+            while fa.busy or fb.busy:
+                if fa.busy:
+                    fa.step()
+                if fb.busy:
+                    fb.step()
+            spaces = [fa.uid_namespace, fb.uid_namespace]
+        uids_a = {r.uid for _, r in ra}
+        uids_b = {r.uid for _, r in rb}
+        bad2f = [i for i, r in ra + rb
+                 if r.expert != ref["routes"][i]
+                 or not np.array_equal(np.asarray(r.tokens),
+                                       ref["tokens"][i])]
+        report["two_frontend"] = {
+            "namespaces": spaces,
+            "uids_disjoint": not (uids_a & uids_b),
+            "tokens_identical": not bad2f,
+        }
+        print(f"two frontends, one fleet: namespaces {spaces}, "
+              f"{len(ra)}+{len(rb)} requests interleaved, uids disjoint: "
+              f"{not (uids_a & uids_b)}, tokens identical: {not bad2f}")
+        if uids_a & uids_b:
+            print(f"FAIL: cross-frontend uid collision on "
+                  f"{sorted(uids_a & uids_b)[:8]}")
+            return emit(1)
+        if bad2f:
+            print(f"FAIL: two-frontend token mismatch on requests "
+                  f"{bad2f[:8]}")
+            return emit(1)
+
     # ---- open-loop skewed latency workload --------------------------------
-    if args.open_loop:
+    if args.open_loop and args.transport == "tcp":
+        # the open-loop runs re-shape the KV pool (full pool) and the
+        # replica set per run, but a tcp fleet is booted once with fixed
+        # workers — replication latency is measured on the in-process
+        # transports
+        print("note: open-loop latency workload skipped on --transport "
+              "tcp (pool shape and replica set are fixed at worker boot)")
+    elif args.open_loop:
         ol_rng = np.random.default_rng(args.seed + 1)
         ol_prompts, ol_new, ol_arrivals, hot = open_loop_workload(
             rcfg, router_params, corpus, args, ol_rng)
@@ -509,46 +599,54 @@ def main() -> int:
                       f"hot-expert p99 TTFT ({p99_r}ms >= {p99_1}ms)")
                 return emit(1)
     if args.smoke:
-        # the pressured pool above serializes admission, so the batching
-        # bound needs a second, full-pool engine: k_e simultaneous
-        # arrivals per expert must cost <= ceil(k_e / lanes) prefills
-        with ServeFrontend(
-                ecfg, rcfg, expert_params, router_params,
-                EngineConfig(lanes_per_expert=args.lanes, max_len=max_len,
-                             prefix_len=prefix_len,
-                             min_prefill_bucket=args.prompt_len,
-                             block_size=args.block_size,
-                             decode_impl=args.decode_impl,
-                             transport=args.transport,
-                             prefix_cache=not args.no_prefix_cache,
-                             prefill_chunk_tokens=
-                             args.prefill_chunk_tokens)) as eng2:
-            eng2.warmup(args.prompt_len, sampled=False)
-            # uniform budget: lanes then free together, so admission
-            # drains `lanes` requests per prefill and the ceil bound is
-            # tight (greedy, no stops: the budget must stay tight, so the
-            # reference is its own greedy serial run, independent of --mode)
-            uniform = args.min_new
-            ref2 = baseline.serve_serial(
-                ecfg, rcfg, expert_params, router_params, prompts,
-                np.full(args.requests, uniform), prefix_len=prefix_len,
-                cache_len=max_len)
-            reqs = [eng2.submit(prompts[i], uniform, arrival_tick=eng2.tick)
-                    for i in range(args.requests)]
-            res2 = eng2.run()
-        # per-expert stats come from the run report (StatsMsg across the
-        # transport), so this gate holds for process-backed experts too
-        for e, st in res2["per_expert"].items():
-            k_e = sum(1 for r in reqs if r.expert == e)
-            if st["prefills"] > -(-k_e // args.lanes):
-                print(f"FAIL: expert {e} took {st['prefills']} prefill "
-                      f"calls for {k_e} simultaneous arrivals "
-                      f"(bound ceil(k/lanes) = {-(-k_e // args.lanes)})")
+        if args.transport == "tcp":
+            # the full-pool admission-budget engine needs pool_blocks=0,
+            # but a tcp fleet's pool shape is fixed at worker boot — the
+            # bound is pool-shape-dependent, not transport-dependent, and
+            # CI pins it on the in-process transports
+            print("note: full-pool admission-budget gate skipped on "
+                  "--transport tcp (pool shape is fixed at worker boot)")
+            budget = "budget gate pinned on in-process transports"
+        else:
+            # the pressured pool above serializes admission, so the
+            # batching bound needs a second, full-pool engine: k_e
+            # simultaneous arrivals per expert must cost <=
+            # ceil(k_e / lanes) prefills
+            with ServeFrontend(ecfg, rcfg, expert_params, router_params,
+                               dataclasses.replace(eng_cfg, pool_blocks=0),
+                               uid_namespace=0) as eng2:
+                eng2.warmup(args.prompt_len, sampled=False)
+                # uniform budget: lanes then free together, so admission
+                # drains `lanes` requests per prefill and the ceil bound
+                # is tight (greedy, no stops: the budget must stay tight,
+                # so the reference is its own greedy serial run,
+                # independent of --mode)
+                uniform = args.min_new
+                ref2 = baseline.serve_serial(
+                    ecfg, rcfg, expert_params, router_params, prompts,
+                    np.full(args.requests, uniform), prefix_len=prefix_len,
+                    cache_len=max_len)
+                reqs = [eng2.submit(prompts[i], uniform,
+                                    arrival_tick=eng2.tick)
+                        for i in range(args.requests)]
+                res2 = eng2.run()
+            # per-expert stats come from the run report (StatsMsg across
+            # the transport), so this gate holds for process-backed
+            # experts too
+            for e, st in res2["per_expert"].items():
+                k_e = sum(1 for r in reqs if r.expert == e)
+                if st["prefills"] > -(-k_e // args.lanes):
+                    print(f"FAIL: expert {e} took {st['prefills']} prefill "
+                          f"calls for {k_e} simultaneous arrivals "
+                          f"(bound ceil(k/lanes) = {-(-k_e // args.lanes)})")
+                    return emit(1)
+            if any(not np.array_equal(np.asarray(r.tokens),
+                                      ref2["tokens"][i])
+                   for i, r in enumerate(reqs)):
+                print("FAIL: full-pool token mismatch")
                 return emit(1)
-        if any(not np.array_equal(np.asarray(r.tokens), ref2["tokens"][i])
-               for i, r in enumerate(reqs)):
-            print("FAIL: full-pool token mismatch")
-            return emit(1)
+            budget = (f"{res2['prefill_calls']} prefills for "
+                      f"{args.requests} requests")
 
         # sampled + early-stop gate: same pressured pool, random stop set;
         # engine must stay token-identical to the serial sampler AND
@@ -562,18 +660,8 @@ def main() -> int:
             ecfg, rcfg, expert_params, router_params, prompts, n_new,
             prefix_len=prefix_len, cache_len=max_len, sampling=sp,
             stop_tokens=stops3)
-        with ServeFrontend(
-                ecfg, rcfg, expert_params, router_params,
-                EngineConfig(lanes_per_expert=args.lanes, max_len=max_len,
-                             prefix_len=prefix_len,
-                             min_prefill_bucket=args.prompt_len,
-                             block_size=args.block_size,
-                             pool_blocks=args.blocks_per_expert,
-                             decode_impl=args.decode_impl,
-                             transport=args.transport,
-                             prefix_cache=not args.no_prefix_cache,
-                             prefill_chunk_tokens=
-                             args.prefill_chunk_tokens)) as eng3:
+        with ServeFrontend(ecfg, rcfg, expert_params, router_params,
+                           eng_cfg, uid_namespace=0) as eng3:
             eng3.warmup(args.prompt_len)
             reqs3 = [eng3.submit(prompts[i], int(n_new[i]), sampling=sp,
                                  stop_tokens=stops3, arrival_tick=eng3.tick)
@@ -594,8 +682,7 @@ def main() -> int:
             print(f"FAIL: sampled-mode token mismatch on requests {bad3[:8]}")
             return emit(1)
         print("smoke OK: token identity under pool pressure, batched "
-              f"admission within budget ({res2['prefill_calls']} prefills "
-              f"for {args.requests} requests), sampled+early-stop identity "
+              f"admission ({budget}), sampled+early-stop identity "
               f"({res3['early_stops']} early stops)")
         return emit(0)
     if not args.no_check and speedup <= 1.0:

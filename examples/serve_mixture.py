@@ -41,7 +41,7 @@ from repro.configs.base import ModelConfig
 from repro.core import router as routerlib
 from repro.data import DataConfig, SyntheticCorpus
 from repro.models import model as modellib
-from repro.serving import EngineConfig, SamplingParams, ServeFrontend
+from repro.serving import SamplingParams, ServeFrontend
 from repro.serving import cli as servecli
 
 
@@ -70,13 +70,7 @@ def main() -> None:
     #    replica-placement-invariant, so output would be unchanged)
     engine = ServeFrontend(
         ecfg, rcfg, expert_params, router_params,
-        EngineConfig(lanes_per_expert=args.lanes, max_len=96, prefix_len=16,
-                     block_size=args.block_size,
-                     pool_blocks=args.blocks_per_expert,
-                     decode_impl=args.decode_impl,
-                     transport=args.transport,
-                     prefix_cache=not args.no_prefix_cache,
-                     prefill_chunk_tokens=args.prefill_chunk_tokens),
+        servecli.engine_config_from_args(args, max_len=96, prefix_len=16),
         replicas=args.replicas)
 
     # 3. a staggered stream of requests: mixed prompt/completion lengths,

@@ -35,7 +35,7 @@ from repro.core import router as routerlib
 from repro.data import SyntheticCorpus
 from repro.launch.train import PRESETS
 from repro.models import model as modellib
-from repro.serving import EngineConfig, ServeFrontend, baseline
+from repro.serving import ServeFrontend, baseline
 from repro.serving import cli as servecli
 
 
@@ -104,16 +104,9 @@ def main() -> None:
     total = prompts.shape[1] + args.new_tokens
     max_len = -(-total // args.block_size) * args.block_size
     eng = ServeFrontend(ecfg, rcfg, expert_params, router_params,
-                        EngineConfig(lanes_per_expert=args.lanes,
-                                     max_len=max_len,
-                                     prefix_len=args.prefix_len,
-                                     block_size=args.block_size,
-                                     pool_blocks=args.blocks_per_expert,
-                                     decode_impl=args.decode_impl,
-                                     transport=args.transport,
-                                     prefix_cache=not args.no_prefix_cache,
-                                     prefill_chunk_tokens=
-                                     args.prefill_chunk_tokens),
+                        servecli.engine_config_from_args(
+                            args, max_len=max_len,
+                            prefix_len=args.prefix_len),
                         replicas=args.replicas)
     with eng:                      # releases worker processes on exit
         for i in range(args.requests):

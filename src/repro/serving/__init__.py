@@ -31,8 +31,13 @@ Internally the engine is a router frontend
 :class:`ExpertServer` per (expert, replica) slot
 (:mod:`repro.serving.expert_server`), and a pluggable versioned message
 transport (:mod:`repro.serving.transport`) — in-process loopback by
-default, or one OS process per slot with
-``EngineConfig(transport="process")``.  Each server shares prompt
+default, one OS process per slot with
+``EngineConfig(transport="process")``, or raw TCP to an independently
+started worker fleet with ``EngineConfig(transport="tcp",
+registry="host:port")`` (:mod:`repro.serving.net`: registry discovery,
+self-ticking expert workers, connection-time ``WIRE_VERSION``
+handshake, and leased uid namespaces so many stateless frontends can
+share one fleet).  Each server shares prompt
 prefixes copy-on-write through a refcounted radix cache over its paged
 KV pool (:class:`PrefixCache`): repeated system prompts prefill once,
 later admissions replay only their novel suffix (chunked by
@@ -51,6 +56,7 @@ warns on construction.
 from repro.serving.engine import EngineConfig, MixtureServeEngine, TokenDelta
 from repro.serving.expert_server import ExpertServer
 from repro.serving.frontend import ServeFrontend
+from repro.serving.net import SocketTransport
 from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import (BlockAllocator, PrefixCache, Request,
                                      RequestQueue, SlotAllocator)
@@ -61,6 +67,7 @@ from repro.serving.transport import (LoopbackTransport, ProcessTransport,
 __all__ = ["BlockAllocator", "EngineConfig", "ExpertServer",
            "LoopbackTransport", "MixtureServeEngine", "PrefixCache",
            "ProcessTransport", "Request", "RequestMsg", "RequestQueue",
-           "SamplingParams", "ServeFrontend", "SlotAllocator", "StatsMsg",
+           "SamplingParams", "ServeFrontend", "SlotAllocator",
+           "SocketTransport", "StatsMsg",
            "TokenDelta", "TokenDeltaMsg", "Transport", "WIRE_VERSION",
            "check_version"]

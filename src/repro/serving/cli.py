@@ -67,12 +67,24 @@ def add_engine_args(ap: argparse.ArgumentParser, *, lanes: int = 4,
                    help="paged decode attention: jnp gather reference or "
                         "the Pallas block-table kernel (interpret-mode on "
                         "CPU; auto follows the expert config)")
-    g.add_argument("--transport", choices=["loopback", "process"],
+    g.add_argument("--transport", choices=["loopback", "process", "tcp"],
                    default="loopback",
-                   help="expert backend: in-process loopback or one "
-                        "spawned OS process per (expert, replica) server, "
-                        "each with its own params + KV pool (router scores "
-                        "are the only cross-process traffic)")
+                   help="expert backend: in-process loopback, one spawned "
+                        "OS process per (expert, replica) server, or tcp — "
+                        "independently-started network expert workers "
+                        "discovered via --registry (router-scored requests "
+                        "are the only cross-host traffic)")
+    g.add_argument("--registry", default="",
+                   help="tcp transport: HOST:PORT of the "
+                        "repro.serving.net.registry the expert workers "
+                        "registered with (serve_bench self-starts a local "
+                        "fleet when omitted; other front-ends require it)")
+    g.add_argument("--net-timeout", type=float, default=60.0,
+                   help="tcp transport: connect/read timeout per wire op "
+                        "(seconds)")
+    g.add_argument("--net-poll-ms", type=int, default=20,
+                   help="tcp transport: how long a worker holds a poll "
+                        "open waiting for new tokens")
     g.add_argument("--replicas", type=parse_replicas, default={},
                    help="hot-expert replication as EXPERT:COUNT pairs, "
                         "e.g. '0:2' runs two servers for expert 0; "
@@ -87,6 +99,35 @@ def add_engine_args(ap: argparse.ArgumentParser, *, lanes: int = 4,
                         "prefix request's novel prompt suffix "
                         "(0 = unlimited: finish the suffix in one tick)")
     return ap
+
+
+def engine_config_from_args(args: argparse.Namespace, *, max_len: int,
+                            prefix_len: int,
+                            min_prefill_bucket: int | None = None,
+                            route_batch: int | None = None):
+    """Build the :class:`repro.serving.EngineConfig` the
+    ``add_engine_args`` flags describe.
+
+    The shape knobs no front-end exposes as flags (``max_len``,
+    ``prefix_len``, and optionally the prefill bucket / route batch) are
+    keyword-only — each caller derives them from its own workload.
+    Imported lazily so this module stays jax-free for ``--help``.
+    """
+    from repro.serving.expert_server import EngineConfig
+
+    kw = dict(lanes_per_expert=args.lanes, max_len=max_len,
+              prefix_len=prefix_len, block_size=args.block_size,
+              pool_blocks=args.blocks_per_expert,
+              decode_impl=args.decode_impl, transport=args.transport,
+              registry=args.registry, net_timeout_s=args.net_timeout,
+              net_poll_ms=args.net_poll_ms,
+              prefix_cache=not args.no_prefix_cache,
+              prefill_chunk_tokens=args.prefill_chunk_tokens)
+    if min_prefill_bucket is not None:
+        kw["min_prefill_bucket"] = min_prefill_bucket
+    if route_batch is not None:
+        kw["route_batch"] = route_batch
+    return EngineConfig(**kw)
 
 
 def add_sampling_args(ap: argparse.ArgumentParser, *,

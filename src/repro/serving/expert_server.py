@@ -55,7 +55,7 @@ from repro.serving.scheduler import (BlockAllocator, PrefixCache, Request,
 from repro.serving.transport import RequestMsg, StatsMsg, TokenDeltaMsg
 
 PAD_SAFE_KINDS = (cfglib.ATTN, cfglib.ATTN_SHARED)
-TRANSPORTS = ("loopback", "process")
+TRANSPORTS = ("loopback", "process", "tcp")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,7 +70,11 @@ class EngineConfig:
     pool_blocks: int = 0          # KV blocks per expert; 0 -> lanes*max_len/bs
     decode_impl: str = "auto"     # paged decode kernel: auto|jnp|pallas
                                   # (auto follows the expert cfg's use_pallas)
-    transport: str = "loopback"   # expert backend: loopback|process
+    transport: str = "loopback"   # expert backend: loopback|process|tcp
+    registry: str = ""            # tcp only: HOST:PORT of the discovery
+                                  # registry the worker fleet registered with
+    net_timeout_s: float = 60.0   # tcp only: connect/read timeout per op
+    net_poll_ms: int = 20         # tcp only: long-poll wait per tick
     prefix_cache: bool = True     # share full prompt-prefix KV blocks
     prefill_chunk_tokens: int = 0  # per-tick suffix-prefill token budget on
                                    # the shared-prefix path (0 = unlimited)
@@ -118,6 +122,17 @@ def resolve_shapes(ecfg, eng: EngineConfig) -> ServingShapes:
     if eng.transport not in TRANSPORTS:
         raise ValueError(f"transport must be one of {TRANSPORTS}, "
                          f"got {eng.transport!r}")
+    if eng.transport == "tcp" and not eng.registry:
+        raise ValueError(
+            "transport='tcp' needs EngineConfig.registry='host:port' — "
+            "the address of the repro.serving.net.registry the expert "
+            "workers registered with")
+    if eng.net_timeout_s <= 0:
+        raise ValueError(f"net_timeout_s must be positive, "
+                         f"got {eng.net_timeout_s}")
+    if eng.net_poll_ms < 1:
+        raise ValueError(f"net_poll_ms must be >= 1, "
+                         f"got {eng.net_poll_ms}")
     if eng.prefill_chunk_tokens < 0:
         raise ValueError(f"prefill_chunk_tokens must be >= 0, "
                          f"got {eng.prefill_chunk_tokens}")

@@ -52,10 +52,22 @@ from repro.models import model as modellib
 from repro.serving import cache as cachelib
 from repro.serving.expert_server import (EngineConfig, ExpertServer,
                                          resolve_shapes)
+from repro.serving.net import registry as netreg
+from repro.serving.net.socket_transport import SocketTransport
 from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import Request, RequestQueue
 from repro.serving.transport import (LoopbackTransport, ProcessTransport,
                                      RequestMsg, TokenDeltaMsg)
+
+# Frontend n gets uids [n * STRIDE, (n+1) * STRIDE): N stateless frontends
+# serving one worker fleet can never collide on a uid, so their streams
+# can never cross (the workers key delta routing AND the counter-based
+# sampler on the uid).  The stride must keep every uid inside the uint32
+# domain of `jax.random.fold_in` (see repro.serving.sampling.request_key),
+# which caps the namespace index at 255 — far beyond any sane frontend
+# count, checked at construction.
+UID_NAMESPACE_STRIDE = 1 << 24
+MAX_UID_NAMESPACE = (1 << 32) // UID_NAMESPACE_STRIDE - 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,25 +107,43 @@ class ServeFrontend:
     """
 
     def __init__(self, ecfg, rcfg, expert_params: list, router_params,
-                 eng: EngineConfig = EngineConfig(), replicas=None):
+                 eng: EngineConfig = EngineConfig(), replicas=None,
+                 uid_namespace: int | None = None):
         shapes = resolve_shapes(ecfg, eng)    # validate before any spawn
         self.ecfg, self.rcfg, self.eng = ecfg, rcfg, eng
         self.expert_params = list(expert_params)
         self.router_params = router_params
         self.n_experts = len(self.expert_params)
-        self.replicas = [1] * self.n_experts
-        for e, r in dict(replicas or {}).items():
-            e, r = int(e), int(r)
-            if not 0 <= e < self.n_experts:
-                raise ValueError(f"replicas names expert {e}, but the "
-                                 f"mixture has {self.n_experts}")
-            if r < 1:
-                raise ValueError(f"expert {e} needs >= 1 replica, got {r}")
-            self.replicas[e] = r
-        # flat server slots: expert e occupies R_e consecutive slots, and
-        # the transport addresses slots — it never hears about experts
-        self.placements = [(e, r) for e in range(self.n_experts)
-                           for r in range(self.replicas[e])]
+        if eng.transport == "tcp":
+            if replicas:
+                raise ValueError(
+                    "replicas= is derived from the worker fleet on "
+                    "transport='tcp' — start more expert_worker processes "
+                    "for a hot expert instead of passing a replica map")
+            # the fleet is the source of truth: whatever workers
+            # registered (and still heartbeat) are the slots
+            fleet = netreg.wait_for_fleet(eng.registry, self.n_experts,
+                                          timeout=eng.net_timeout_s)
+            self.replicas = [0] * self.n_experts
+            for e, _, _, _ in fleet:
+                self.replicas[e] += 1
+            self.placements = [(e, r) for e, r, _, _ in fleet]
+        else:
+            self.replicas = [1] * self.n_experts
+            for e, r in dict(replicas or {}).items():
+                e, r = int(e), int(r)
+                if not 0 <= e < self.n_experts:
+                    raise ValueError(f"replicas names expert {e}, but the "
+                                     f"mixture has {self.n_experts}")
+                if r < 1:
+                    raise ValueError(f"expert {e} needs >= 1 replica, "
+                                     f"got {r}")
+                self.replicas[e] = r
+            # flat server slots: expert e occupies R_e consecutive slots,
+            # and the transport addresses slots — it never hears about
+            # experts
+            self.placements = [(e, r) for e in range(self.n_experts)
+                               for r in range(self.replicas[e])]
         self._slots_of = {e: [s for s, (pe, _) in enumerate(self.placements)
                               if pe == e] for e in range(self.n_experts)}
         self.n_servers = len(self.placements)
@@ -122,19 +152,42 @@ class ServeFrontend:
         self.lane_blocks = shapes.lane_blocks
         self.pool_blocks = shapes.pool_blocks
         self.decode_impl = shapes.decode_impl
-        slot_params = [self.expert_params[e] for e, _ in self.placements]
         labels = [f"expert {e}" if self.replicas[e] == 1
                   else f"expert {e} replica {r}"
                   for e, r in self.placements]
-        if eng.transport == "process":
+        if eng.transport == "tcp":
+            self._transport = SocketTransport(
+                [(host, port) for _, _, host, port in fleet], labels,
+                expect=self.placements,
+                connect_timeout=eng.net_timeout_s,
+                read_timeout=eng.net_timeout_s,
+                poll_s=eng.net_poll_ms / 1000.0)
+        elif eng.transport == "process":
+            slot_params = [self.expert_params[e]
+                           for e, _ in self.placements]
             self._transport = ProcessTransport(ecfg, eng, slot_params,
                                                labels)
         else:
+            slot_params = [self.expert_params[e]
+                           for e, _ in self.placements]
             self._transport = LoopbackTransport(
                 [ExpertServer(ecfg, p, eng) for p in slot_params], labels)
+        if uid_namespace is None:
+            # each tcp frontend leases a namespace so N frontends on one
+            # fleet never collide; the local transports own their fleet
+            # outright and keep the plain 0.. uid space (== the serial
+            # oracle's)
+            uid_namespace = netreg.call(eng.registry, "lease",
+                                        timeout=eng.net_timeout_s) \
+                if eng.transport == "tcp" else 0
+        self.uid_namespace = int(uid_namespace)
+        if not 0 <= self.uid_namespace <= MAX_UID_NAMESPACE:
+            raise ValueError(f"uid_namespace must be in "
+                             f"[0, {MAX_UID_NAMESPACE}], got "
+                             f"{self.uid_namespace}")
         self.queue = RequestQueue()
         self.tick = 0
-        self._uid = 0
+        self._uid = self.uid_namespace * UID_NAMESPACE_STRIDE
         self._t0: float | None = None
         self.last_deltas: list[TokenDelta] = []
         self._live: dict[int, Request] = {}   # uid -> un-finished Request
@@ -372,25 +425,35 @@ class ServeFrontend:
         self._t0 = None
         # one StatsMsg per server slot, aggregated per expert (a hot
         # expert's counters sum over its replicas; the per-replica
-        # breakdown rides along for load-balance observability)
-        slot_stats = [self._transport.stats(s)
-                      for s in range(self.n_servers)]
+        # breakdown rides along for load-balance observability).  A slot
+        # whose StatsMsg never arrives — its worker died — degrades to
+        # partial stats with an explicit missing_replicas entry instead
+        # of losing the whole report.
+        slot_stats: list = []
+        missing: list[str] = []
+        for s in range(self.n_servers):
+            try:
+                slot_stats.append(self._transport.stats(s))
+            except RuntimeError:
+                slot_stats.append(None)
+                missing.append(self._transport.labels[s])
+        live = [st for st in slot_stats if st is not None]
         useful = sum(len(r.tokens) for r in completed)
-        decode_calls = sum(st.decode_calls for st in slot_stats)
-        lane_steps = sum(st.occupied_lane_steps for st in slot_stats)
-        paged_rd = sum(st.paged_read_bytes for st in slot_stats)
-        gathered_rd = sum(st.gathered_read_bytes for st in slot_stats)
+        decode_calls = sum(st.decode_calls for st in live)
+        lane_steps = sum(st.occupied_lane_steps for st in live)
+        paged_rd = sum(st.paged_read_bytes for st in live)
+        gathered_rd = sum(st.gathered_read_bytes for st in live)
         lanes = self.eng.lanes_per_expert
 
         def expert_stats(e):
             slots = self._slots_of[e]
-            ss = [slot_stats[s] for s in slots]
+            ss = [slot_stats[s] for s in slots if slot_stats[s] is not None]
             dc = sum(st.decode_calls for st in ss)
             return {
                 "served": sum(st.n_served for st in ss),
                 "decode_calls": dc,
                 "prefills": sum(st.prefill_calls for st in ss),
-                "peak_blocks": max(st.peak_blocks for st in ss),
+                "peak_blocks": max((st.peak_blocks for st in ss), default=0),
                 "queue_wait_ticks": sum(st.queue_wait_ticks for st in ss),
                 "prefix_hit_blocks": sum(st.prefix_hit_blocks for st in ss),
                 "prefill_tokens_saved": sum(st.prefill_tokens_saved
@@ -398,13 +461,15 @@ class ServeFrontend:
                 "occupancy": sum(st.occupied_lane_steps for st in ss)
                 / max(dc * lanes, 1),
                 "replicas": self.replicas[e],
+                "missing_replicas": [self.placements[s][1] for s in slots
+                                     if slot_stats[s] is None],
                 "per_replica": {
                     self.placements[s][1]: {
-                        "served": st.n_served,
-                        "queue_wait_ticks": st.queue_wait_ticks,
-                        "occupancy": st.occupied_lane_steps
-                        / max(st.decode_calls * lanes, 1)}
-                    for s, st in zip(slots, ss)},
+                        "served": slot_stats[s].n_served,
+                        "queue_wait_ticks": slot_stats[s].queue_wait_ticks,
+                        "occupancy": slot_stats[s].occupied_lane_steps
+                        / max(slot_stats[s].decode_calls * lanes, 1)}
+                    for s in slots if slot_stats[s] is not None},
             }
         return {
             "requests": sorted(completed, key=lambda r: r.uid),
@@ -415,20 +480,19 @@ class ServeFrontend:
             "early_stops": sum(r.finish_reason == "stop_token"
                                for r in completed),
             "n_unadmitted": self.n_unadmitted,
+            "missing_replicas": missing,
             "prefix_sharing": {
                 "enabled": self.eng.prefix_cache,
-                "hit_blocks": sum(st.prefix_hit_blocks
-                                  for st in slot_stats),
+                "hit_blocks": sum(st.prefix_hit_blocks for st in live),
                 "prefill_tokens_saved": sum(st.prefill_tokens_saved
-                                            for st in slot_stats),
-                "cached_blocks": sum(st.cached_blocks
-                                     for st in slot_stats),
+                                            for st in live),
+                "cached_blocks": sum(st.cached_blocks for st in live),
             },
             "tokens_per_s": useful / max(wall, 1e-9),
             "mean_ttft_s": float(np.mean([r.t_first for r in completed]))
             if completed else 0.0,
             "occupancy": lane_steps / max(decode_calls * lanes, 1),
-            "prefill_calls": sum(st.prefill_calls for st in slot_stats),
+            "prefill_calls": sum(st.prefill_calls for st in live),
             "kv_bytes_per_lane": self.kv_bytes_per_expert() // lanes,
             "decode_impl": self.decode_impl,
             "transport": self.eng.transport,

@@ -1,0 +1,23 @@
+"""Network serving: experts as independently-started TCP services.
+
+The multi-host form of the paper's no-talk premise: each expert worker
+(:mod:`repro.serving.net.expert_worker`) owns its params + KV pool and
+ticks on its own clock; the registry (:mod:`repro.serving.net.registry`)
+is a discovery-only control plane; any number of stateless frontends
+connect through :class:`SocketTransport` with
+``EngineConfig(transport="tcp", registry="host:port")``.  The router
+score matrix — i.e. the routed ``RequestMsg`` stream — is the only
+traffic that ever crosses hosts.
+
+Importing this package pulls in the frontend-side pieces only —
+``expert_worker`` (which builds an ``ExpertServer``) and ``fleet``
+(which spawns processes) are deliberately not imported here.  See
+``src/repro/serving/README.md`` ("Network serving") for the topology,
+handshake protocol, and failure semantics.
+"""
+from repro.serving.net.framing import MAGIC, PeerGone, parse_addr
+from repro.serving.net.registry import Registry, wait_for_fleet
+from repro.serving.net.socket_transport import SocketTransport
+
+__all__ = ["MAGIC", "PeerGone", "Registry", "SocketTransport",
+           "parse_addr", "wait_for_fleet"]

@@ -1,0 +1,408 @@
+"""Standalone network expert worker: one ``ExpertServer`` as a TCP service.
+
+This is the paper's asynchrony claim made literal at serving time: each
+expert boots **independently** with its own params and KV pool, ticks on
+its **own clock in its own thread**, and never exchanges a byte with any
+other expert.  Frontends connect over TCP (see
+:mod:`repro.serving.net.socket_transport`) and speak the same three
+message types as every other transport; the worker registers with the
+discovery registry and heartbeats so frontends can find it.
+
+Unlike the in-process transports — where the frontend's ``tick(s)``
+literally steps the server — a network worker **ticks itself**: a server
+thread runs ``ExpertServer.tick()`` whenever there is work and buffers
+each emitted ``TokenDeltaMsg`` for the connection that enqueued that
+request's uid.  The frontend's ``tick`` becomes a long-poll (``poll``
+op) draining that buffer.  Token identity is untouched: the
+counter-based sampler makes every stream a pure function of
+``(seed, uid, step)``, so who ticks, and how the ticks interleave with
+polls, cannot change a single token (the identity oracles in
+``tests/test_serving_net.py`` hold this to bitwise).
+
+Launch::
+
+    python -m repro.serving.net.expert_worker \\
+        --spec fleet_spec.pkl --expert 2 --registry 127.0.0.1:7070
+
+``--spec`` is a pickle holding ``{"ecfg", "eng"}`` plus either
+``"params_by_expert"`` (host param trees keyed by expert id) or a
+``"seed"`` from which params are derived exactly like
+``benchmarks/serve_bench.py`` does (``init_params(fold_in(key, e))``).
+
+Per-connection wire ops (after the one-time handshake):
+
+==============  =========================  =================================
+op              args                       reply
+==============  =========================  =================================
+``enqueue``     ``RequestMsg``             — (fire-and-forget)
+``poll``        timeout seconds (float)    ``list[TokenDeltaMsg]``
+``stats``       —                          ``StatsMsg``
+``reset_stats``  —                         ``None``
+``warmup``      ``(prompt_len, sampled)``  ``None``
+``sync``        —                          ``None``
+``close``       —                          — (connection ends; worker lives)
+==============  =========================  =================================
+
+Failure semantics: a Python exception in the serving loop is shipped to
+every connected frontend as a ``_RemoteError`` (traceback included) on
+its next reply; an abrupt death (kill -9, machine loss) surfaces as a
+reset socket, which ``SocketTransport`` reports with the ``(expert,
+replica)`` placement label.  A frontend that disconnects mid-stream
+just stops receiving its deltas — the worker finishes the in-flight
+work and frees the lanes; nothing else is affected.
+"""
+from __future__ import annotations
+
+import argparse
+import pickle
+import queue
+import socket
+import threading
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.serving.expert_server import ExpertServer
+from repro.serving.net import framing, registry as registrylib
+from repro.serving.transport import _RemoteError
+
+_CALL_TIMEOUT_S = 600.0      # reply-box wait: covers a cold warmup compile
+_POLL_CAP_S = 1.0            # stay responsive to shutdown while polling
+_IDLE_WAIT_S = 0.01
+
+
+class _Conn:
+    """Per-frontend connection state: a delta buffer the server thread
+    fills and the connection thread drains into ``poll`` replies."""
+
+    def __init__(self, sock: socket.socket, peer: str):
+        self.sock = sock
+        self.peer = peer
+        self.alive = True
+        self._cv = threading.Condition()
+        self._deltas: list = []
+
+    def push(self, deltas) -> None:
+        with self._cv:
+            self._deltas.extend(deltas)
+            self._cv.notify()
+
+    def wake(self) -> None:
+        with self._cv:
+            self._cv.notify()
+
+    def take(self, timeout: float) -> list:
+        with self._cv:
+            if not self._deltas:
+                self._cv.wait(timeout)
+            out, self._deltas = self._deltas, []
+            return out
+
+
+class ExpertWorker:
+    """One ``ExpertServer`` served over TCP; self-ticking.
+
+    Usable in-process (tests, notebooks) or via ``main()`` as a
+    standalone process.  ``start()`` warms the jit caches, binds the
+    port, registers with the registry (which assigns the replica index
+    if ``replica`` is None), and spins up the accept / server / heartbeat
+    threads.  ``stop()`` slams every socket shut — from a connected
+    frontend's point of view it is indistinguishable from a crash, which
+    is exactly what the worker-death tests use it for.
+    """
+
+    def __init__(self, ecfg, eng, params, expert: int, *,
+                 replica: int | None = None, host: str = "127.0.0.1",
+                 port: int = 0, registry: str = "",
+                 advertise_host: str = "", warmup_len: int | None = None,
+                 warmup: bool = True):
+        self.ecfg, self.eng = ecfg, eng
+        self.expert = int(expert)
+        self.replica = replica
+        self.registry = registry
+        self._warmup = warmup
+        self._warmup_len = warmup_len
+        self._ttl = 10.0
+        self._failure: str | None = None
+        self._stop = threading.Event()
+        self._work = threading.Event()
+        self._inbox: queue.Queue = queue.Queue()
+        self._owner: dict[int, _Conn] = {}       # uid -> enqueuing conn
+        self._conns: set[_Conn] = set()
+        self._lock = threading.Lock()
+        self._threads: list[threading.Thread] = []
+        self._server = ExpertServer(ecfg, jax.device_put(params), eng)
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind((host, port))
+        self._listener.listen(64)
+        self._listener.settimeout(0.2)
+        self.host, self.port = self._listener.getsockname()[:2]
+        self.advertise_host = advertise_host or self.host
+
+    @property
+    def addr(self) -> str:
+        return f"{self.advertise_host}:{self.port}"
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> "ExpertWorker":
+        if self._warmup:
+            # warm both decode programs *before* advertising ourselves, so
+            # no frontend ever pays a cold compile against its read timeout
+            self._server.warmup(self._warmup_len, sampled=False)
+            self._server.warmup(self._warmup_len, sampled=True)
+        if self.registry:
+            self._register()
+        elif self.replica is None:
+            self.replica = 0
+        for target, name in ((self._accept_loop, "accept"),
+                             (self._server_loop, "server"),
+                             (self._heartbeat_loop, "heartbeat")):
+            t = threading.Thread(target=target, daemon=True,
+                                 name=f"expert{self.expert}-{name}")
+            t.start()
+            self._threads.append(t)
+        return self
+
+    def stop(self) -> None:
+        """Shut down abruptly: close the listener and every live
+        connection without protocol (frontends see a dead peer)."""
+        self._stop.set()
+        self._work.set()
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        with self._lock:
+            conns = list(self._conns)
+        for c in conns:
+            c.alive = False
+            try:
+                c.sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                c.sock.close()
+            except OSError:
+                pass
+            c.wake()
+        for t in self._threads:
+            t.join(timeout=5.0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.stop()
+
+    def _register(self) -> None:
+        reply = registrylib.call(self.registry, "register", {
+            "expert": self.expert, "replica": self.replica,
+            "host": self.advertise_host, "port": self.port})
+        self.replica = reply["replica"]
+        self._ttl = float(reply["ttl_s"])
+
+    def _heartbeat_loop(self) -> None:
+        if not self.registry:
+            return
+        interval = max(self._ttl / 3.0, 0.05)
+        while not self._stop.wait(interval):
+            try:
+                out = registrylib.call(self.registry, "heartbeat",
+                                       (self.expert, self.replica),
+                                       timeout=5.0)
+                if out == "unknown":      # registry restarted: re-enlist
+                    self._register()
+            except Exception:
+                # registry being down never stops token generation — the
+                # registry is discovery only; retry next interval
+                pass
+
+    # -- the serving thread: owns the ExpertServer --------------------------
+    def _server_loop(self) -> None:
+        try:
+            while not self._stop.is_set():
+                moved = self._drain_inbox()
+                if self._server.busy:
+                    deltas = self._server.tick()
+                    if deltas:
+                        self._dispatch(deltas)
+                elif not moved:
+                    self._work.wait(_IDLE_WAIT_S)
+                    self._work.clear()
+        except Exception:
+            self._failure = traceback.format_exc()
+            self._drain_inbox()               # fail the waiting reply boxes
+            with self._lock:
+                conns = list(self._conns)
+            for c in conns:                   # wake pollers into the error
+                c.wake()
+
+    def _drain_inbox(self) -> bool:
+        moved = False
+        while True:
+            try:
+                op, args, box, conn = self._inbox.get_nowait()
+            except queue.Empty:
+                return moved
+            moved = True
+            if self._failure is not None:
+                if box is not None:
+                    box.put(_RemoteError(self._failure))
+                continue
+            if op == "enqueue":
+                self._server.enqueue(args)
+                self._owner[args.uid] = conn
+            elif op == "stats":
+                box.put(self._server.stats())
+            elif op == "reset_stats":
+                self._server.reset_stats()
+                box.put(None)
+            elif op == "warmup":
+                self._server.warmup(args[0], sampled=args[1])
+                box.put(None)
+            elif op == "sync":
+                self._server.sync()
+                box.put(None)
+            else:
+                box.put(_RemoteError(f"unknown worker op {op!r}"))
+
+    def _dispatch(self, deltas) -> None:
+        for d in deltas:
+            conn = self._owner.get(d.uid)
+            if d.done:
+                self._owner.pop(d.uid, None)
+            if conn is not None and conn.alive:
+                conn.push([d])
+            # a vanished frontend's deltas are dropped on the floor — the
+            # server still finishes the request and frees its lane
+
+    def _call(self, op, args, conn):
+        """Connection thread -> server thread round trip."""
+        box: queue.Queue = queue.Queue(1)
+        self._inbox.put((op, args, box, conn))
+        self._work.set()
+        try:
+            return box.get(timeout=_CALL_TIMEOUT_S)
+        except queue.Empty:
+            return _RemoteError(f"worker op {op!r} timed out after "
+                                f"{_CALL_TIMEOUT_S:.0f}s")
+
+    # -- per-connection threads ---------------------------------------------
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                sock, peer = self._listener.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                return
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            threading.Thread(target=self._conn_loop,
+                             args=(sock, f"{peer[0]}:{peer[1]}"),
+                             daemon=True).start()
+
+    def _conn_loop(self, sock: socket.socket, peer: str) -> None:
+        if framing.server_handshake(sock, role="expert-worker",
+                                    expert=self.expert,
+                                    replica=self.replica) is None:
+            sock.close()
+            return
+        conn = _Conn(sock, peer)
+        with self._lock:
+            self._conns.add(conn)
+        try:
+            while not self._stop.is_set():
+                try:
+                    op, args = framing.recv_frame(sock)
+                except (framing.PeerGone, OSError):
+                    return
+                if op == "close":
+                    return
+                if op == "enqueue":
+                    if self._failure is None:   # else the next poll reports
+                        self._inbox.put((op, args, None, conn))
+                        self._work.set()
+                elif op == "poll":
+                    if self._failure is not None:
+                        framing.send_frame(sock, _RemoteError(self._failure))
+                        continue
+                    deltas = conn.take(min(max(float(args), 0.0),
+                                           _POLL_CAP_S))
+                    if self._failure is not None and not deltas:
+                        framing.send_frame(sock, _RemoteError(self._failure))
+                    else:
+                        framing.send_frame(sock, deltas)
+                elif op in ("stats", "reset_stats", "warmup", "sync"):
+                    framing.send_frame(sock, self._call(op, args, conn))
+                else:
+                    framing.send_frame(
+                        sock, _RemoteError(f"unknown wire op {op!r}"))
+        except framing.PeerGone:
+            pass
+        finally:
+            conn.alive = False
+            with self._lock:
+                self._conns.discard(conn)
+            try:
+                sock.close()
+            except OSError:
+                pass
+
+
+def params_from_spec(spec: dict, expert: int):
+    """Resolve one expert's host params from a fleet spec pickle."""
+    if "params_by_expert" in spec:
+        return spec["params_by_expert"][expert]
+    if "seed" in spec:
+        from repro.models import model as modellib
+        key = jax.random.fold_in(jax.random.PRNGKey(int(spec["seed"])),
+                                 expert)
+        return modellib.init_params(key, spec["ecfg"])
+    raise ValueError("fleet spec must carry 'params_by_expert' or 'seed'")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="Serve one mixture expert over TCP.")
+    ap.add_argument("--spec", required=True,
+                    help="pickle with {'ecfg','eng'} plus "
+                         "'params_by_expert' or 'seed'")
+    ap.add_argument("--expert", type=int, required=True)
+    ap.add_argument("--replica", type=int, default=None,
+                    help="default: assigned by the registry")
+    ap.add_argument("--registry", default="",
+                    help="HOST:PORT of the discovery registry")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0)
+    ap.add_argument("--advertise-host", default="",
+                    help="address to register (default: bound host)")
+    ap.add_argument("--warmup-len", type=int, default=None)
+    ap.add_argument("--no-warmup", action="store_true")
+    args = ap.parse_args(argv)
+
+    with open(args.spec, "rb") as f:
+        spec = pickle.load(f)
+    params = jax.tree_util.tree_map(np.asarray,
+                                    params_from_spec(spec, args.expert))
+    worker = ExpertWorker(
+        spec["ecfg"], spec["eng"], params, args.expert,
+        replica=args.replica, host=args.host, port=args.port,
+        registry=args.registry, advertise_host=args.advertise_host,
+        warmup_len=args.warmup_len, warmup=not args.no_warmup)
+    worker.start()
+    print(f"WORKER expert={worker.expert} replica={worker.replica} "
+          f"{worker.addr}", flush=True)
+    try:
+        while True:
+            time.sleep(3600)
+    except KeyboardInterrupt:
+        pass
+    finally:
+        worker.stop()
+
+
+if __name__ == "__main__":
+    main()

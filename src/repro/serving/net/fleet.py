@@ -1,0 +1,159 @@
+"""Spawn a local worker fleet: registry + expert workers as OS processes.
+
+This is the convenience layer for a **single machine**: it shells out to
+the exact same module CLIs an operator would run by hand on a real
+cluster (``python -m repro.serving.net.registry`` and ``python -m
+repro.serving.net.expert_worker``), so a ``LocalFleet`` run in CI proves
+the standalone entry points, not a shortcut around them.  On real
+multi-host deployments you run those CLIs yourself — one registry, one
+worker per (expert, replica) wherever its params live — and point any
+number of frontends at the registry with
+``EngineConfig(transport="tcp", registry="host:port")``.
+
+Params travel to the workers through a **spec pickle** on local disk
+(``{"ecfg", "eng"}`` plus ``"params_by_expert"`` or ``"seed"``), never
+through the frontend: the whole point of the paper's no-talk serving
+story is that a frontend only ever ships router-scored requests, so it
+must not need the expert weights at all.  Pass ``params_by_expert`` as
+host (numpy) trees, or ``seed`` to have each worker derive its own
+params exactly like ``benchmarks/serve_bench.py``'s ``build``.
+
+``replicas`` maps expert id -> worker count (default 1 each); every
+worker is its own process with its own KV pool.  Worker stdout/stderr
+land in per-worker log files inside the spec's temp directory, and a
+worker that dies before registering fails ``start`` loudly with the
+tail of its log.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import subprocess
+import sys
+import tempfile
+import time
+
+from repro.serving.net import framing, registry as registrylib
+
+_LOG_TAIL = 4000
+
+
+class LocalFleet:
+    """Registry + expert-worker subprocesses on localhost; a context
+    manager that terminates the whole fleet on exit."""
+
+    def __init__(self, ecfg, eng, n_experts: int, *, seed: int | None = None,
+                 params_by_expert=None, replicas: dict | None = None,
+                 ttl_s: float = 10.0, warmup_len: int | None = None,
+                 warmup: bool = True, start_timeout_s: float = 600.0):
+        if (seed is None) == (params_by_expert is None):
+            raise ValueError("pass exactly one of seed / params_by_expert")
+        self.n_experts = int(n_experts)
+        self._tmp = tempfile.TemporaryDirectory(prefix="repro-fleet-")
+        self._procs: list[subprocess.Popen] = []
+        self._logs: list[str] = []
+        self.registry_addr = ""
+        env = dict(os.environ)
+        src = os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__)))))
+        extra = env.get("PYTHONPATH", "")
+        env["PYTHONPATH"] = src + (os.pathsep + extra if extra else "")
+        try:
+            self._start_registry(env, ttl_s)
+            spec = {"ecfg": ecfg, "eng": eng}
+            if params_by_expert is not None:
+                spec["params_by_expert"] = dict(params_by_expert)
+            else:
+                spec["seed"] = int(seed)
+            spec_path = os.path.join(self._tmp.name, "fleet_spec.pkl")
+            with open(spec_path, "wb") as f:
+                pickle.dump(spec, f)
+            replicas = dict(replicas or {})
+            for e in range(self.n_experts):
+                for _ in range(max(int(replicas.get(e, 1)), 1)):
+                    self._start_worker(env, spec_path, e, warmup_len, warmup)
+            self._wait_ready(start_timeout_s)
+        except Exception:
+            self.close()
+            raise
+
+    def _start_registry(self, env, ttl_s: float) -> None:
+        log = os.path.join(self._tmp.name, "registry.log")
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.serving.net.registry",
+             "--port", "0", "--ttl", str(ttl_s)],
+            env=env, stdout=subprocess.PIPE, stderr=open(log, "wb"),
+            text=True)
+        self._procs.append(proc)
+        self._logs.append(log)
+        line = proc.stdout.readline().strip()   # "REGISTRY host:port"
+        if not line.startswith("REGISTRY "):
+            raise RuntimeError(
+                f"registry failed to start (said {line!r}); see "
+                f"{self._tail(log)}")
+        self.registry_addr = line.split(None, 1)[1]
+        framing.parse_addr(self.registry_addr)  # validate the scrape
+
+    def _start_worker(self, env, spec_path: str, expert: int,
+                      warmup_len: int | None, warmup: bool) -> None:
+        log = os.path.join(self._tmp.name,
+                           f"worker-e{expert}-{len(self._procs)}.log")
+        cmd = [sys.executable, "-m", "repro.serving.net.expert_worker",
+               "--spec", spec_path, "--expert", str(expert),
+               "--registry", self.registry_addr]
+        if warmup_len is not None:
+            cmd += ["--warmup-len", str(warmup_len)]
+        if not warmup:
+            cmd += ["--no-warmup"]
+        out = open(log, "wb")
+        proc = subprocess.Popen(cmd, env=env, stdout=out,
+                                stderr=subprocess.STDOUT)
+        self._procs.append(proc)
+        self._logs.append(log)
+
+    def _wait_ready(self, timeout_s: float) -> None:
+        deadline = time.monotonic() + timeout_s
+        while True:
+            for proc, log in zip(self._procs, self._logs):
+                if proc.poll() is not None:
+                    raise RuntimeError(
+                        f"fleet process exited with code {proc.returncode} "
+                        f"before the fleet came up; its log: "
+                        f"{self._tail(log)}")
+            try:
+                registrylib.wait_for_fleet(
+                    self.registry_addr, self.n_experts,
+                    timeout=min(2.0, max(deadline - time.monotonic(), 0.1)))
+                return
+            except RuntimeError:
+                if time.monotonic() >= deadline:
+                    raise
+
+    def _tail(self, log: str) -> str:
+        try:
+            with open(log, "rb") as f:
+                data = f.read()[-_LOG_TAIL:]
+            return f"{log}:\n{data.decode(errors='replace')}"
+        except OSError:
+            return f"{log} (unreadable)"
+
+    def close(self) -> None:
+        for proc in self._procs:
+            if proc.poll() is None:
+                proc.terminate()
+        for proc in self._procs:
+            try:
+                proc.wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                proc.kill()
+                proc.wait(timeout=5)
+            if proc.stdout is not None:
+                proc.stdout.close()
+        self._procs = []
+        self._tmp.cleanup()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

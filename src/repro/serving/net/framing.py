@@ -1,0 +1,146 @@
+"""Wire format shared by every network serving endpoint.
+
+One frame = a 4-byte big-endian length prefix + a pickled python object.
+Pickle keeps the payload exactly the objects the in-process transports
+already exchange (``RequestMsg`` / ``TokenDeltaMsg`` / ``StatsMsg`` with
+their numpy prompts), so the :class:`repro.serving.transport.Transport`
+seam needs no parallel serialization layer — but it also means the
+protocol is for a **trusted cluster network only**: unpickling attacker
+bytes executes code.  Do not expose these ports to the internet.
+
+Every connection opens with a one-time **handshake** instead of
+per-message version stamps: the client sends a hello frame carrying the
+protocol magic, its :data:`repro.serving.transport.WIRE_VERSION`, and
+its role; the server validates and answers with its own hello.  A
+mismatched build is rejected loudly *once, at connect time* — after
+that, neither side re-validates the ``version`` field riding on each
+message dataclass (it stays for wire compat), keeping the per-delta hot
+path free of checks.
+
+``PeerGone`` is the one exception callers need to map to placement
+labels: it means the other end vanished mid-frame (process died, socket
+reset), which the transports surface as "expert E replica R worker
+died", never a bare EOF.
+"""
+from __future__ import annotations
+
+import pickle
+import socket
+import struct
+
+from repro.serving.transport import WIRE_VERSION
+
+MAGIC = "repro-serve-net"
+_LEN = struct.Struct(">I")
+MAX_FRAME = 1 << 30              # 1 GiB: a corrupt length prefix fails fast
+
+
+class PeerGone(ConnectionError):
+    """The remote end closed or reset the connection mid-protocol."""
+
+
+def send_frame(sock: socket.socket, obj) -> None:
+    payload = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    try:
+        sock.sendall(_LEN.pack(len(payload)) + payload)
+    except (BrokenPipeError, ConnectionResetError, OSError) as e:
+        raise PeerGone(str(e)) from None
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        try:
+            chunk = sock.recv(n - len(buf))
+        except (ConnectionResetError, BrokenPipeError) as e:
+            raise PeerGone(str(e)) from None
+        if not chunk:
+            raise PeerGone("connection closed by peer")
+        buf += chunk
+    return bytes(buf)
+
+
+def recv_frame(sock: socket.socket):
+    (n,) = _LEN.unpack(_recv_exact(sock, _LEN.size))
+    if n > MAX_FRAME:
+        raise PeerGone(f"frame length {n} exceeds {MAX_FRAME} — "
+                       f"not a {MAGIC} peer")
+    return pickle.loads(_recv_exact(sock, n))
+
+
+# -- the one-time connection handshake --------------------------------------
+def hello(role: str, version: int = WIRE_VERSION, **extra) -> dict:
+    return {"magic": MAGIC, "wire": version, "role": role, **extra}
+
+
+def client_handshake(sock: socket.socket, role: str,
+                     version: int = WIRE_VERSION) -> dict:
+    """Open a connection as ``role``; returns the server's hello.
+
+    Raises ``RuntimeError`` naming both builds on a version mismatch —
+    once per connection, so no message on this socket is ever
+    re-validated.
+    """
+    send_frame(sock, hello(role, version))
+    reply = recv_frame(sock)
+    if not isinstance(reply, dict) or reply.get("magic") != MAGIC:
+        raise RuntimeError(f"peer did not speak the {MAGIC} protocol "
+                           f"(got {type(reply).__name__})")
+    if "error" in reply:
+        raise RuntimeError(f"peer rejected the connection: {reply['error']}")
+    if reply.get("wire") != version:
+        raise RuntimeError(
+            f"wire protocol mismatch: peer speaks v{reply.get('wire')!r} "
+            f"but this build speaks v{version} — frontend, registry and "
+            f"expert workers must run the same serving build")
+    return reply
+
+
+def server_handshake(sock: socket.socket,
+                     version: int = WIRE_VERSION, role: str = "server",
+                     **extra) -> dict | None:
+    """Answer a client hello; returns it, or None if the client was
+    rejected (wrong magic or a mismatched build — the rejection reason
+    is shipped back before closing, so the client fails loudly too)."""
+    try:
+        h = recv_frame(sock)
+    except PeerGone:
+        return None
+    if not isinstance(h, dict) or h.get("magic") != MAGIC:
+        try:
+            send_frame(sock, {"magic": MAGIC,
+                              "error": "not a repro-serve-net hello"})
+        except PeerGone:
+            pass
+        return None
+    if h.get("wire") != version:
+        try:
+            send_frame(sock, {
+                "magic": MAGIC,
+                "error": f"wire protocol mismatch: you speak "
+                         f"v{h.get('wire')!r}, this server speaks "
+                         f"v{version}"})
+        except PeerGone:
+            pass
+        return None
+    send_frame(sock, hello(role, version, **extra))
+    return h
+
+
+def parse_addr(spec: str) -> tuple[str, int]:
+    """``"host:port"`` -> ``(host, port)``, validated."""
+    host, sep, port = spec.rpartition(":")
+    if not sep or not host:
+        raise ValueError(f"bad address {spec!r}: expected HOST:PORT")
+    try:
+        return host, int(port)
+    except ValueError:
+        raise ValueError(f"bad port in address {spec!r}") from None
+
+
+def connect(addr: tuple[str, int], timeout: float) -> socket.socket:
+    """TCP connect with a timeout; the socket keeps it as read timeout."""
+    sock = socket.create_connection(addr, timeout=timeout)
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    sock.settimeout(timeout)
+    return sock

@@ -1,0 +1,205 @@
+"""Worker discovery for network serving.
+
+The registry is the only piece of the fleet that knows who exists.
+Expert workers ``register`` at boot (getting a replica index assigned if
+they did not claim one) and ``heartbeat`` periodically; a worker whose
+heartbeats stop is dropped from ``placements`` after ``ttl_s`` — the
+registry never *kills* anything, it just stops advertising the silent
+worker, so frontends that connect later route around it.  Frontends
+``lease`` a monotonically increasing namespace index at construction so
+N concurrent frontends never hand out colliding request uids (see
+``ServeFrontend.uid_namespace``).
+
+The registry carries **no request traffic** — after discovery,
+frontends talk straight to the workers.  That keeps it a pure control
+plane: losing it mid-serve only blocks *new* frontends/workers from
+joining, never tokens in flight.  State is in-memory on purpose; a
+restarted registry repopulates from the next round of heartbeats
+(workers re-register when a heartbeat comes back ``unknown``).
+
+Run standalone::
+
+    python -m repro.serving.net.registry --port 7070
+
+or in-process (tests, ``LocalFleet``)::
+
+    with Registry(ttl_s=5.0) as reg:
+        ...reg.addr...
+
+Ops (one request/reply pair per connection, framed + handshaked as in
+:mod:`repro.serving.net.framing`):
+
+====================  =======================================  ==========================
+op                    args                                     reply
+====================  =======================================  ==========================
+``register``          ``{expert, host, port[, replica]}``      ``{replica, ttl_s}``
+``heartbeat``         ``(expert, replica)``                    ``"ok"`` | ``"unknown"``
+``placements``        —                                        ``[(expert, replica, host, port)]``
+``lease``             —                                        ``int`` (0, 1, 2, ...)
+``stop``              —                                        ``"ok"`` (shuts the registry down)
+====================  =======================================  ==========================
+"""
+from __future__ import annotations
+
+import argparse
+import socket
+import threading
+import time
+
+from repro.serving.net import framing
+
+
+class Registry:
+    """Threaded TCP discovery endpoint. One short-lived connection per op."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0,
+                 ttl_s: float = 10.0):
+        if ttl_s <= 0:
+            raise ValueError(f"ttl_s must be positive, got {ttl_s}")
+        self.ttl_s = float(ttl_s)
+        self._lock = threading.Lock()
+        # (expert, replica) -> (host, port, last_seen_monotonic)
+        self._workers: dict[tuple[int, int], tuple[str, int, float]] = {}
+        self._leases = 0
+        self._stop = threading.Event()
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, port))
+        self._sock.listen(64)
+        self._sock.settimeout(0.2)       # so the accept loop sees _stop
+        self.host, self.port = self._sock.getsockname()[:2]
+        self._thread = threading.Thread(target=self._serve, daemon=True,
+                                        name="serve-registry")
+        self._thread.start()
+
+    @property
+    def addr(self) -> str:
+        return f"{self.host}:{self.port}"
+
+    # -- server side --------------------------------------------------------
+    def _serve(self) -> None:
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._sock.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                break
+            threading.Thread(target=self._handle_conn, args=(conn,),
+                             daemon=True).start()
+        self._sock.close()
+
+    def _handle_conn(self, conn: socket.socket) -> None:
+        with conn:
+            conn.settimeout(5.0)
+            if framing.server_handshake(conn, role="registry") is None:
+                return                      # mismatch already shipped back
+            try:
+                op, args = framing.recv_frame(conn)
+                framing.send_frame(conn, self._handle(op, args))
+            except framing.PeerGone:
+                pass
+
+    def _handle(self, op: str, args):
+        now = time.monotonic()
+        with self._lock:
+            if op == "register":
+                e = int(args["expert"])
+                r = args.get("replica")
+                if r is None:
+                    taken = {rr for (ee, rr) in self._workers if ee == e}
+                    r = next(i for i in range(len(taken) + 1)
+                             if i not in taken)
+                self._workers[(e, int(r))] = (args["host"], int(args["port"]),
+                                              now)
+                return {"replica": int(r), "ttl_s": self.ttl_s}
+            if op == "heartbeat":
+                key = (int(args[0]), int(args[1]))
+                if key not in self._workers:
+                    return "unknown"        # worker should re-register
+                host, port, _ = self._workers[key]
+                self._workers[key] = (host, port, now)
+                return "ok"
+            if op == "placements":
+                return sorted((e, r, host, port)
+                              for (e, r), (host, port, seen)
+                              in self._workers.items()
+                              if now - seen <= self.ttl_s)
+            if op == "lease":
+                lease, self._leases = self._leases, self._leases + 1
+                return lease
+            if op == "stop":
+                self._stop.set()
+                return "ok"
+            raise ValueError(f"unknown registry op {op!r}")
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._thread.join(timeout=2.0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.stop()
+
+
+# -- client side -------------------------------------------------------------
+def call(registry: str, op: str, args=None, *, timeout: float = 10.0):
+    """One-shot registry op over a fresh (handshaked) connection."""
+    sock = framing.connect(framing.parse_addr(registry), timeout)
+    try:
+        framing.client_handshake(sock, role=f"registry-client:{op}")
+        framing.send_frame(sock, (op, args))
+        return framing.recv_frame(sock)
+    finally:
+        sock.close()
+
+
+def wait_for_fleet(registry: str, n_experts: int, *,
+                   timeout: float = 30.0, poll_s: float = 0.2) -> list:
+    """Poll ``placements`` until every expert in ``range(n_experts)`` has
+    at least one live worker; returns the placement list.  Raises
+    ``RuntimeError`` naming the experts still missing on timeout."""
+    deadline = time.monotonic() + timeout
+    placements: list = []
+    while True:
+        placements = call(registry, "placements", timeout=timeout)
+        covered = {e for (e, r, host, port) in placements}
+        missing = sorted(set(range(n_experts)) - covered)
+        if not missing:
+            return placements
+        if time.monotonic() >= deadline:
+            raise RuntimeError(
+                f"registry {registry} has no live worker for expert(s) "
+                f"{missing} after {timeout:.1f}s (live placements: "
+                f"{placements}) — start them with "
+                f"`python -m repro.serving.net.expert_worker --expert E "
+                f"--registry {registry} ...`")
+        time.sleep(poll_s)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="Discovery registry for network mixture serving.")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="0 picks an ephemeral port (printed on stdout)")
+    ap.add_argument("--ttl", type=float, default=10.0,
+                    help="seconds without a heartbeat before a worker "
+                         "is dropped from placements")
+    args = ap.parse_args(argv)
+    reg = Registry(host=args.host, port=args.port, ttl_s=args.ttl)
+    # single machine-readable line so spawners can scrape the address
+    print(f"REGISTRY {reg.addr}", flush=True)
+    try:
+        while True:
+            time.sleep(3600)
+    except KeyboardInterrupt:
+        pass
+    finally:
+        reg.stop()
+
+
+if __name__ == "__main__":
+    main()

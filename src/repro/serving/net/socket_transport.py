@@ -1,0 +1,242 @@
+"""Raw-TCP :class:`repro.serving.transport.Transport` onto a worker fleet.
+
+One long-lived TCP connection per (expert, replica) slot, carrying
+length-prefixed pickled frames (:mod:`repro.serving.net.framing`).  The
+``WIRE_VERSION`` handshake runs **once per connection** — after it, no
+message is re-validated, and the worker's hello is cross-checked against
+the placement the registry advertised, so a frontend can never silently
+stream against the wrong expert.
+
+Semantics match :class:`repro.serving.transport.ProcessTransport` with
+one twist: network workers tick themselves (see
+:mod:`repro.serving.net.expert_worker`), so ``tick(s)`` here is a long
+**poll** — "send me whatever expert ``s`` has emitted for me, waiting up
+to ``poll_s`` if nothing yet".  ``busy``/``load`` stay sender-side
+(enqueues minus ``done`` deltas), so scheduling never round-trips.
+``tick_many`` pipelines the polls (send all, then collect): waiting on N
+busy workers costs one poll interval, not N.
+
+Failures are **per slot**: a dead worker marks only its own slot broken
+(each socket is an independent ordered stream, unlike a shared pipe
+pool), and every later op on that slot raises a ``RuntimeError`` naming
+the ``(expert, replica)`` placement and its address — the other slots
+keep serving, and any poll replies of theirs in flight when the death
+surfaced are drained and buffered so no token delta is ever lost.  ``close()`` sends a polite ``close`` op and shuts the
+sockets; the workers themselves keep running for other frontends (a
+frontend is a client of the fleet, never its owner).
+"""
+from __future__ import annotations
+
+import socket
+
+from repro.serving.net import framing
+from repro.serving.transport import Transport, _RemoteError
+
+
+class SocketTransport(Transport):
+    """TCP client transport onto independently-started expert workers.
+
+    ``addrs`` maps slot index -> ``(host, port)``; ``expect`` (optional,
+    same order) carries the registry's ``(expert, replica)`` claim per
+    slot, verified against each worker's handshake hello.
+    """
+
+    def __init__(self, addrs, labels=None, *, expect=None,
+                 connect_timeout: float = 10.0, read_timeout: float = 60.0,
+                 poll_s: float = 0.02):
+        self._addrs = [tuple(a) for a in addrs]
+        self.n_servers = len(self._addrs)
+        self.labels = list(labels) if labels is not None else \
+            [f"expert {s}" for s in range(self.n_servers)]
+        self._poll_s = float(poll_s)
+        self._read_timeout = float(read_timeout)
+        self._outstanding = [0] * self.n_servers
+        # deltas received but not yet handed to the caller: when one slot
+        # dies mid tick_many, the other slots' poll replies must still be
+        # read (each socket is an ordered request/reply stream — leaving a
+        # reply unread would desync every later op) and must not be lost
+        # (the worker already handed them over)
+        self._pending: dict[int, list] = {}
+        self._dead: list[str | None] = [None] * self.n_servers
+        self._closed = False
+        self._socks: list[socket.socket | None] = []
+        try:
+            for s, addr in enumerate(self._addrs):
+                try:
+                    sock = framing.connect(addr, connect_timeout)
+                except OSError as e:
+                    raise RuntimeError(
+                        f"cannot reach {self.labels[s]} worker at "
+                        f"{addr[0]}:{addr[1]}: {e}") from None
+                hello = framing.client_handshake(sock, role="frontend")
+                claim = None if expect is None else tuple(expect[s])
+                ident = (hello.get("expert"), hello.get("replica"))
+                if claim is not None and ident != claim:
+                    sock.close()
+                    raise RuntimeError(
+                        f"placement mismatch at {addr[0]}:{addr[1]}: the "
+                        f"registry advertised expert {claim[0]} replica "
+                        f"{claim[1]} but the worker identifies as expert "
+                        f"{ident[0]} replica {ident[1]} — stale registry "
+                        f"entry or a port collision")
+                sock.settimeout(self._read_timeout)
+                self._socks.append(sock)
+        except Exception:
+            for sock in self._socks:
+                try:
+                    sock.close()
+                except OSError:
+                    pass
+            raise
+
+    # -- failure plumbing ----------------------------------------------------
+    def _fail(self, s: int, reason: str) -> RuntimeError:
+        self._dead[s] = reason
+        try:
+            self._socks[s].close()
+        except OSError:
+            pass
+        host, port = self._addrs[s]
+        return RuntimeError(
+            f"{self.labels[s]} worker at {host}:{port} died mid-stream "
+            f"({reason}) — its in-flight requests are lost; the remaining "
+            f"slots keep serving")
+
+    def _check(self, s: int) -> None:
+        if self._closed:
+            raise RuntimeError("SocketTransport is closed; build a fresh "
+                               "engine to serve again")
+        if self._dead[s] is not None:
+            host, port = self._addrs[s]
+            raise RuntimeError(
+                f"{self.labels[s]} worker at {host}:{port} is dead "
+                f"({self._dead[s]})")
+
+    def _send(self, s: int, op: str, args) -> None:
+        self._check(s)
+        try:
+            framing.send_frame(self._socks[s], (op, args))
+        except framing.PeerGone as e:
+            raise self._fail(s, str(e)) from None
+
+    def _recv(self, s: int):
+        self._check(s)
+        try:
+            out = framing.recv_frame(self._socks[s])
+        except socket.timeout:
+            raise self._fail(
+                s, f"no reply within {self._read_timeout:.0f}s") from None
+        except (framing.PeerGone, OSError) as e:
+            raise self._fail(s, str(e) or type(e).__name__) from None
+        if isinstance(out, _RemoteError):
+            # the worker is tearing down after shipping its traceback
+            self._dead[s] = "worker exception"
+            raise RuntimeError(f"{self.labels[s]} worker failed:\n"
+                               f"{out.trace}")
+        return out
+
+    # -- Transport surface ---------------------------------------------------
+    def enqueue(self, s, msg):
+        # no per-message check_version: the connection handshake already
+        # proved both ends run the same build
+        self._outstanding[s] += 1
+        self._send(s, "enqueue", msg)
+
+    def _absorb(self, s, deltas):
+        self._outstanding[s] -= sum(d.done for d in deltas)
+        return deltas
+
+    def tick(self, s):
+        stash = self._pending.pop(s, None)
+        if stash:
+            return self._absorb(s, stash)
+        self._send(s, "poll", self._poll_s)
+        return self._absorb(s, self._recv(s))
+
+    def tick_many(self, servers):
+        servers = list(servers)
+        sent, err = [], None
+        for s in servers:                 # overlap the workers' poll waits
+            if self._pending.get(s):
+                continue                  # deliver the stash before polling
+            try:
+                self._send(s, "poll", self._poll_s)
+                sent.append(s)
+            except RuntimeError as e:
+                if err is None:
+                    err = e
+        for s in sent:
+            try:
+                self._pending.setdefault(s, []).extend(self._recv(s))
+            except RuntimeError as e:
+                if err is None:
+                    err = e
+        if err is not None:
+            raise err    # live slots' deltas stay stashed for later ticks
+        return [(s, self._absorb(s, self._pending.pop(s, [])))
+                for s in servers]
+
+    def busy(self, s):
+        return self._outstanding[s] > 0
+
+    def load(self, s):
+        return self._outstanding[s]
+
+    def stats(self, s):
+        self._send(s, "stats", None)
+        return self._recv(s)
+
+    def reset_stats(self):
+        for s in range(self.n_servers):
+            if self._dead[s] is None:     # partial stats tolerate the dead
+                self._send(s, "reset_stats", None)
+                self._recv(s)
+
+    def warmup(self, prompt_len, sampled):
+        # per-worker jit caches: warm every slot, concurrently (workers
+        # pre-warm at boot, so this normally returns compiled-cache hits)
+        for s in range(self.n_servers):
+            self._send(s, "warmup", (prompt_len, sampled))
+        for s in range(self.n_servers):
+            self._recv(s)
+
+    def sync(self):
+        # best-effort over the live slots: sync only exists so timing
+        # stats exclude queued device work — a slot dying here must not
+        # take down the end-of-run report (its death is already surfaced
+        # by the tick that lost the request, or by the stats() attempt)
+        live = [s for s in range(self.n_servers) if self._dead[s] is None]
+        for s in live:
+            try:
+                self._send(s, "sync", None)
+            except RuntimeError:
+                pass
+        for s in live:
+            if self._dead[s] is None:
+                try:
+                    self._recv(s)
+                except RuntimeError:
+                    pass
+
+    def close(self):
+        if self._closed:
+            return
+        self._closed = True
+        for s, sock in enumerate(self._socks):
+            if self._dead[s] is not None:
+                continue
+            try:
+                framing.send_frame(sock, ("close", None))
+            except framing.PeerGone:
+                pass
+            try:
+                sock.close()
+            except OSError:
+                pass
+        self._socks = []
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass

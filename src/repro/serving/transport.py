@@ -12,10 +12,14 @@ cross it:
   * :class:`StatsMsg`     — expert -> frontend: a counter snapshot.
 
 Every message carries the wire protocol ``version`` (module constant
-:data:`WIRE_VERSION`); transports reject a mismatched message loudly at
-the boundary instead of letting two builds desync silently — the
-forward-compat groundwork for the network RPC transport, where the two
-ends really can run different code.
+:data:`WIRE_VERSION`) for wire compat, but the build pairing is
+validated **once per connection**, never per message: transports
+``check_version`` each caller-built :class:`RequestMsg` at ``enqueue``
+(the boundary where a foreign object can enter), and a worker proves
+its build exactly once — the process backend ships a one-time ``hello``
+at boot, the TCP backend (:mod:`repro.serving.net`) runs a handshake at
+connect.  The per-delta hot path carries no checks: two ends that
+passed the handshake cannot emit mismatched deltas.
 
 A :class:`Transport` carries them to N expert *servers* and knows
 nothing about models, caches, or routing.  A server slot is just an
@@ -52,8 +56,9 @@ import numpy as np
 from repro.serving.sampling import SamplingParams
 
 # Bump on ANY change to the message dataclasses below.  Each message
-# carries it, and the transports refuse to pass a mismatched message —
-# two serving builds must be upgraded together, never mixed silently.
+# carries it, transports check it at enqueue, and every connection-time
+# handshake (TCP hello, process boot hello) pins it — two serving builds
+# must be upgraded together, never mixed silently.
 # v2: StatsMsg grew prefix_hit_blocks / prefill_tokens_saved /
 # cached_blocks (prefix-sharing KV cache).
 WIRE_VERSION = 2
@@ -221,10 +226,10 @@ class LoopbackTransport(Transport):
         self.servers[s].enqueue(check_version(msg))
 
     def tick(self, s):
-        deltas = self.servers[s].tick()
-        for d in deltas:
-            check_version(d)
-        return deltas
+        # no per-delta check_version: the server is this build's own
+        # object, and the handshake rule (see module docstring) keeps
+        # the emit path check-free on every transport
+        return self.servers[s].tick()
 
     def busy(self, s):
         return self.servers[s].busy
@@ -235,7 +240,7 @@ class LoopbackTransport(Transport):
                 + int(srv.filling.sum()))
 
     def stats(self, s):
-        return check_version(self.servers[s].stats())
+        return self.servers[s].stats()
 
     def reset_stats(self):
         for s in self.servers:
@@ -265,6 +270,9 @@ def _serve_expert(conn, ecfg, eng, host_params) -> None:
     try:
         params = jax.device_put(host_params)   # once, not per jit call
         server = ExpertServer(ecfg, params, eng)
+        # one-time build proof: the parent validates this hello on its
+        # first reply read instead of re-checking every delta's version
+        conn.send(("hello", WIRE_VERSION))
         while True:
             try:
                 op, args = conn.recv()
@@ -329,6 +337,7 @@ class ProcessTransport(Transport):
         self.labels = list(labels) if labels is not None else \
             [f"expert {s}" for s in range(self.n_servers)]
         self._outstanding = [0] * self.n_servers
+        self._hello = [False] * self.n_servers
         self._broken = False
         self._closed = False
         ctx = mp.get_context("spawn")            # never fork a live jax
@@ -374,6 +383,26 @@ class ProcessTransport(Transport):
     def _recv(self, s):
         self._check()
         try:
+            if not self._hello[s]:
+                # the worker's first message is its boot hello: validate
+                # the build pairing once per process, so deltas need no
+                # per-message version checks afterwards
+                first = self._conns[s].recv()
+                if isinstance(first, _RemoteError):
+                    self._broken = True
+                    raise RuntimeError(f"{self.labels[s]} worker failed:\n"
+                                       f"{first.trace}")
+                if first != ("hello", WIRE_VERSION):
+                    self._broken = True
+                    got = first[1] if (isinstance(first, tuple)
+                                       and len(first) == 2
+                                       and first[0] == "hello") else first
+                    raise RuntimeError(
+                        f"wire protocol mismatch: {self.labels[s]} worker "
+                        f"speaks {got!r} but this build speaks "
+                        f"v{WIRE_VERSION} — frontend and expert servers "
+                        f"must run the same serving build")
+                self._hello[s] = True
             out = self._conns[s].recv()
         except EOFError:
             self._broken = True
@@ -389,8 +418,8 @@ class ProcessTransport(Transport):
         self._send(s, "enqueue", check_version(msg))  # fire-and-forget
 
     def _absorb(self, s, deltas):
-        for d in deltas:
-            check_version(d)
+        # deltas carry `version` for wire compat but are not re-checked
+        # here: the boot hello already proved the worker's build
         self._outstanding[s] -= sum(d.done for d in deltas)
         return deltas
 
@@ -418,7 +447,7 @@ class ProcessTransport(Transport):
 
     def stats(self, s):
         self._send(s, "stats", None)
-        return check_version(self._recv(s))
+        return self._recv(s)
 
     def reset_stats(self):
         for s in range(self.n_servers):

@@ -1,0 +1,466 @@
+"""Network serving: framing, registry, socket transport, worker fleet.
+
+The ``repro.serving.net`` subsystem puts the transport seam on real TCP:
+independently-started expert workers (own params, own KV pool, own
+clock, self-ticking), a discovery registry with heartbeats, and N
+stateless ``ServeFrontend`` instances connecting concurrently with
+leased uid namespaces.  These tests pin:
+
+* the wire layer — frame roundtrip, ``PeerGone`` on a vanished peer,
+  the one-time version handshake rejecting mismatched builds in both
+  directions, and placement cross-checks against the registry's claim;
+* the registry — replica auto-assignment, heartbeat expiry dropping
+  silent workers from placements, monotonic namespace leases;
+* token identity — a tcp frontend against in-process workers must match
+  the serial oracle bitwise (greedy + sampled + early stops), exactly
+  like every other transport, because the counter-based sampler makes
+  streams a pure function of ``(seed, uid, step)``;
+* multi-frontend serving — two frontends on one fleet lease distinct
+  namespaces, interleave their decodes, and never corrupt each other's
+  streams;
+* failure semantics — a worker death mid-stream raises a RuntimeError
+  naming the ``(expert, replica)`` placement while the other slots keep
+  serving, and ``run()`` degrades to partial stats with an explicit
+  ``missing_replicas`` list instead of losing the report;
+* the standalone entry points — a ``LocalFleet`` of real
+  ``python -m repro.serving.net.{registry,expert_worker}`` subprocesses
+  (slow: each worker re-imports jax and compiles its own programs).
+"""
+import dataclasses
+import socket
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import router as routerlib
+from repro.models import model as modellib
+from repro.serving import (EngineConfig, SamplingParams, ServeFrontend,
+                           baseline)
+from repro.serving.frontend import MAX_UID_NAMESPACE, UID_NAMESPACE_STRIDE
+from repro.serving.net import Registry, SocketTransport, framing
+from repro.serving.net import registry as netreg
+from repro.serving.net.expert_worker import ExpertWorker
+from repro.serving.transport import WIRE_VERSION
+
+ECFG = ModelConfig(name="net-expert", n_layers=2, d_model=64, n_heads=4,
+                   n_kv_heads=4, d_ff=128, vocab_size=128, ffn_type="gelu",
+                   loss_chunk=32, compute_dtype="float32",
+                   param_dtype="float32")
+RCFG = ModelConfig(name="net-router", n_layers=1, d_model=32, n_heads=2,
+                   n_kv_heads=2, d_ff=64, vocab_size=128, ffn_type="gelu",
+                   loss_chunk=32, compute_dtype="float32",
+                   param_dtype="float32")
+E, PREFIX, MAXLEN, BS = 2, 16, 48, 16
+ENG = EngineConfig(lanes_per_expert=2, max_len=MAXLEN, prefix_len=PREFIX,
+                   block_size=BS, route_batch=4)
+
+
+@pytest.fixture(scope="module")
+def mixture():
+    key = jax.random.PRNGKey(0)
+    router_params = routerlib.init_ensemble(key, RCFG, E)
+    expert_params = [modellib.init_params(jax.random.fold_in(key, e), ECFG)
+                     for e in range(E)]
+    return expert_params, router_params
+
+
+@pytest.fixture(scope="module")
+def fleet(mixture):
+    """A shared in-process fleet: registry + one worker per expert.
+
+    Tests that must kill a worker boot their own fleet instead (killing
+    this one would poison every later test in the module)."""
+    expert_params, _ = mixture
+    reg = Registry(ttl_s=30.0)
+    workers = [ExpertWorker(ECFG, ENG, expert_params[e], e,
+                            registry=reg.addr, warmup_len=PREFIX).start()
+               for e in range(E)]
+    yield reg
+    for w in workers:
+        w.stop()
+    reg.stop()
+
+
+def _tcp(reg, **kw):
+    return dataclasses.replace(ENG, transport="tcp", registry=reg.addr, **kw)
+
+
+def _oracle(params, prompt, n_new, sampling=None, uid=0, stops=()):
+    return baseline.generate_request(ECFG, params, prompt, n_new,
+                                     sampling=sampling, uid=uid,
+                                     stop_tokens=stops, cache_len=MAXLEN)
+
+
+# ---------------------------------------------------------------------------
+# wire layer: framing + the one-time handshake
+# ---------------------------------------------------------------------------
+def test_framing_roundtrip_and_peer_gone():
+    a, b = socket.socketpair()
+    obj = {"x": np.arange(5, dtype=np.int32), "y": [1, (2, 3)], "z": None}
+    framing.send_frame(a, obj)
+    out = framing.recv_frame(b)
+    np.testing.assert_array_equal(out["x"], obj["x"])
+    assert out["y"] == obj["y"] and out["z"] is None
+    a.close()
+    with pytest.raises(framing.PeerGone):
+        framing.recv_frame(b)
+    b.close()
+
+
+def test_parse_addr():
+    assert framing.parse_addr("127.0.0.1:7070") == ("127.0.0.1", 7070)
+    for bad in ("nohost", ":7", "h:notaport"):
+        with pytest.raises(ValueError):
+            framing.parse_addr(bad)
+
+
+def _fake_worker(version=WIRE_VERSION, **extra):
+    """A listener answering one connection's handshake, nothing more."""
+    lst = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    lst.bind(("127.0.0.1", 0))
+    lst.listen(1)
+    host, port = lst.getsockname()[:2]
+
+    def serve():
+        conn, _ = lst.accept()
+        framing.recv_frame(conn)              # client hello
+        framing.send_frame(conn, framing.hello("expert-worker", version,
+                                               **extra))
+        time.sleep(0.5)
+        conn.close()
+        lst.close()
+
+    threading.Thread(target=serve, daemon=True).start()
+    return host, port
+
+
+def test_handshake_rejects_mismatched_server():
+    """A frontend connecting to a worker from a different build must fail
+    at connect time, naming both versions — never desync later."""
+    host, port = _fake_worker(version=999, expert=0, replica=0)
+    with pytest.raises(RuntimeError, match=rf"v999.*v{WIRE_VERSION}"):
+        SocketTransport([(host, port)], expect=[(0, 0)])
+
+
+def test_handshake_rejects_mismatched_client():
+    """The server side of the same coin: a registry refuses a hello from
+    the wrong build and ships the reason back before closing."""
+    with Registry(ttl_s=1.0) as reg:
+        sock = framing.connect(framing.parse_addr(reg.addr), 5.0)
+        try:
+            with pytest.raises(RuntimeError,
+                               match=r"rejected.*v999"):
+                framing.client_handshake(sock, role="frontend", version=999)
+        finally:
+            sock.close()
+
+
+def test_socket_transport_placement_mismatch():
+    """The worker's hello identity is cross-checked against the registry's
+    claim: a stale entry or port collision fails loudly, not silently
+    streaming against the wrong expert."""
+    host, port = _fake_worker(expert=5, replica=0)
+    with pytest.raises(RuntimeError, match=r"placement mismatch"):
+        SocketTransport([(host, port)], expect=[(0, 0)])
+
+
+# ---------------------------------------------------------------------------
+# registry: discovery, heartbeats, leases (no jax needed)
+# ---------------------------------------------------------------------------
+def test_registry_register_heartbeat_expiry():
+    with Registry(ttl_s=0.3) as reg:
+        r0 = netreg.call(reg.addr, "register",
+                         {"expert": 0, "host": "h", "port": 1})
+        assert r0["replica"] == 0 and r0["ttl_s"] == pytest.approx(0.3)
+        r1 = netreg.call(reg.addr, "register",
+                         {"expert": 0, "host": "h", "port": 2})
+        assert r1["replica"] == 1              # auto-assigned, not clobbered
+        assert netreg.call(reg.addr, "placements") == \
+            [(0, 0, "h", 1), (0, 1, "h", 2)]
+        assert netreg.call(reg.addr, "heartbeat", (0, 0)) == "ok"
+        assert netreg.call(reg.addr, "heartbeat", (0, 7)) == "unknown"
+        time.sleep(0.45)                       # both workers go silent
+        assert netreg.call(reg.addr, "placements") == []
+        # a late heartbeat revives exactly that worker, nothing else
+        assert netreg.call(reg.addr, "heartbeat", (0, 0)) == "ok"
+        assert netreg.call(reg.addr, "placements") == [(0, 0, "h", 1)]
+        with pytest.raises(RuntimeError, match=r"no live worker for "
+                                               r"expert\(s\)"):
+            netreg.wait_for_fleet(reg.addr, 2, timeout=0.4)
+
+
+def test_registry_lease_monotonic():
+    with Registry(ttl_s=1.0) as reg:
+        assert [netreg.call(reg.addr, "lease") for _ in range(3)] == [0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# config validation (no fleet needed)
+# ---------------------------------------------------------------------------
+def test_tcp_requires_registry(mixture):
+    expert_params, router_params = mixture
+    with pytest.raises(ValueError, match="registry"):
+        ServeFrontend(ECFG, RCFG, expert_params, router_params,
+                      dataclasses.replace(ENG, transport="tcp"))
+
+
+def test_replicas_arg_rejected_on_tcp(mixture):
+    """On tcp the fleet is the source of truth for replication — a
+    replica map would silently disagree with what actually registered."""
+    expert_params, router_params = mixture
+    with pytest.raises(ValueError, match="replicas"):
+        ServeFrontend(ECFG, RCFG, expert_params, router_params,
+                      dataclasses.replace(ENG, transport="tcp",
+                                          registry="127.0.0.1:1"),
+                      replicas={0: 2})
+
+
+def test_uid_namespace_bounds(mixture):
+    expert_params, router_params = mixture
+    with pytest.raises(ValueError, match="uid_namespace"):
+        ServeFrontend(ECFG, RCFG, expert_params, router_params, ENG,
+                      uid_namespace=MAX_UID_NAMESPACE + 1)
+
+
+# ---------------------------------------------------------------------------
+# tcp frontend vs the serial oracle (in-process workers, real sockets)
+# ---------------------------------------------------------------------------
+def test_tcp_identity_smoke(mixture, fleet):
+    """Greedy + sampled + early stops over real TCP: tokens bitwise
+    identical to the baseline oracle, stats complete, correct routes."""
+    expert_params, router_params = mixture
+    rng = np.random.default_rng(90)
+    R = 6
+    prompts = [rng.integers(0, ECFG.vocab_size,
+                            size=int(rng.integers(PREFIX, 30))).astype(np.int32)
+               for _ in range(R)]
+    n_new = [int(rng.integers(2, 7)) for _ in range(R)]
+    sps = [None if i % 2 == 0 else
+           SamplingParams(temperature=0.9, top_k=8, seed=70 + i)
+           for i in range(R)]
+    stops = [frozenset() if i % 3 else
+             frozenset(int(t) for t in
+                       rng.integers(0, ECFG.vocab_size, size=12))
+             for i in range(R)]
+    with ServeFrontend(ECFG, RCFG, expert_params, router_params,
+                       _tcp(fleet), uid_namespace=0) as eng:
+        reqs = [eng.submit(prompts[i], n_new[i], sampling=sps[i],
+                           stop_tokens=stops[i], arrival_tick=i // 3)
+                for i in range(R)]
+        assert [r.uid for r in reqs] == list(range(R))
+        res = eng.run()
+    assert res["transport"] == "tcp"
+    assert res["missing_replicas"] == []
+    want_routes = baseline.route(RCFG, router_params,
+                                 np.stack([p[:PREFIX] for p in prompts]),
+                                 PREFIX)
+    for r in res["requests"]:
+        assert r.expert == want_routes[r.uid]
+        want = _oracle(expert_params[r.expert], prompts[r.uid],
+                       n_new[r.uid], sampling=sps[r.uid], uid=r.uid,
+                       stops=stops[r.uid])
+        np.testing.assert_array_equal(np.asarray(r.tokens), want,
+                                      err_msg=f"uid {r.uid}")
+    assert sum(s["served"] for s in res["per_expert"].values()) == R
+
+
+def test_uid_namespace_lease_and_stride(mixture, fleet):
+    """Frontends built without an explicit namespace lease one from the
+    registry; uids start at namespace * stride and the oracle keyed on
+    the full namespaced uid still matches bitwise."""
+    expert_params, router_params = mixture
+    rng = np.random.default_rng(91)
+    prompt = rng.integers(0, ECFG.vocab_size, size=PREFIX).astype(np.int32)
+    with ServeFrontend(ECFG, RCFG, expert_params, router_params,
+                       _tcp(fleet)) as fa:
+        ns = fa.uid_namespace
+        r = fa.submit(prompt, 3,
+                      sampling=SamplingParams(temperature=0.8, seed=5))
+        assert r.uid == ns * UID_NAMESPACE_STRIDE
+        fa.run()
+        np.testing.assert_array_equal(
+            np.asarray(r.tokens),
+            _oracle(expert_params[r.expert], prompt, 3,
+                    sampling=SamplingParams(temperature=0.8, seed=5),
+                    uid=r.uid))
+    with ServeFrontend(ECFG, RCFG, expert_params, router_params,
+                       _tcp(fleet)) as fb:
+        assert fb.uid_namespace > ns          # leases never repeat
+
+
+def test_two_frontends_share_one_fleet(mixture, fleet):
+    """Two stateless frontends, one fleet, interleaved step()s: disjoint
+    uids, zero cross-frontend stream corruption, every request bitwise
+    equal to the oracle keyed on its namespaced uid."""
+    expert_params, router_params = mixture
+    rng = np.random.default_rng(92)
+    with ServeFrontend(ECFG, RCFG, expert_params, router_params,
+                       _tcp(fleet)) as fa, \
+            ServeFrontend(ECFG, RCFG, expert_params, router_params,
+                          _tcp(fleet)) as fb:
+        assert fa.uid_namespace != fb.uid_namespace
+        reqs = []
+        for k in range(8):
+            front = fa if k % 2 == 0 else fb
+            prompt = rng.integers(
+                0, ECFG.vocab_size,
+                size=int(rng.integers(PREFIX, 30))).astype(np.int32)
+            sp = None if k % 3 == 0 else SamplingParams(
+                temperature=float(rng.uniform(0.5, 1.2)), top_k=8,
+                seed=int(rng.integers(0, 1 << 16)))
+            reqs.append((front, prompt, sp,
+                         front.submit(prompt, int(rng.integers(2, 6)),
+                                      sampling=sp, arrival_tick=0)))
+        while fa.busy or fb.busy:
+            if fa.busy:
+                fa.step()
+            if fb.busy:
+                fb.step()
+    uids_a = {r.uid for f, _, _, r in reqs if f is fa}
+    uids_b = {r.uid for f, _, _, r in reqs if f is fb}
+    assert not uids_a & uids_b
+    for _, prompt, sp, r in reqs:
+        want = _oracle(expert_params[r.expert], prompt, r.max_new_tokens,
+                       sampling=sp, uid=r.uid)
+        np.testing.assert_array_equal(np.asarray(r.tokens), want,
+                                      err_msg=f"uid {r.uid}")
+
+
+def test_replicated_tcp_fleet(mixture):
+    """Two workers for expert 0 (replica indices auto-assigned by the
+    registry), one for expert 1: the frontend derives the replica map
+    from the fleet, least-loaded admission spreads requests, and tokens
+    stay placement-invariant."""
+    expert_params, router_params = mixture
+    rng = np.random.default_rng(93)
+    with Registry(ttl_s=30.0) as reg:
+        workers = [ExpertWorker(ECFG, ENG, expert_params[e], e,
+                                registry=reg.addr, warmup_len=PREFIX).start()
+                   for e in (0, 0, 1)]
+        try:
+            with ServeFrontend(ECFG, RCFG, expert_params, router_params,
+                               _tcp(reg), uid_namespace=0) as eng:
+                assert eng.replicas == [2, 1]
+                assert eng.placements == [(0, 0), (0, 1), (1, 0)]
+                prompts = [rng.integers(0, ECFG.vocab_size,
+                                        size=PREFIX).astype(np.int32)
+                           for _ in range(6)]
+                reqs = [eng.submit(p, 4, arrival_tick=0) for p in prompts]
+                res = eng.run()
+            assert res["missing_replicas"] == []
+            assert res["per_expert"][0]["replicas"] == 2
+            assert set(res["per_expert"][0]["per_replica"]) <= {0, 1}
+            for i, r in enumerate(reqs):
+                np.testing.assert_array_equal(
+                    np.asarray(r.tokens),
+                    _oracle(expert_params[r.expert], prompts[i], 4,
+                            uid=r.uid))
+        finally:
+            for w in workers:
+                w.stop()
+
+
+# ---------------------------------------------------------------------------
+# failure semantics
+# ---------------------------------------------------------------------------
+def test_worker_death_mid_stream_names_placement(mixture):
+    """Killing a worker mid-stream must raise a RuntimeError naming the
+    expert placement and address — and the surviving slot keeps
+    answering."""
+    expert_params, router_params = mixture
+    rng = np.random.default_rng(94)
+    with Registry(ttl_s=30.0) as reg:
+        workers = [ExpertWorker(ECFG, ENG, expert_params[e], e,
+                                registry=reg.addr, warmup_len=PREFIX).start()
+                   for e in range(E)]
+        try:
+            with ServeFrontend(ECFG, RCFG, expert_params, router_params,
+                               _tcp(reg), uid_namespace=0) as eng:
+                reqs = [eng.submit(
+                    rng.integers(0, ECFG.vocab_size,
+                                 size=PREFIX).astype(np.int32),
+                    16, arrival_tick=0) for _ in range(4)]
+                eng.step()                    # route + enqueue everything
+                victim = reqs[0].expert
+                workers[victim].stop()        # crash, not a polite close
+                with pytest.raises(
+                        RuntimeError,
+                        match=rf"expert {victim} worker at .* died "
+                              rf"mid-stream"):
+                    for _ in range(200):
+                        eng.step()
+                # the other expert's slot is still alive and answering
+                survivors = [s for s, (e, _) in enumerate(eng.placements)
+                             if e != victim]
+                for s in survivors:
+                    assert eng._transport.stats(s).version == WIRE_VERSION
+        finally:
+            for w in workers:
+                w.stop()
+
+
+def test_run_partial_stats_on_dead_replica(mixture, monkeypatch):
+    """run()'s aggregation must tolerate a slot whose StatsMsg never
+    arrives: partial sums plus an explicit missing_replicas entry,
+    instead of losing the whole report."""
+    expert_params, router_params = mixture
+    rng = np.random.default_rng(95)
+    eng = ServeFrontend(ECFG, RCFG, expert_params, router_params, ENG)
+    for _ in range(6):
+        eng.submit(rng.integers(0, ECFG.vocab_size,
+                                size=PREFIX).astype(np.int32), 3,
+                   arrival_tick=0)
+    orig = eng._transport.stats
+
+    def stats(s):
+        if s == 0:
+            raise RuntimeError("expert 0 worker died (synthetic)")
+        return orig(s)
+
+    monkeypatch.setattr(eng._transport, "stats", stats)
+    res = eng.run()
+    assert res["missing_replicas"] == ["expert 0"]
+    st0 = res["per_expert"][0]
+    assert st0["missing_replicas"] == [0]
+    assert st0["served"] == 0 and st0["per_replica"] == {}
+    assert st0["peak_blocks"] == 0            # max over no live replicas
+    st1 = res["per_expert"][1]
+    assert st1["missing_replicas"] == [] and st1["served"] >= 0
+
+
+# ---------------------------------------------------------------------------
+# the standalone entry points: real subprocesses (slow)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_local_fleet_subprocess_end_to_end(mixture):
+    """LocalFleet shells out to the real module CLIs — one registry and
+    one expert_worker process per expert, params re-derived from the
+    seed — and a tcp frontend must still match the oracle bitwise."""
+    from repro.serving.net.fleet import LocalFleet
+    expert_params, router_params = mixture
+    rng = np.random.default_rng(96)
+    prompts = [rng.integers(0, ECFG.vocab_size,
+                            size=int(rng.integers(PREFIX, 28))).astype(np.int32)
+               for _ in range(4)]
+    sps = [None, SamplingParams(temperature=0.9, top_k=8, seed=11),
+           None, SamplingParams(temperature=1.1, top_p=0.9, seed=12)]
+    # seed=0 re-derives exactly the mixture fixture's expert params
+    # (init_params(fold_in(PRNGKey(0), e))) inside each worker process
+    with LocalFleet(ECFG, ENG, E, seed=0, warmup_len=PREFIX) as fleet:
+        eng_cfg = dataclasses.replace(ENG, transport="tcp",
+                                      registry=fleet.registry_addr)
+        with ServeFrontend(ECFG, RCFG, expert_params, router_params,
+                           eng_cfg, uid_namespace=0) as eng:
+            reqs = [eng.submit(prompts[i], 4, sampling=sps[i],
+                               arrival_tick=0) for i in range(4)]
+            res = eng.run()
+    assert res["transport"] == "tcp" and res["missing_replicas"] == []
+    for i, r in enumerate(reqs):
+        want = _oracle(expert_params[r.expert], prompts[i], 4,
+                       sampling=sps[i], uid=r.uid)
+        np.testing.assert_array_equal(np.asarray(r.tokens), want,
+                                      err_msg=f"uid {r.uid}")
