@@ -22,6 +22,11 @@ BENCH trajectory is *gated*, not just uploaded:
     distinct leased uid namespaces, ``uids_disjoint`` and
     ``tokens_identical`` — any cross-frontend stream corruption is a
     hard failure;
+  * a v6 ``autoscale`` section (present on ``--autoscale`` runs) must
+    report ``scaled_up_hot`` (the hot expert gained a replica
+    mid-serve), ``retired_cold`` (an idle cold replica was quiesced and
+    released), ``p99_ttft_improved`` vs the static single-replica run,
+    and ``tokens_identical`` across both runs — all hard gates;
   * engine tokens/sec must stay within ``--min-ratio`` of the baseline —
     generous by default because shared CI runners are noisy; the full
     delta table lands in ``$GITHUB_STEP_SUMMARY`` either way.
@@ -94,6 +99,12 @@ ROWS = [
     ("prefill tokens saved", "prefix_sharing.prefill_tokens_saved"),
     ("cached blocks", "prefix_sharing.cached_blocks"),
     ("unadmitted requests", "n_unadmitted"),
+    # v6 autoscale rows: absent in older reports, tolerantly skipped
+    ("autoscale hot p99 TTFT ms (static)", "autoscale.static.hot.ttft_p99_ms"),
+    ("autoscale hot p99 TTFT ms (scaled)",
+     "autoscale.autoscaled.hot.ttft_p99_ms"),
+    ("autoscale ups", "autoscale.autoscaled.scale_ups"),
+    ("autoscale downs", "autoscale.autoscaled.scale_downs"),
 ]
 
 
@@ -115,6 +126,27 @@ def check_two_frontend(fresh: dict) -> list[str]:
     if tf.get("tokens_identical") is not True:
         failures.append("token-identity gate failed (two-frontend run)")
     return failures
+
+def check_autoscale(fresh: dict) -> list[str]:
+    """Hard gates on the v6 ``autoscale`` section (present on
+    ``--autoscale`` runs): the control plane must have grown the hot
+    expert and shrunk the cold one mid-serve, improved the hot tail
+    latency over the static run, and changed no tokens."""
+    a = fresh.get("autoscale")
+    if a is None:
+        return []
+    failures = []
+    if a.get("scaled_up_hot") is not True:
+        failures.append("autoscale run never scaled the hot expert up")
+    if a.get("retired_cold") is not True:
+        failures.append("autoscale run never retired the idle cold replica")
+    if a.get("p99_ttft_improved") is not True:
+        failures.append("autoscaling did not improve the hot expert's "
+                        "p99 TTFT over the static run")
+    if a.get("tokens_identical") is not True:
+        failures.append("token-identity gate failed (autoscale run)")
+    return failures
+
 
 # every per-expert entry of an open_loop run must carry the full latency
 # quartet — a v3 report that dropped one silently would still "compare"
@@ -165,7 +197,15 @@ def delta_table(fresh: dict, base: dict) -> str:
              ("two_frontend.tokens_identical",
               _get(fresh, "two_frontend.tokens_identical")),
              ("two_frontend.uids_disjoint",
-              _get(fresh, "two_frontend.uids_disjoint"))]
+              _get(fresh, "two_frontend.uids_disjoint")),
+             ("autoscale.scaled_up_hot",
+              _get(fresh, "autoscale.scaled_up_hot")),
+             ("autoscale.retired_cold",
+              _get(fresh, "autoscale.retired_cold")),
+             ("autoscale.p99_ttft_improved",
+              _get(fresh, "autoscale.p99_ttft_improved")),
+             ("autoscale.tokens_identical",
+              _get(fresh, "autoscale.tokens_identical"))]
     lines.append("")
     lines.append("gates: " + ", ".join(
         f"`{name}` = {val}" for name, val in gates if val is not None))
@@ -221,6 +261,7 @@ def main() -> int:
                         f"below gathered ({rb['gathered']} B/tick)")
     failures.extend(check_open_loop(fresh))
     failures.extend(check_two_frontend(fresh))
+    failures.extend(check_autoscale(fresh))
     ps = fresh.get("prefix_sharing")
     if ps is not None and ps.get("enabled") and \
             _get(fresh, "workload.shared_prefix_len"):

@@ -77,6 +77,17 @@ admission — and the bench hard-fails unless the hot expert's p99 TTFT
 strictly improves while both runs stay token-identical to the serial
 oracle (replica placement cannot change tokens: the sampler is
 counter-based per ``(seed, uid, step)``).
+
+``--autoscale`` adds the live-scaling gate on the same Zipf workload:
+the engine, handed a ``ScalePolicy`` instead of a replica map, must
+spawn + warm + adopt a hot-expert replica **mid-serve** under pressure,
+quiesce and release an idle cold-expert replica (recalling its queued
+requests without losing a token), beat the static single-replica run's
+hot p99 TTFT, and stay bitwise identical to the serial oracle
+throughout.  Works on all three transports; on tcp a dedicated
+``LocalFleet`` doubles as the scale executor, so scale-up boots a real
+worker process and scale-down kills one.  The v6 schema carries the
+events and both latency profiles in an ``autoscale`` section.
 """
 from __future__ import annotations
 
@@ -166,6 +177,48 @@ def open_loop_workload(rcfg, router_params, corpus, args, rng):
     return pool[picks], n_new, arrivals, hot
 
 
+def _drive_workload(eng, reqs):
+    """Drive an already-submitted open-loop workload to drain,
+    wall-stamping each tracked request's arrival and every one of its
+    token deltas; returns ``(arrive_wall, token_walls)`` keyed by uid.
+    Untracked traffic (e.g. a warm-the-scaler pressure phase's
+    stragglers) streams through without polluting the stamps."""
+    arrive_wall: dict[int, float] = {}
+    token_walls: dict[int, list[float]] = {r.uid: [] for r in reqs}
+    while eng.busy:
+        eng._skip_idle_gap()          # jump empty gaps to the next arrival
+        now = time.perf_counter()
+        for r in reqs:
+            if r.uid not in arrive_wall and r.arrival_tick <= eng.tick:
+                arrive_wall[r.uid] = now
+        eng.step()
+        now = time.perf_counter()
+        for d in eng.last_deltas:
+            if d.request.uid in token_walls:
+                token_walls[d.request.uid].append(now)
+    return arrive_wall, token_walls
+
+
+def _lat(sub, arrive_wall, token_walls):
+    """p50/p99 TTFT + inter-token latency (ms) over ``sub`` requests."""
+    ttft = [token_walls[r.uid][0] - arrive_wall[r.uid] for r in sub]
+    itl = [b - a for r in sub
+           for a, b in zip(token_walls[r.uid], token_walls[r.uid][1:])]
+    return {"ttft_p50_ms": round(_pctl(ttft, 50) * 1e3, 2),
+            "ttft_p99_ms": round(_pctl(ttft, 99) * 1e3, 2),
+            "itl_p50_ms": round(_pctl(itl, 50) * 1e3, 2),
+            "itl_p99_ms": round(_pctl(itl, 99) * 1e3, 2)}
+
+
+def _ol_mismatches(reqs, serial) -> list[int]:
+    """Workload indices whose engine route or tokens deviate from the
+    serial oracle."""
+    return [i for i, r in enumerate(reqs)
+            if r.expert != serial["routes"][i]
+            or not np.array_equal(np.asarray(r.tokens),
+                                  serial["tokens"][i])]
+
+
 def open_loop_run(ecfg, rcfg, expert_params, router_params, args, max_len,
                   prompts, n_new, arrivals, sampling, serial, replicas):
     """One open-loop pass: drive the engine tick by tick, wall-stamping
@@ -188,39 +241,216 @@ def open_loop_run(ecfg, rcfg, expert_params, router_params, args, max_len,
         reqs = [eng.submit(prompts[i], int(n_new[i]), sampling=sampling,
                            arrival_tick=int(arrivals[i]))
                 for i in range(len(prompts))]
-        arrive_wall: dict[int, float] = {}
-        token_walls: dict[int, list[float]] = {r.uid: [] for r in reqs}
-        while eng.busy:
-            eng._skip_idle_gap()      # jump empty gaps to the next arrival
-            now = time.perf_counter()
-            for r in reqs:
-                if r.uid not in arrive_wall and r.arrival_tick <= eng.tick:
-                    arrive_wall[r.uid] = now
-            eng.step()
-            now = time.perf_counter()
-            for d in eng.last_deltas:
-                token_walls[d.request.uid].append(now)
-    bad = [i for i, r in enumerate(reqs)
-           if r.expert != serial["routes"][i]
-           or not np.array_equal(np.asarray(r.tokens), serial["tokens"][i])]
-
-    def lat(sub):
-        ttft = [token_walls[r.uid][0] - arrive_wall[r.uid] for r in sub]
-        itl = [b - a for r in sub
-               for a, b in zip(token_walls[r.uid], token_walls[r.uid][1:])]
-        return {"ttft_p50_ms": round(_pctl(ttft, 50) * 1e3, 2),
-                "ttft_p99_ms": round(_pctl(ttft, 99) * 1e3, 2),
-                "itl_p50_ms": round(_pctl(itl, 50) * 1e3, 2),
-                "itl_p99_ms": round(_pctl(itl, 99) * 1e3, 2)}
-
+        arrive_wall, token_walls = _drive_workload(eng, reqs)
+    bad = _ol_mismatches(reqs, serial)
     per_expert = {
         e: {"served": sum(r.expert == e for r in reqs),
-            **lat([r for r in reqs if r.expert == e])}
+            **_lat([r for r in reqs if r.expert == e],
+                   arrive_wall, token_walls)}
         for e in sorted({r.expert for r in reqs})}
     return {"replicas": {int(e): int(c)
                          for e, c in dict(replicas or {}).items()},
-            **lat(reqs), "per_expert": per_expert,
+            **_lat(reqs, arrive_wall, token_walls), "per_expert": per_expert,
             "tokens_identical": not bad}, bad
+
+
+def run_autoscale(args, ecfg, rcfg, expert_params, router_params, corpus,
+                  max_len):
+    """The live-autoscaling gate: prove the control plane grows AND
+    shrinks the replica map mid-serve, improves the hot expert's tail
+    latency, and never touches a token.  Returns ``(section, fail)``
+    where ``fail`` is None on success.
+
+    Two runs over the same open-loop Zipf workload:
+
+    1. **static** — one replica per expert (on tcp, whatever the
+       dedicated fleet registered: the hot expert always has exactly
+       one), the existing open-loop driver.  This is the p99 baseline.
+    2. **autoscaled** — the cold expert starts with a spare replica (so
+       scale-down has a victim) and a ``ScalePolicy`` is installed.  A
+       **pressure phase** first streams short greedy requests at the
+       hot expert, wall-paced (``--as-pace-ms``) so spawned workers have
+       real time to warm off-path, until the scaler has adopted a new
+       hot replica mid-serve and idle-retired a cold one; then the
+       measured workload runs against the scaled placement.
+
+    Hard gates: an ``up`` event for the hot expert, a ``down`` event
+    for the cold expert, hot-expert p99 TTFT strictly below the static
+    run, and every request (pressure phase included) bitwise identical
+    to the serial oracle.  All traffic here is greedy, so tokens are
+    uid-independent and the oracle holds regardless of uid namespace
+    (tcp frontends lease namespaces).
+    """
+    scale = servecli.scale_policy_from_args(args)
+    ol_rng = np.random.default_rng(args.seed + 2)
+    prompts, n_new, arrivals, hot = open_loop_workload(
+        rcfg, router_params, corpus, args, ol_rng)
+    serial_ol = baseline.serve_serial(
+        ecfg, rcfg, expert_params, router_params, prompts, n_new,
+        prefix_len=args.prompt_len, cache_len=max_len)
+    counts = np.bincount(np.asarray(serial_ol["routes"]),
+                         minlength=args.experts).astype(float)
+    counts[hot] = np.inf                   # the hot expert is never cold
+    cold = int(counts.argmin())
+    # the pressure ring: pool prompts that route to the hot expert,
+    # cycled for as long as the scaler needs — each short and greedy so
+    # one serial pass is the oracle for every lap of the ring
+    pool, _ = corpus.sequences(np.arange(max(64, 8 * args.experts)) + 991_000)
+    ring_eids = np.asarray(baseline.route(rcfg, router_params, pool,
+                                          args.prompt_len))
+    ring = pool[ring_eids == hot][:16]
+    if not len(ring):
+        return {}, "no pool prompt routes to the hot expert"
+    ring_new = 4
+    ring_ref = baseline.serve_serial(
+        ecfg, rcfg, expert_params, router_params, ring,
+        np.full(len(ring), ring_new), prefix_len=args.prompt_len,
+        cache_len=max_len)
+    eng_cfg = dataclasses.replace(
+        servecli.engine_config_from_args(args, max_len=max_len,
+                                         prefix_len=args.prompt_len,
+                                         min_prefill_bucket=args.prompt_len),
+        pool_blocks=0)
+    section = {
+        "policy": {"up_pressure": scale.up_pressure,
+                   "up_ticks": scale.up_ticks,
+                   "down_idle_ticks": scale.down_idle_ticks,
+                   "cooldown_ticks": scale.cooldown_ticks,
+                   "min_replicas": scale.min_replicas,
+                   "max_replicas": scale.max_replicas,
+                   "every": scale.every},
+        "hot_expert": hot, "cold_expert": cold,
+        "requests": int(args.ol_requests),
+    }
+    fleet = None
+    try:
+        if args.transport == "tcp":
+            # a dedicated full-pool fleet (the main bench fleet may run a
+            # pressured pool): the cold expert gets its scale-down victim
+            # at boot, and the fleet doubles as the scale executor —
+            # scale-up boots a real worker process, scale-down kills it
+            from repro.serving.net.fleet import LocalFleet
+            spec_cfg = dataclasses.replace(eng_cfg, transport="loopback",
+                                           registry="")
+            fleet = LocalFleet(ecfg, spec_cfg, args.experts, seed=args.seed,
+                               replicas={cold: 2},
+                               warmup_len=args.prompt_len)
+            eng_cfg = dataclasses.replace(eng_cfg,
+                                          registry=fleet.registry_addr)
+
+        # ---- static run: hot expert on one replica --------------------
+        with ServeFrontend(ecfg, rcfg, expert_params, router_params,
+                           eng_cfg) as eng:
+            eng.warmup(args.prompt_len, sampled=False)
+            base = eng.tick
+            reqs = [eng.submit(prompts[i], int(n_new[i]),
+                               arrival_tick=base + int(arrivals[i]))
+                    for i in range(len(prompts))]
+            aw, tw = _drive_workload(eng, reqs)
+        section["static"] = {
+            **_lat(reqs, aw, tw),
+            "hot": _lat([r for r in reqs if r.expert == hot], aw, tw)}
+        bad = _ol_mismatches(reqs, serial_ol)
+        if bad:
+            return section, f"static-run token mismatch on {bad[:8]}"
+
+        # ---- autoscaled run -------------------------------------------
+        with ServeFrontend(ecfg, rcfg, expert_params, router_params,
+                           eng_cfg,
+                           replicas=None if args.transport == "tcp"
+                           else {cold: 2},
+                           scale=scale, scale_executor=fleet) as eng:
+            eng.warmup(args.prompt_len, sampled=False)
+            # pressure phase: keep the hot expert backlogged past lane
+            # capacity until the scaler spawns, warms, and ADOPTS a new
+            # replica mid-serve, then drain and wait for the idle cold
+            # replica to quiesce and release; wall pacing gives process/
+            # tcp workers real seconds to come up off-path
+            pace = args.as_pace_ms / 1e3
+            deadline = time.monotonic() + args.as_timeout
+            ring_reqs, outstanding = [], 0
+            # enough in flight to hold positive pressure on the hot
+            # expert's single replica (capacity `lanes`), yet a small
+            # enough residue that the stragglers left at the break
+            # don't crowd the measured phase's hot lanes
+            target = 2 * args.lanes + 2
+            while time.monotonic() < deadline:
+                up = any(ev.action == "up" and ev.expert == hot
+                         for ev in eng.scale_events)
+                down = any(ev.action == "down" and ev.expert == cold
+                           for ev in eng.scale_events)
+                if up and down:
+                    # straight into the measured phase: the ring
+                    # stragglers drain alongside it (their deltas stay
+                    # untracked) and the immediate load keeps the idle
+                    # policy off the just-adopted replica
+                    break
+                while outstanding < target:
+                    k = len(ring_reqs) % len(ring)
+                    ring_reqs.append(eng.submit(ring[k], ring_new,
+                                                arrival_tick=eng.tick))
+                    outstanding += 1
+                outstanding -= len(eng.step())
+                if pace:
+                    time.sleep(pace)
+            evs = list(eng.scale_events)
+            scaled_up = any(ev.action == "up" and ev.expert == hot
+                            for ev in evs)
+            retired = any(ev.action == "down" and ev.expert == cold
+                          for ev in evs)
+            # measured phase: the same workload as the static run, now
+            # against the scaled placement (ring stragglers drain
+            # alongside — checked below, once they have finished)
+            base = eng.tick
+            reqs = [eng.submit(prompts[i], int(n_new[i]),
+                               arrival_tick=base + int(arrivals[i]))
+                    for i in range(len(prompts))]
+            aw, tw = _drive_workload(eng, reqs)
+            section["autoscaled"] = {
+                **_lat(reqs, aw, tw),
+                "hot": _lat([r for r in reqs if r.expert == hot], aw, tw),
+                "pressure_requests": len(ring_reqs),
+                "scale_ups": sum(ev.action == "up" for ev in
+                                 eng.scale_events),
+                "scale_downs": sum(ev.action == "down" for ev in
+                                   eng.scale_events),
+                "events": [ev.to_dict() for ev in eng.scale_events],
+                "final_replicas": {e: n for e, n
+                                   in enumerate(eng.replicas)}}
+        bad = _ol_mismatches(reqs, serial_ol)
+        bad_ring = [k for k, r in enumerate(ring_reqs)
+                    if not np.array_equal(np.asarray(r.tokens),
+                                          ring_ref["tokens"][k % len(ring)])]
+        p99_s = section["static"]["hot"]["ttft_p99_ms"]
+        p99_a = section["autoscaled"]["hot"]["ttft_p99_ms"]
+        section["scaled_up_hot"] = scaled_up
+        section["retired_cold"] = retired
+        section["p99_ttft_improved"] = p99_a < p99_s
+        section["tokens_identical"] = not bad and not bad_ring
+        print(f"autoscale ({args.transport}): hot expert {hot} "
+              f"{'gained' if scaled_up else 'DID NOT GAIN'} a replica "
+              f"mid-serve, cold expert {cold} "
+              f"{'retired' if retired else 'DID NOT RETIRE'} one; hot "
+              f"p99 TTFT {p99_s}ms static -> {p99_a}ms autoscaled")
+        if not scaled_up:
+            return section, (f"hot expert {hot} never gained a replica "
+                             f"(no 'up' event within {args.as_timeout}s)")
+        if not retired:
+            return section, (f"cold expert {cold} never retired its idle "
+                             f"replica (no 'down' event within "
+                             f"{args.as_timeout}s)")
+        if bad_ring:
+            return section, (f"pressure-phase token mismatch on "
+                             f"{bad_ring[:8]}")
+        if bad:
+            return section, f"autoscaled-run token mismatch on {bad[:8]}"
+        if p99_a >= p99_s:
+            return section, (f"autoscaling did not improve hot-expert "
+                             f"p99 TTFT ({p99_a}ms >= {p99_s}ms)")
+        return section, None
+    finally:
+        if fleet is not None:
+            fleet.close()
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -235,7 +465,15 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--min-new", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=32)
     servecli.add_engine_args(ap)
+    servecli.add_autoscale_args(ap)
     servecli.add_sampling_args(ap, temperature=0.8, top_k=32, top_p=0.95)
+    ap.add_argument("--as-pace-ms", type=float, default=10.0,
+                    help="autoscale pressure phase: wall milliseconds per "
+                         "engine tick, so spawned replicas get real time "
+                         "to warm off-path")
+    ap.add_argument("--as-timeout", type=float, default=300.0,
+                    help="autoscale pressure phase: seconds to wait for "
+                         "the scale-up + scale-down events before failing")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mode", choices=["greedy", "sampled"], default="greedy",
                     help="sampled: temperature/top-k/top-p decoding plus a "
@@ -367,7 +605,7 @@ def run_bench(args, ecfg, rcfg, max_len: int) -> int:
     with ServeFrontend(ecfg, rcfg, expert_params, router_params, eng_cfg,
                        replicas=args.replicas, uid_namespace=0) as eng:
         # warmup: compile every admission batch width the timed run can
-        # hit (routing-independent — see MixtureServeEngine.warmup);
+        # hit (routing-independent — see ServeFrontend.warmup);
         # greedy mode skips the sampled warmup pass it would never use
         eng.warmup(args.prompt_len, sampled=args.mode == "sampled")
         timed = [eng.submit(prompts[i], int(n_new[i]), sampling=sampling,
@@ -387,7 +625,11 @@ def run_bench(args, ecfg, rcfg, max_len: int) -> int:
     speedup = res["tokens_per_s"] / serial["tokens_per_s"]
     dense = dense_slab_bytes(ecfg, args.lanes, max_len)
     report = {
-        # v5 (PR 8): "transport" may now be "tcp" (registry-discovered
+        # v6 (PR 9): the autoscale section — live replica scaling under
+        # the open-loop Zipf workload, gated on a mid-serve hot-expert
+        # scale-up, an idle cold-expert scale-down, hot p99 TTFT
+        # strictly improving vs static, and bitwise token identity; v5
+        # (PR 8): "transport" may now be "tcp" (registry-discovered
         # network worker fleet) and the two_frontend section gates two
         # replicated stateless frontends on one fleet; v4 (PR 7) added
         # the prefix_sharing section (hit blocks, prefill tokens saved,
@@ -396,7 +638,7 @@ def run_bench(args, ecfg, rcfg, max_len: int) -> int:
         # (PR 5) added "transport" + per-expert queue_wait_ticks /
         # occupancy; compare_bench.py accepts a newer fresh report
         # against an older baseline (added keys only)
-        "schema": "BENCH_serve/v5",
+        "schema": "BENCH_serve/v6",
         "mode": args.mode,
         "transport": args.transport,
         "workload": {"requests": args.requests, "experts": args.experts,
@@ -598,6 +840,15 @@ def run_bench(args, ecfg, rcfg, max_len: int) -> int:
                 print(f"FAIL: {args.hot_replicas} replicas did not improve "
                       f"hot-expert p99 TTFT ({p99_r}ms >= {p99_1}ms)")
                 return emit(1)
+    # ---- live autoscaling: grow/shrink the replica map mid-serve ----------
+    if args.autoscale:
+        section, fail = run_autoscale(args, ecfg, rcfg, expert_params,
+                                      router_params, corpus, max_len)
+        report["autoscale"] = section
+        if fail:
+            print(f"FAIL: {fail}")
+            return emit(1)
+
     if args.smoke:
         if args.transport == "tcp":
             # the full-pool admission-budget engine needs pool_blocks=0,

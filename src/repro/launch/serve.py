@@ -16,6 +16,9 @@ KV pool; the router scores are the only cross-process traffic — the
 paper's multi-host story on one machine), and ``--replicas 0:2`` clones
 hot expert 0 into two servers with least-loaded admission between them
 (the shared engine flags live in :mod:`repro.serving.cli`).
+``--autoscale`` lets the engine grow/shrink that replica map live —
+backlogged experts gain replicas, idle ones drain and release them —
+with tokens provably unchanged (see ``--scale-*`` for the policy).
 
 Usage (demo on synthetic prompts with randomly-initialized weights, or on
 checkpoints produced by launch/train.py):
@@ -63,6 +66,7 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--prefix-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     servecli.add_engine_args(ap)
+    servecli.add_autoscale_args(ap)
     servecli.add_sampling_args(ap)
     ap.add_argument("--arrive-every", type=int, default=2,
                     help="simulated arrival: one request per N ticks")
@@ -107,7 +111,8 @@ def main() -> None:
                         servecli.engine_config_from_args(
                             args, max_len=max_len,
                             prefix_len=args.prefix_len),
-                        replicas=args.replicas)
+                        replicas=args.replicas,
+                        scale=servecli.scale_policy_from_args(args))
     with eng:                      # releases worker processes on exit
         for i in range(args.requests):
             eng.submit(prompts[i], args.new_tokens, sampling=sampling,
@@ -133,6 +138,10 @@ def main() -> None:
           f"{ps['hit_blocks']} hit blocks, "
           f"{ps['prefill_tokens_saved']} prefill tokens saved, "
           f"{res['n_unadmitted']} never admitted")
+    if res.autoscale is not None:
+        a = res.autoscale
+        print(f"autoscale: {a.scale_ups} up / {a.scale_downs} down, "
+              f"peak {a.peak_replicas}, final {a.final_replicas}")
     print("per-expert:", res["per_expert"])
     print("routes:", [r.expert for r in res["requests"]],
           " domains:", doms.tolist())

@@ -1,62 +1,93 @@
 """Continuous-batching serving for the asynchronous mixture.
 
-The public entry point is :class:`ServeFrontend` — construct it with the
-mixture (expert configs/params + router ensemble), an
-:class:`EngineConfig` for the shape/scheduling knobs, and an optional
-``replicas`` map cloning hot experts (the paper's no-talk premise makes
-replication free: replicas share nothing, and each request is admitted
-to the least-loaded replica of its argmax expert)::
+This docstring is the API reference for the package: everything
+exported below is the supported surface, grouped here by layer.
 
-    from repro.serving import EngineConfig, SamplingParams, ServeFrontend
+**Engine** — the public entry point is :class:`ServeFrontend`:
+construct it with the mixture (expert configs/params + router
+ensemble), an :class:`EngineConfig` for the shape/scheduling knobs, an
+optional ``replicas`` map cloning hot experts, and an optional
+:class:`ScalePolicy` that keeps the replica map live (the paper's
+no-talk premise makes both free: replicas share nothing, each request
+is admitted to the least-loaded replica of its argmax expert, and
+replicas can join or leave mid-serve without touching token
+identity)::
+
+    from repro.serving import (EngineConfig, SamplingParams,
+                               ScalePolicy, ServeFrontend)
 
     with ServeFrontend(ecfg, rcfg, expert_params, router_params,
                        EngineConfig(lanes_per_expert=4, max_len=128),
-                       replicas={0: 2}) as eng:        # expert 0 is hot
+                       replicas={0: 2},          # expert 0 starts hot
+                       scale=ScalePolicy()) as eng:
         req = eng.submit(prompt, max_new_tokens=32,
                          sampling=SamplingParams(temperature=0.8, seed=1),
                          stop_tokens={0})
-        for delta in eng.stream():                     # or eng.run()
+        for delta in eng.stream():                 # or eng.run()
             ...
 
-Per-request generation is controlled by :class:`SamplingParams`
-(temperature/top-k/top-p/seed; temperature 0 = greedy) and stop tokens,
-sampled inside the per-expert jitted decode step with counter-based RNG
-— tokens are a pure function of ``(seed, uid, step)``, invariant to
-lane placement, tick interleaving, transport, and replica count.
-Callers hold the :class:`Request` records ``submit`` returns; the
-engine folds per-token deltas back into them.
+``run()`` returns a typed :class:`RunReport` (dict-compatible with the
+historical report shape); with a policy installed its ``autoscale``
+field is an :class:`AutoscaleStats`.
 
-Internally the engine is a router frontend
-(:mod:`repro.serving.frontend`), one self-contained
-:class:`ExpertServer` per (expert, replica) slot
-(:mod:`repro.serving.expert_server`), and a pluggable versioned message
-transport (:mod:`repro.serving.transport`) — in-process loopback by
-default, one OS process per slot with
-``EngineConfig(transport="process")``, or raw TCP to an independently
-started worker fleet with ``EngineConfig(transport="tcp",
-registry="host:port")`` (:mod:`repro.serving.net`: registry discovery,
-self-ticking expert workers, connection-time ``WIRE_VERSION``
-handshake, and leased uid namespaces so many stateless frontends can
-share one fleet).  Each server shares prompt
-prefixes copy-on-write through a refcounted radix cache over its paged
-KV pool (:class:`PrefixCache`): repeated system prompts prefill once,
-later admissions replay only their novel suffix (chunked by
+**Sampling** — :class:`SamplingParams`
+(temperature/top-k/top-p/seed; temperature 0 = greedy) plus stop
+tokens, sampled inside the per-expert jitted decode step with
+counter-based RNG: tokens are a pure function of ``(seed, uid, step)``,
+invariant to lane placement, tick interleaving, transport, replica
+count, and live placement changes.  Callers hold the :class:`Request`
+records ``submit`` returns; the engine folds per-token deltas back
+into them.
+
+**Placement** — :class:`Placement` names one (expert, replica) slot
+(plus its address on tcp) and derives its human label in one place;
+:class:`PlacementMap` is the frontend's live admission table.
+:class:`ScalePolicy` / :class:`Autoscaler` / :class:`ScaleEvent` are
+the deterministic scale loop (:mod:`repro.serving.autoscale`):
+scale-up warms a slot off-path before admitting it; scale-down
+quiesces — recall queued requests, drain lanes, release the slot.
+
+**Servers and transports** — one self-contained :class:`ExpertServer`
+per (expert, replica) slot (:mod:`repro.serving.expert_server`, also
+home of ``bucket_len``/``PAD_SAFE_KINDS``/``resolve_shapes``) behind a
+pluggable versioned message transport (:mod:`repro.serving.transport`):
+in-process :class:`LoopbackTransport` by default, one OS process per
+slot (:class:`ProcessTransport`) with
+``EngineConfig(transport="process")``, or raw TCP
+(:class:`SocketTransport`) to an independently started worker fleet
+with ``EngineConfig(transport="tcp", registry="host:port")``
+(:mod:`repro.serving.net`: registry discovery, self-ticking expert
+workers, connection-time :data:`WIRE_VERSION` handshake, and leased
+uid namespaces so many stateless frontends can share one fleet).  All
+three support dynamic slot membership (``add_slot`` / ``remove_slot``
+/ ``recall``) — the autoscaler's seam.
+
+**KV cache** — each server shares prompt prefixes copy-on-write
+through a refcounted radix cache over its paged KV pool
+(:class:`PrefixCache`): repeated system prompts prefill once, later
+admissions replay only their novel suffix (chunked by
 ``EngineConfig.prefill_chunk_tokens``), and tokens stay bitwise
-identical with the cache on or off (``prefix_cache=False`` disables).  See
-``src/repro/serving/README.md`` for the layering, the message protocol,
-and the replication/admission policy.  :mod:`repro.serving.cli` defines
-the shared command-line surface for the serving entry points;
-:mod:`repro.serving.baseline` keeps the original one-shot serial path
-as the numerical oracle and benchmark baseline.
+identical with the cache on or off (``prefix_cache=False`` disables).
+:class:`BlockAllocator` / :class:`SlotAllocator` are the underlying
+pool bookkeeping (:mod:`repro.serving.scheduler`, with
+:class:`RequestQueue` for arrival-time ordering).
 
-:class:`MixtureServeEngine` is the deprecated pre-split name for
-:class:`ServeFrontend`; it still works (old import paths included) but
-warns on construction.
+See ``src/repro/serving/README.md`` for the layering, the message
+protocol, the replication/admission policy, and the autoscaling
+protocol.  :mod:`repro.serving.cli` defines the shared command-line
+surface for the serving entry points; :mod:`repro.serving.baseline`
+keeps the original one-shot serial path as the numerical oracle and
+benchmark baseline.
 """
-from repro.serving.engine import EngineConfig, MixtureServeEngine, TokenDelta
-from repro.serving.expert_server import ExpertServer
-from repro.serving.frontend import ServeFrontend
+from repro.serving.autoscale import Autoscaler, ScaleEvent, ScalePolicy
+from repro.serving.expert_server import (EngineConfig, ExpertServer,
+                                         PAD_SAFE_KINDS, bucket_len,
+                                         resolve_shapes)
+from repro.serving.frontend import ServeFrontend, TokenDelta
 from repro.serving.net import SocketTransport
+from repro.serving.placement import Placement, PlacementMap
+from repro.serving.report import (AutoscaleStats, PrefixSharingStats,
+                                  RunReport)
 from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import (BlockAllocator, PrefixCache, Request,
                                      RequestQueue, SlotAllocator)
@@ -64,10 +95,11 @@ from repro.serving.transport import (LoopbackTransport, ProcessTransport,
                                      RequestMsg, StatsMsg, TokenDeltaMsg,
                                      Transport, WIRE_VERSION, check_version)
 
-__all__ = ["BlockAllocator", "EngineConfig", "ExpertServer",
-           "LoopbackTransport", "MixtureServeEngine", "PrefixCache",
+__all__ = ["Autoscaler", "AutoscaleStats", "BlockAllocator", "EngineConfig",
+           "ExpertServer", "LoopbackTransport", "PAD_SAFE_KINDS",
+           "Placement", "PlacementMap", "PrefixCache", "PrefixSharingStats",
            "ProcessTransport", "Request", "RequestMsg", "RequestQueue",
-           "SamplingParams", "ServeFrontend", "SlotAllocator",
-           "SocketTransport", "StatsMsg",
+           "RunReport", "SamplingParams", "ScaleEvent", "ScalePolicy",
+           "ServeFrontend", "SlotAllocator", "SocketTransport", "StatsMsg",
            "TokenDelta", "TokenDeltaMsg", "Transport", "WIRE_VERSION",
-           "check_version"]
+           "bucket_len", "check_version", "resolve_shapes"]

@@ -1,0 +1,190 @@
+"""Live replica autoscaling: policy + deterministic decision logic.
+
+PR 6 proved the paper's no-talk premise makes hot-expert replication
+free — replicas share nothing, tokens are placement-invariant — but
+left replica counts operator-chosen.  This module closes that gap: a
+:class:`ScalePolicy` describes *when* capacity should track the routing
+distribution, and :class:`Autoscaler` turns per-slot load observations
+into scale decisions the frontend applies between ticks.
+
+Everything here is **deterministic and side-effect free**: the
+autoscaler sees only ``(tick, loads)`` and returns actions; the
+frontend owns the actual spawn/quiesce machinery (see
+``ServeFrontend._autoscale`` and the "Autoscaling" section of
+``serving/README.md``).  That split keeps the policy unit-testable
+without a transport and keeps token identity trivially safe — tokens
+are a pure function of ``(seed, uid, step)``, so *when* replicas come
+and go cannot change a single token (the fuzz oracles in
+``tests/test_serving_autoscale.py`` extend the placement-invariance
+invariant to time-varying placements).
+
+The signal is **pressure**: an expert's total in-flight load minus its
+lane capacity, i.e. requests that are queued behind a full decode
+batch.  Sustained positive pressure means TTFT is queue-bound and a
+replica would help; a replica at zero load for a sustained stretch is
+pure capacity waste.  Hysteresis (consecutive-evaluation counts) and a
+per-expert cooldown keep the loop from flapping.
+
+No jax imports — the control plane stays light.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ScalePolicy:
+    """When to spawn or retire replicas.  All units are frontend ticks.
+
+    ``up_pressure``      — queued-beyond-capacity requests that count an
+                           expert as overloaded this evaluation.
+    ``up_ticks``         — consecutive overloaded evaluations before a
+                           scale-up fires (hysteresis against bursts).
+    ``down_idle_ticks``  — consecutive zero-load evaluations of one
+                           replica before it is retired.
+    ``cooldown_ticks``   — minimum ticks between scale operations on the
+                           same expert (lets the last action take effect
+                           before the next is judged).
+    ``min_replicas``     — never retire below this many live replicas.
+    ``max_replicas``     — never grow past this many (live + warming).
+    ``every``            — evaluate every N frontend ticks (decisions
+                           and idle/pressure streaks advance only on
+                           evaluation ticks, so behaviour is a pure
+                           function of the tick sequence — deterministic
+                           for tests).
+    """
+    up_pressure: int = 1
+    up_ticks: int = 2
+    down_idle_ticks: int = 8
+    cooldown_ticks: int = 16
+    min_replicas: int = 1
+    max_replicas: int = 4
+    every: int = 1
+
+    def validate(self) -> "ScalePolicy":
+        if self.up_pressure < 1:
+            raise ValueError(f"up_pressure must be >= 1, got "
+                             f"{self.up_pressure}")
+        if self.up_ticks < 1 or self.down_idle_ticks < 1:
+            raise ValueError("up_ticks and down_idle_ticks must be >= 1")
+        if self.cooldown_ticks < 0:
+            raise ValueError(f"cooldown_ticks must be >= 0, got "
+                             f"{self.cooldown_ticks}")
+        if self.min_replicas < 1:
+            raise ValueError(f"min_replicas must be >= 1, got "
+                             f"{self.min_replicas}")
+        if self.max_replicas < self.min_replicas:
+            raise ValueError(f"max_replicas {self.max_replicas} < "
+                             f"min_replicas {self.min_replicas}")
+        if self.every < 1:
+            raise ValueError(f"every must be >= 1, got {self.every}")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleEvent:
+    """One applied scale operation, as reported in ``run()``'s
+    ``autoscale.events``: ``action`` is ``"up"`` (replica entered
+    admission) or ``"down"`` (replica fully drained and released);
+    ``tick`` is the frontend tick it took effect."""
+    tick: int
+    action: str
+    expert: int
+    replica: int
+    reason: str = ""
+
+    def to_dict(self) -> dict:
+        return {"tick": self.tick, "action": self.action,
+                "expert": self.expert, "replica": self.replica,
+                "reason": self.reason}
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotLoad:
+    """One admissible replica's instantaneous load, as the frontend's
+    sender-side tracker sees it (queued + occupied lanes)."""
+    slot: int
+    load: int
+
+
+class Autoscaler:
+    """Pure decision logic: feed it ``observe`` once per evaluation
+    tick, apply the actions it returns.
+
+    The frontend reports, per expert: the live (admissible) slots with
+    their loads, plus how many replicas are *warming* (spawned, not yet
+    admissible — they count toward capacity and toward ``max_replicas``
+    so the loop never double-fires while a spawn is in flight).
+    Actions are ``("up", expert)`` and ``("down", expert, slot)`` — at
+    most one per expert per evaluation.
+    """
+
+    def __init__(self, policy: ScalePolicy, n_experts: int,
+                 lanes_per_replica: int):
+        self.policy = policy.validate()
+        self.n_experts = int(n_experts)
+        self.lanes = int(lanes_per_replica)
+        self._hot = [0] * self.n_experts         # consecutive overloads
+        self._idle: dict[int, int] = {}          # slot -> consecutive idles
+        self._last_op = [None] * self.n_experts  # tick of last action
+
+    def _cooled(self, e: int, tick: int) -> bool:
+        last = self._last_op[e]
+        return last is None or tick - last >= self.policy.cooldown_ticks
+
+    def note_adopted(self, expert: int, slot: int, tick: int) -> None:
+        """The frontend adopted a warmed replica into admission.
+
+        Re-stamps the expert's cooldown at the tick the capacity
+        actually *arrived* (the ``up`` decision may be many ticks old —
+        a process spawn warms for seconds) and starts the new member
+        with a clean idle streak.  Without this, a slot that spent its
+        own cooldown warming could be idle-retired moments after it
+        joins, before any admission has had a chance to route to it.
+        """
+        self._last_op[expert] = tick
+        self._idle[slot] = 0
+
+    def observe(self, tick: int, loads_by_expert: dict,
+                warming_by_expert: dict) -> list:
+        """One evaluation: returns the actions to apply now.
+
+        ``loads_by_expert``   — expert -> list[SlotLoad] (live slots).
+        ``warming_by_expert`` — expert -> count of in-flight spawns.
+        Call only on evaluation ticks (``tick % policy.every == 0`` is
+        the frontend's job); streak counters advance per call.
+        """
+        pol = self.policy
+        actions: list = []
+        for e in range(self.n_experts):
+            live = loads_by_expert.get(e, [])
+            warming = int(warming_by_expert.get(e, 0))
+            capacity = (len(live) + warming) * self.lanes
+            pressure = sum(s.load for s in live) - capacity
+            self._hot[e] = self._hot[e] + 1 if pressure >= pol.up_pressure \
+                else 0
+            # idle streaks per live slot; a slot that disappeared
+            # (retired/dead) drops out of the dict next sweep
+            for s in live:
+                self._idle[s.slot] = self._idle.get(s.slot, 0) + 1 \
+                    if s.load == 0 else 0
+            if self._hot[e] >= pol.up_ticks and self._cooled(e, tick) \
+                    and len(live) + warming < pol.max_replicas:
+                actions.append(("up", e))
+                self._last_op[e] = tick
+                self._hot[e] = 0
+                continue                    # one action per expert per eval
+            if len(live) > pol.min_replicas and self._cooled(e, tick):
+                ripe = [s.slot for s in live
+                        if self._idle.get(s.slot, 0) >= pol.down_idle_ticks]
+                if ripe:
+                    # retire the highest slot: lowest replica indices are
+                    # the "base" capacity, so growth and shrink are LIFO
+                    victim = max(ripe)
+                    actions.append(("down", e, victim))
+                    self._last_op[e] = tick
+                    self._idle.pop(victim, None)
+        live_slots = {s.slot for live in loads_by_expert.values()
+                      for s in live}
+        self._idle = {s: n for s, n in self._idle.items() if s in live_slots}
+        return actions

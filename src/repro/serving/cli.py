@@ -130,6 +130,53 @@ def engine_config_from_args(args: argparse.Namespace, *, max_len: int,
     return EngineConfig(**kw)
 
 
+def add_autoscale_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
+    """The live-autoscaling flags (``repro.serving.autoscale.ScalePolicy``
+    knobs; the defaults here mirror the dataclass defaults)."""
+    g = ap.add_argument_group("autoscale")
+    g.add_argument("--autoscale", action="store_true",
+                   help="grow/shrink the replica map live: spawn a replica "
+                        "when an expert's backlog exceeds its lane capacity, "
+                        "quiesce and retire one after sustained idleness "
+                        "(tokens stay bitwise identical either way)")
+    g.add_argument("--scale-up-pressure", type=int, default=1,
+                   help="queued-beyond-capacity requests that count as "
+                        "pressure on one expert")
+    g.add_argument("--scale-up-ticks", type=int, default=2,
+                   help="consecutive pressured evaluations before a "
+                        "scale-up (hysteresis)")
+    g.add_argument("--scale-down-idle", type=int, default=8,
+                   help="consecutive zero-load evaluations before a "
+                        "replica is retired")
+    g.add_argument("--scale-cooldown", type=int, default=16,
+                   help="ticks after any scale op before the same expert "
+                        "may scale again")
+    g.add_argument("--scale-min-replicas", type=int, default=1,
+                   help="never retire below this many replicas per expert")
+    g.add_argument("--scale-max-replicas", type=int, default=4,
+                   help="never spawn beyond this many replicas per expert")
+    g.add_argument("--scale-every", type=int, default=1,
+                   help="evaluate the policy every N frontend ticks")
+    return ap
+
+
+def scale_policy_from_args(args: argparse.Namespace):
+    """The :class:`repro.serving.autoscale.ScalePolicy` the
+    ``add_autoscale_args`` flags describe, or ``None`` without
+    ``--autoscale``.  Imported lazily to keep ``--help`` jax-free."""
+    if not args.autoscale:
+        return None
+    from repro.serving.autoscale import ScalePolicy
+
+    return ScalePolicy(up_pressure=args.scale_up_pressure,
+                       up_ticks=args.scale_up_ticks,
+                       down_idle_ticks=args.scale_down_idle,
+                       cooldown_ticks=args.scale_cooldown,
+                       min_replicas=args.scale_min_replicas,
+                       max_replicas=args.scale_max_replicas,
+                       every=args.scale_every).validate()
+
+
 def add_sampling_args(ap: argparse.ArgumentParser, *,
                       temperature: float = 0.0, top_k: int = 0,
                       top_p: float = 1.0) -> argparse.ArgumentParser:

@@ -301,6 +301,27 @@ class ExpertServer:
             max_new_tokens=msg.max_new_tokens, sampling=msg.sampling,
             stop_tokens=msg.stop_tokens, arrival_tick=msg.enqueue_tick))
 
+    def recall_pending(self, only=None) -> list[int]:
+        """Scale-down quiesce: hand queued-but-unadmitted requests back.
+
+        Drains ``pending`` (restricted to the uids in ``only`` when
+        given — a shared network worker recalls one frontend's requests
+        without touching another's) and returns the drained uids for
+        the caller to re-route.  Requests already in a lane are NOT
+        touched: they have emitted tokens, so they finish here; a
+        pending request has emitted nothing, so re-routing it elsewhere
+        is invisible to its token stream (counter-based sampling keys on
+        ``(seed, uid, step)``, never on placement).
+        """
+        keep, out = deque(), []
+        for req in self.pending:
+            if only is None or req.uid in only:
+                out.append(req.uid)
+            else:
+                keep.append(req)
+        self.pending = keep
+        return out
+
     def tick(self) -> list[TokenDeltaMsg]:
         """One pass of this server's clock: admit, then decode.
 

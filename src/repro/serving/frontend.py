@@ -20,21 +20,39 @@ interleaving yields bit-identical tokens (the fuzz oracles in
 ``tests/test_serving.py`` hold on every transport).
 
 The transport boundary is pluggable (:mod:`repro.serving.transport`):
-``EngineConfig.transport`` selects the in-process loopback default or
-one spawned process per expert — the frontend code is identical either
-way, because only serializable messages ever cross it.
+``EngineConfig.transport`` selects the in-process loopback default, one
+spawned process per server, or raw TCP to a registry-discovered worker
+fleet — the frontend code is identical either way, because only
+serializable messages ever cross it.
 
 **Replication** (the ``replicas`` constructor map) is the paper's
 no-talk premise cashed in at serving time: because experts share
 nothing, a hot expert can be cloned R times with zero coordination —
-the frontend spins up R :class:`ExpertServer` slots holding the same
-params and admits each routed request to the **least-loaded** replica
-(queue depth + occupied lanes, tracked from the message flow; ties
-break to the lowest replica index).  Replicas never learn of each
-other, and tokens cannot depend on the placement: the counter-based
-sampler keys on ``(seed, uid, step)`` and replicas hold identical
-params, so ``replicas=1`` vs ``replicas=R`` streams are bitwise equal
-(the fuzz oracles in ``tests/test_serving_replicas.py``).
+the frontend runs R server slots holding the same params and admits
+each routed request to the **least-loaded** replica (queue depth +
+occupied lanes, tracked from the message flow; ties break to the lowest
+slot).  The live admission map is a
+:class:`repro.serving.placement.PlacementMap`; replicas never learn of
+each other, and tokens cannot depend on the placement (the fuzz oracles
+in ``tests/test_serving_replicas.py``).
+
+**Autoscaling** (the ``scale`` constructor policy) makes the replica
+map *live*: a deterministic control loop
+(:class:`repro.serving.autoscale.Autoscaler`) watches the same
+sender-side load tracker least-loaded admission uses and, between
+ticks, spawns or retires replicas without dropping in-flight requests.
+Scale-up warms the new slot off-path and admits it only when
+``slot_ready``; scale-down quiesces — the replica leaves the admission
+map, its queued-but-unadmitted requests are recalled and re-routed
+(they have emitted zero tokens, so re-routing is invisible to token
+identity), its lanes drain to completion, and only then is the slot
+released, its counters folded into the run report.  On tcp the
+registry does half the work: scale-up asks the ``scale_executor`` to
+boot a worker and adopts it off the next ``placements`` answer;
+scale-down drops the slot and (optionally) asks the executor to stop
+the process.  Because placement never touches the sampler key, tokens
+stay bitwise identical to the serial oracle even while the placement
+varies mid-run (``tests/test_serving_autoscale.py``).
 """
 from __future__ import annotations
 
@@ -50,10 +68,15 @@ from repro.core import assignment as asg
 from repro.core import router as routerlib
 from repro.models import model as modellib
 from repro.serving import cache as cachelib
+from repro.serving.autoscale import (Autoscaler, ScaleEvent, ScalePolicy,
+                                     SlotLoad)
 from repro.serving.expert_server import (EngineConfig, ExpertServer,
                                          resolve_shapes)
 from repro.serving.net import registry as netreg
 from repro.serving.net.socket_transport import SocketTransport
+from repro.serving.placement import Placement, PlacementMap
+from repro.serving.report import (AutoscaleStats, PrefixSharingStats,
+                                  RunReport)
 from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import Request, RequestQueue
 from repro.serving.transport import (LoopbackTransport, ProcessTransport,
@@ -104,11 +127,21 @@ class ServeFrontend:
     KV pools — and admits each request to the least-loaded replica of
     its argmax expert.  Router scores stay the only cross-replica
     traffic, and tokens are placement-invariant (see module docstring).
+
+    ``scale`` installs a :class:`repro.serving.autoscale.ScalePolicy`:
+    the frontend then grows/shrinks the replica map live between ticks
+    (see the module docstring's Autoscaling paragraph).
+    ``scale_executor`` (tcp only) is anything with
+    ``start_replica(expert)`` / ``stop_replica(placement)`` — e.g. a
+    :class:`repro.serving.net.fleet.LocalFleet`; without one, a tcp
+    frontend still adopts workers others start and still retires idle
+    replicas from its own admission.
     """
 
     def __init__(self, ecfg, rcfg, expert_params: list, router_params,
                  eng: EngineConfig = EngineConfig(), replicas=None,
-                 uid_namespace: int | None = None):
+                 uid_namespace: int | None = None,
+                 scale: ScalePolicy | None = None, scale_executor=None):
         shapes = resolve_shapes(ecfg, eng)    # validate before any spawn
         self.ecfg, self.rcfg, self.eng = ecfg, rcfg, eng
         self.expert_params = list(expert_params)
@@ -124,12 +157,11 @@ class ServeFrontend:
             # registered (and still heartbeat) are the slots
             fleet = netreg.wait_for_fleet(eng.registry, self.n_experts,
                                           timeout=eng.net_timeout_s)
-            self.replicas = [0] * self.n_experts
-            for e, _, _, _ in fleet:
-                self.replicas[e] += 1
-            self.placements = [(e, r) for e, r, _, _ in fleet]
+            placed = [Placement(int(e), int(r), slot=s,
+                                host=host, port=int(port))
+                      for s, (e, r, host, port) in enumerate(fleet)]
         else:
-            self.replicas = [1] * self.n_experts
+            counts = [1] * self.n_experts
             for e, r in dict(replicas or {}).items():
                 e, r = int(e), int(r)
                 if not 0 <= e < self.n_experts:
@@ -138,40 +170,37 @@ class ServeFrontend:
                 if r < 1:
                     raise ValueError(f"expert {e} needs >= 1 replica, "
                                      f"got {r}")
-                self.replicas[e] = r
+                counts[e] = r
             # flat server slots: expert e occupies R_e consecutive slots,
             # and the transport addresses slots — it never hears about
             # experts
-            self.placements = [(e, r) for e in range(self.n_experts)
-                               for r in range(self.replicas[e])]
-        self._slots_of = {e: [s for s, (pe, _) in enumerate(self.placements)
-                              if pe == e] for e in range(self.n_experts)}
-        self.n_servers = len(self.placements)
+            placed, slot = [], 0
+            for e in range(self.n_experts):
+                for r in range(counts[e]):
+                    placed.append(Placement(e, r, slot=slot))
+                    slot += 1
+        self.placements = PlacementMap(placed)
         self.pad_safe = shapes.pad_safe
         self.has_pool = shapes.has_pool
         self.lane_blocks = shapes.lane_blocks
         self.pool_blocks = shapes.pool_blocks
         self.decode_impl = shapes.decode_impl
-        labels = [f"expert {e}" if self.replicas[e] == 1
-                  else f"expert {e} replica {r}"
-                  for e, r in self.placements]
+        labels = [p.label for p in placed]
         if eng.transport == "tcp":
             self._transport = SocketTransport(
-                [(host, port) for _, _, host, port in fleet], labels,
-                expect=self.placements,
+                [p.addr for p in placed], labels,
+                expect=placed,
                 connect_timeout=eng.net_timeout_s,
                 read_timeout=eng.net_timeout_s,
                 poll_s=eng.net_poll_ms / 1000.0)
         elif eng.transport == "process":
-            slot_params = [self.expert_params[e]
-                           for e, _ in self.placements]
+            slot_params = [self.expert_params[p.expert] for p in placed]
             self._transport = ProcessTransport(ecfg, eng, slot_params,
                                                labels)
         else:
-            slot_params = [self.expert_params[e]
-                           for e, _ in self.placements]
             self._transport = LoopbackTransport(
-                [ExpertServer(ecfg, p, eng) for p in slot_params], labels)
+                [ExpertServer(ecfg, self.expert_params[p.expert], eng)
+                 for p in placed], labels)
         if uid_namespace is None:
             # each tcp frontend leases a namespace so N frontends on one
             # fleet never collide; the local transports own their fleet
@@ -185,6 +214,22 @@ class ServeFrontend:
             raise ValueError(f"uid_namespace must be in "
                              f"[0, {MAX_UID_NAMESPACE}], got "
                              f"{self.uid_namespace}")
+        # -- autoscale control plane --
+        self.scale = scale.validate() if scale is not None else None
+        self._scaler = Autoscaler(self.scale, self.n_experts,
+                                  eng.lanes_per_expert) \
+            if self.scale is not None else None
+        self._scale_executor = scale_executor
+        self._warming: dict[int, Placement] = {}      # slot -> spawned, cold
+        self._draining: dict[int, tuple] = {}         # slot -> (Placement,
+                                                      #          reason)
+        self._retired_stats: list = []                # (Placement, StatsMsg?)
+        self.scale_events: list[ScaleEvent] = []
+        self._warmup_args: tuple | None = None
+        self._retired_keys: set = set()               # tcp: never re-adopt
+        self._tcp_spawning: dict[int, int] = {}       # expert -> boots asked
+        self._peak = [self.placements.n_replicas(e)
+                      for e in range(self.n_experts)]
         self.queue = RequestQueue()
         self.tick = 0
         self._uid = self.uid_namespace * UID_NAMESPACE_STRIDE
@@ -194,6 +239,17 @@ class ServeFrontend:
         self._score_fn = _router_fns(rcfg)
 
     # -- lifecycle ---------------------------------------------------------
+    @property
+    def replicas(self) -> list[int]:
+        """Live (admissible) replica count per expert — with a
+        ScalePolicy installed this varies over the run."""
+        return [self.placements.n_replicas(e) for e in range(self.n_experts)]
+
+    @property
+    def n_servers(self) -> int:
+        """Live admissible server slots (draining/warming excluded)."""
+        return len(self.placements)
+
     @property
     def _experts(self):
         """Loopback-only: the in-process ExpertServer states (tests, debug
@@ -223,7 +279,8 @@ class ServeFrontend:
         ``prompt_len`` selects which prefill bucket to warm (defaults to
         the routing prefix length); call again for other buckets.
         ``sampled=False`` skips the sampled pass — a greedy-only
-        deployment then never compiles the sampler programs.
+        deployment then never compiles the sampler programs.  The
+        autoscaler warms scaled-up replicas with the same arguments.
         """
         # router scoring always runs on (route_batch, prefix_len) chunks
         self._score_fn(self.router_params,
@@ -231,6 +288,7 @@ class ServeFrontend:
                                  jnp.int32))
         # synthetic warmup tokens never reach the frontend: each server
         # drops its own warmup deltas and restores its clock/stats
+        self._warmup_args = (prompt_len, sampled)
         self._transport.warmup(prompt_len, sampled)
 
     # -- request intake ----------------------------------------------------
@@ -277,9 +335,12 @@ class ServeFrontend:
         """Least-loaded admission: the slot of expert ``e`` with the
         fewest in-flight requests (queued + in a lane, tracked from the
         message flow — no stats round-trip).  Ties break to the lowest
-        replica index, so placement is deterministic."""
-        return min(self._slots_of[e],
-                   key=lambda s: (self._transport.load(s), s))
+        slot, i.e. the lowest replica index, so placement is
+        deterministic."""
+        slots = self.placements.slots_of(e)
+        if not slots:
+            raise RuntimeError(f"no live replica of expert {e} to admit to")
+        return min(slots, key=lambda s: (self._transport.load(s), s))
 
     def _route(self, reqs: list[Request]) -> None:
         """Score prefixes in padded fixed-width batches, argmax an expert,
@@ -300,11 +361,147 @@ class ServeFrontend:
                 r.expert = int(e)
                 r.route_tick = self.tick
                 slot = self._pick_replica(r.expert)
-                r.replica = self.placements[slot][1]
+                r.replica = self.placements[slot].replica
                 self._transport.enqueue(slot, RequestMsg(
                     uid=r.uid, prompt=r.prompt,
                     max_new_tokens=r.max_new_tokens, sampling=r.sampling,
                     stop_tokens=r.stop_tokens, enqueue_tick=self.tick))
+
+    # -- autoscaling -------------------------------------------------------
+    def _adopt(self, p: Placement, reason: str) -> None:
+        """A new replica enters admission: the scale-up takes effect."""
+        self.placements.add(p)
+        self._peak[p.expert] = max(self._peak[p.expert],
+                                   self.placements.n_replicas(p.expert))
+        if self._scaler is not None:
+            # cooldown restarts when the capacity lands, not when the
+            # spawn was decided — a slow warmup must not leave the new
+            # member instantly ripe for an idle retire
+            self._scaler.note_adopted(p.expert, p.slot, self.tick)
+        self.scale_events.append(ScaleEvent(
+            tick=self.tick, action="up", expert=p.expert,
+            replica=p.replica, reason=reason))
+
+    def _poll_warming(self) -> None:
+        for s in sorted(self._warming):
+            if self._transport.slot_ready(s):
+                self._adopt(self._warming.pop(s), reason="pressure")
+
+    def _scale_up(self, e: int) -> None:
+        if self.eng.transport == "tcp":
+            # the registry owns replica identity on tcp: ask the executor
+            # to boot a worker, adopt it off the next placements answer
+            if self._scale_executor is not None:
+                self._scale_executor.start_replica(e)
+                self._tcp_spawning[e] = self._tcp_spawning.get(e, 0) + 1
+            return
+        taken = [p.replica for p in self._warming.values()
+                 if p.expert == e]
+        taken += [p.replica for p, _ in self._draining.values()
+                  if p.expert == e]
+        p = Placement(e, self.placements.next_replica(e, taken))
+        if self.eng.transport == "process":
+            slot = self._transport.add_slot(self.expert_params[e], p.label)
+            # warm off-path: the worker imports jax and compiles while
+            # serving continues; _poll_warming admits it once ready
+            args = self._warmup_args or (None, True)
+            self._transport.warmup_slot(slot, *args)
+            self._warming[slot] = p.bind(slot)
+        else:
+            # loopback shares the config-keyed jit cache: a new server is
+            # warm by construction, admissible immediately
+            slot = self._transport.add_slot(
+                ExpertServer(self.ecfg, self.expert_params[e], self.eng),
+                p.label)
+            self._adopt(p.bind(slot), reason="pressure")
+
+    def _begin_retire(self, slot: int, reason: str) -> None:
+        """Quiesce one replica: leave admission, recall its queued
+        requests (re-routed to survivors — they have emitted zero
+        tokens, so their streams cannot tell), let its lanes drain."""
+        p = self.placements.remove(slot)
+        self._draining[slot] = (p, reason)
+        uids = self._transport.recall(slot)
+        reqs = [self._live[u] for u in uids if u in self._live]
+        if reqs:
+            self._route(reqs)
+
+    def retire_replica(self, expert: int, replica: int, *,
+                       reason: str = "manual") -> None:
+        """Manually quiesce one live replica (the autoscaler's scale-down
+        path, exposed for operators and tests).  The slot is released —
+        and a ``"down"`` event recorded — once its lanes drain."""
+        p = self.placements.find(int(expert), int(replica))
+        if p is None:
+            raise ValueError(f"expert {expert} replica {replica} is not a "
+                             f"live replica")
+        if self.placements.n_replicas(int(expert)) <= 1:
+            raise ValueError(f"cannot retire the last live replica of "
+                             f"expert {expert}")
+        self._begin_retire(p.slot, reason)
+
+    def _finalize_drains(self) -> None:
+        """Release every drained slot: stash its counters for the run
+        report, free the backend resources, record the down event."""
+        for s in sorted(self._draining):
+            if self._transport.busy(s):
+                continue
+            p, reason = self._draining.pop(s)
+            st = None
+            try:
+                st = self._transport.stats(s)
+            except RuntimeError:
+                pass                       # died while draining: no counters
+            self._retired_stats.append((p, st))
+            self._transport.remove_slot(s)
+            if self.eng.transport == "tcp":
+                self._retired_keys.add(p.key)
+                if self._scale_executor is not None:
+                    self._scale_executor.stop_replica(p)
+            self.scale_events.append(ScaleEvent(
+                tick=self.tick, action="down", expert=p.expert,
+                replica=p.replica, reason=reason))
+
+    def _sync_fleet(self) -> None:
+        """tcp: re-derive placements from the registry between ticks —
+        adopt workers that joined since (heartbeat expiry is the
+        registry's half of scale-down; ours is ``_retired_keys``, so a
+        replica this frontend retired is never re-adopted)."""
+        try:
+            fleet = netreg.call(self.eng.registry, "placements",
+                                timeout=self.eng.net_timeout_s)
+        except Exception:
+            return    # registry is discovery-only: keep serving without it
+        known = {p.key for p in self.placements}
+        known |= {p.key for p in self._warming.values()}
+        known |= {p.key for p, _ in self._draining.values()}
+        known |= self._retired_keys
+        for e, r, host, port in fleet:
+            p = Placement(int(e), int(r), host=host, port=int(port))
+            if p.key in known:
+                continue
+            try:
+                slot = self._transport.add_slot(p.addr, p.label, expect=p)
+            except RuntimeError:
+                continue          # died between registering and our connect
+            if self._tcp_spawning.get(p.expert, 0) > 0:
+                self._tcp_spawning[p.expert] -= 1
+            self._adopt(p.bind(slot), reason="fleet")
+
+    def _autoscale_eval(self) -> None:
+        if self.eng.transport == "tcp":
+            self._sync_fleet()
+        loads = {e: [SlotLoad(s, self._transport.load(s))
+                     for s in self.placements.slots_of(e)]
+                 for e in range(self.n_experts)}
+        warming = {e: sum(p.expert == e for p in self._warming.values())
+                   + self._tcp_spawning.get(e, 0)
+                   for e in range(self.n_experts)}
+        for act in self._scaler.observe(self.tick, loads, warming):
+            if act[0] == "up":
+                self._scale_up(act[1])
+            else:
+                self._begin_retire(act[2], reason="idle")
 
     # -- delta reassembly --------------------------------------------------
     def _deliver(self, msg: TokenDeltaMsg,
@@ -327,7 +524,9 @@ class ServeFrontend:
 
     # -- main loop ---------------------------------------------------------
     def step(self) -> list[Request]:
-        """One frontend tick: route arrivals, tick every busy expert.
+        """One frontend tick: route arrivals, run the scale loop, tick
+        every busy server (draining ones included — their lanes must
+        finish), release slots that just drained.
 
         Each expert advances on its own clock — idle experts are not
         ticked at all, and the process transport overlaps the busy ones'
@@ -342,12 +541,19 @@ class ServeFrontend:
         arrived = self.queue.pop_arrived(self.tick)
         if arrived:
             self._route(arrived)
+        if self._warming:
+            self._poll_warming()
+        if self._scaler is not None and self.tick % self.scale.every == 0:
+            self._autoscale_eval()
         completed: list[Request] = []
-        working = [s for s in range(self.n_servers)
-                   if self._transport.busy(s)]
+        tick_slots = sorted(set(self.placements.slots())
+                            | set(self._draining))
+        working = [s for s in tick_slots if self._transport.busy(s)]
         for _, msgs in self._transport.tick_many(working):
             for msg in msgs:
                 self._deliver(msg, completed)
+        if self._draining:
+            self._finalize_drains()
         self.tick += 1
         return completed
 
@@ -401,8 +607,10 @@ class ServeFrontend:
             self.ecfg, self.eng.lanes_per_expert, self.pool_blocks,
             self.eng.block_size, self.eng.max_len))
 
-    def run(self) -> dict:
-        """Drive ticks until drained; returns requests + aggregate stats.
+    def run(self) -> RunReport:
+        """Drive ticks until drained; returns a :class:`RunReport`
+        (requests + aggregate stats; dict-compatible — ``res["key"]``
+        and ``res.to_dict()`` give the historical shape).
 
         Stats cover this run only (a warmup run on the same instance —
         which shares the jit caches — does not pollute a later timed
@@ -410,6 +618,10 @@ class ServeFrontend:
         kept so request timestamps stay on one clock; a fresh run()
         restarts the origin."""
         self._transport.reset_stats()
+        self._retired_stats = []
+        ev_mark = len(self.scale_events)
+        self._peak = [self.placements.n_replicas(e)
+                      for e in range(self.n_experts)]
         tick0 = self.tick
         t_start = time.perf_counter()
         if self._t0 is None:
@@ -423,21 +635,24 @@ class ServeFrontend:
         self._transport.sync()
         wall = time.perf_counter() - t_start
         self._t0 = None
-        # one StatsMsg per server slot, aggregated per expert (a hot
-        # expert's counters sum over its replicas; the per-replica
-        # breakdown rides along for load-balance observability).  A slot
-        # whose StatsMsg never arrives — its worker died — degrades to
-        # partial stats with an explicit missing_replicas entry instead
-        # of losing the whole report.
-        slot_stats: list = []
+        # one StatsMsg per live server slot, aggregated per expert (a hot
+        # expert's counters sum over its replicas, replicas retired
+        # mid-run included; the per-replica breakdown lists the live
+        # ones for load-balance observability).  A slot whose StatsMsg
+        # never arrives — its worker died — degrades to partial stats
+        # with an explicit missing_replicas entry instead of losing the
+        # whole report.
+        slot_stats: dict[int, object] = {}
         missing: list[str] = []
-        for s in range(self.n_servers):
+        for p in self.placements:
             try:
-                slot_stats.append(self._transport.stats(s))
+                slot_stats[p.slot] = self._transport.stats(p.slot)
             except RuntimeError:
-                slot_stats.append(None)
-                missing.append(self._transport.labels[s])
-        live = [st for st in slot_stats if st is not None]
+                slot_stats[p.slot] = None
+                missing.append(p.label)
+        retired = list(self._retired_stats)
+        live = [st for st in slot_stats.values() if st is not None] \
+            + [st for _, st in retired if st is not None]
         useful = sum(len(r.tokens) for r in completed)
         decode_calls = sum(st.decode_calls for st in live)
         lane_steps = sum(st.occupied_lane_steps for st in live)
@@ -446,8 +661,11 @@ class ServeFrontend:
         lanes = self.eng.lanes_per_expert
 
         def expert_stats(e):
-            slots = self._slots_of[e]
-            ss = [slot_stats[s] for s in slots if slot_stats[s] is not None]
+            reps = self.placements.replicas_of(e)
+            ss_live = [(p, slot_stats[p.slot]) for p in reps]
+            ss = [st for _, st in ss_live if st is not None]
+            ss += [st for p, st in retired
+                   if p.expert == e and st is not None]
             dc = sum(st.decode_calls for st in ss)
             return {
                 "served": sum(st.n_served for st in ss),
@@ -460,48 +678,58 @@ class ServeFrontend:
                                             for st in ss),
                 "occupancy": sum(st.occupied_lane_steps for st in ss)
                 / max(dc * lanes, 1),
-                "replicas": self.replicas[e],
-                "missing_replicas": [self.placements[s][1] for s in slots
-                                     if slot_stats[s] is None],
+                "replicas": len(reps),
+                "missing_replicas": [p.replica for p, st in ss_live
+                                     if st is None],
                 "per_replica": {
-                    self.placements[s][1]: {
-                        "served": slot_stats[s].n_served,
-                        "queue_wait_ticks": slot_stats[s].queue_wait_ticks,
-                        "occupancy": slot_stats[s].occupied_lane_steps
-                        / max(slot_stats[s].decode_calls * lanes, 1)}
-                    for s in slots if slot_stats[s] is not None},
+                    p.replica: {
+                        "served": st.n_served,
+                        "queue_wait_ticks": st.queue_wait_ticks,
+                        "occupancy": st.occupied_lane_steps
+                        / max(st.decode_calls * lanes, 1)}
+                    for p, st in ss_live if st is not None},
             }
-        return {
-            "requests": sorted(completed, key=lambda r: r.uid),
-            "ticks": self.tick - tick0,    # simulated span (incl. skipped gaps)
-            "steps": n_steps,              # scheduler iterations actually run
-            "wall_s": wall,
-            "useful_tokens": useful,
-            "early_stops": sum(r.finish_reason == "stop_token"
-                               for r in completed),
-            "n_unadmitted": self.n_unadmitted,
-            "missing_replicas": missing,
-            "prefix_sharing": {
-                "enabled": self.eng.prefix_cache,
-                "hit_blocks": sum(st.prefix_hit_blocks for st in live),
-                "prefill_tokens_saved": sum(st.prefill_tokens_saved
-                                            for st in live),
-                "cached_blocks": sum(st.cached_blocks for st in live),
-            },
-            "tokens_per_s": useful / max(wall, 1e-9),
-            "mean_ttft_s": float(np.mean([r.t_first for r in completed]))
+        autoscale = None
+        if self.scale is not None:
+            evs = self.scale_events[ev_mark:]
+            autoscale = AutoscaleStats(
+                scale_ups=sum(ev.action == "up" for ev in evs),
+                scale_downs=sum(ev.action == "down" for ev in evs),
+                peak_replicas={e: self._peak[e]
+                               for e in range(self.n_experts)},
+                final_replicas={e: self.placements.n_replicas(e)
+                                for e in range(self.n_experts)},
+                events=list(evs))
+        return RunReport(
+            requests=sorted(completed, key=lambda r: r.uid),
+            ticks=self.tick - tick0,   # simulated span (incl. skipped gaps)
+            steps=n_steps,             # scheduler iterations actually run
+            wall_s=wall,
+            useful_tokens=useful,
+            early_stops=sum(r.finish_reason == "stop_token"
+                            for r in completed),
+            n_unadmitted=self.n_unadmitted,
+            missing_replicas=missing,
+            prefix_sharing=PrefixSharingStats(
+                enabled=self.eng.prefix_cache,
+                hit_blocks=sum(st.prefix_hit_blocks for st in live),
+                prefill_tokens_saved=sum(st.prefill_tokens_saved
+                                         for st in live),
+                cached_blocks=sum(st.cached_blocks for st in live)),
+            tokens_per_s=useful / max(wall, 1e-9),
+            mean_ttft_s=float(np.mean([r.t_first for r in completed]))
             if completed else 0.0,
-            "occupancy": lane_steps / max(decode_calls * lanes, 1),
-            "prefill_calls": sum(st.prefill_calls for st in live),
-            "kv_bytes_per_lane": self.kv_bytes_per_expert() // lanes,
-            "decode_impl": self.decode_impl,
-            "transport": self.eng.transport,
-            "decode_read_bytes": {
+            occupancy=lane_steps / max(decode_calls * lanes, 1),
+            prefill_calls=sum(st.prefill_calls for st in live),
+            kv_bytes_per_lane=self.kv_bytes_per_expert() // lanes,
+            decode_impl=self.decode_impl,
+            transport=self.eng.transport,
+            decode_read_bytes={
                 "paged": paged_rd,
                 "gathered": gathered_rd,
                 "paged_per_tick": paged_rd // max(decode_calls, 1),
                 "gathered_per_tick": gathered_rd // max(decode_calls, 1),
             },
-            "per_expert": {e: expert_stats(e)
-                           for e in range(self.n_experts)},
-        }
+            per_expert={e: expert_stats(e)
+                        for e in range(self.n_experts)},
+            autoscale=autoscale)

@@ -40,6 +40,9 @@ op              args                       reply
 ``reset_stats``  —                         ``None``
 ``warmup``      ``(prompt_len, sampled)``  ``None``
 ``sync``        —                          ``None``
+``recall``      —                          ``list[int]`` (this frontend's
+                                           queued uids, drained — the
+                                           scale-down quiesce handback)
 ``close``       —                          — (connection ends; worker lives)
 ==============  =========================  =================================
 
@@ -266,6 +269,15 @@ class ExpertWorker:
             elif op == "sync":
                 self._server.sync()
                 box.put(None)
+            elif op == "recall":
+                # quiesce for ONE frontend: only its queued uids come
+                # back — another frontend's requests on this shared
+                # worker are untouched
+                mine = {u for u, c in self._owner.items() if c is conn}
+                uids = self._server.recall_pending(mine)
+                for u in uids:
+                    self._owner.pop(u, None)
+                box.put(uids)
             else:
                 box.put(_RemoteError(f"unknown worker op {op!r}"))
 
@@ -335,7 +347,8 @@ class ExpertWorker:
                         framing.send_frame(sock, _RemoteError(self._failure))
                     else:
                         framing.send_frame(sock, deltas)
-                elif op in ("stats", "reset_stats", "warmup", "sync"):
+                elif op in ("stats", "reset_stats", "warmup", "sync",
+                            "recall"):
                     framing.send_frame(sock, self._call(op, args, conn))
                 else:
                     framing.send_frame(

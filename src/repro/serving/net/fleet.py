@@ -31,11 +31,25 @@ import pickle
 import subprocess
 import sys
 import tempfile
+import threading
 import time
 
 from repro.serving.net import framing, registry as registrylib
 
 _LOG_TAIL = 4000
+
+
+def _reap(proc) -> None:
+    """Wait out a terminated worker, escalating to SIGKILL: keeps
+    ``stop_replica`` non-blocking without leaking zombies."""
+    try:
+        proc.wait(timeout=10)
+    except subprocess.TimeoutExpired:
+        proc.kill()
+        try:
+            proc.wait(timeout=5)
+        except subprocess.TimeoutExpired:
+            pass
 
 
 class LocalFleet:
@@ -58,6 +72,9 @@ class LocalFleet:
             os.path.dirname(os.path.abspath(__file__)))))
         extra = env.get("PYTHONPATH", "")
         env["PYTHONPATH"] = src + (os.pathsep + extra if extra else "")
+        self._env = env
+        self._warmup_len = warmup_len
+        self._warmup = warmup
         try:
             self._start_registry(env, ttl_s)
             spec = {"ecfg": ecfg, "eng": eng}
@@ -65,13 +82,14 @@ class LocalFleet:
                 spec["params_by_expert"] = dict(params_by_expert)
             else:
                 spec["seed"] = int(seed)
-            spec_path = os.path.join(self._tmp.name, "fleet_spec.pkl")
-            with open(spec_path, "wb") as f:
+            self._spec_path = os.path.join(self._tmp.name, "fleet_spec.pkl")
+            with open(self._spec_path, "wb") as f:
                 pickle.dump(spec, f)
             replicas = dict(replicas or {})
             for e in range(self.n_experts):
                 for _ in range(max(int(replicas.get(e, 1)), 1)):
-                    self._start_worker(env, spec_path, e, warmup_len, warmup)
+                    self._start_worker(env, self._spec_path, e,
+                                       warmup_len, warmup)
             self._wait_ready(start_timeout_s)
         except Exception:
             self.close()
@@ -128,6 +146,42 @@ class LocalFleet:
             except RuntimeError:
                 if time.monotonic() >= deadline:
                     raise
+
+    # -- the ServeFrontend scale_executor protocol ---------------------------
+    def start_replica(self, expert: int) -> None:
+        """Boot one more worker for ``expert`` (the autoscaler's
+        scale-up request).  Returns immediately — the worker warms, then
+        registers; the frontend adopts it off the registry's next
+        ``placements`` answer."""
+        self._start_worker(self._env, self._spec_path, int(expert),
+                           self._warmup_len, self._warmup)
+
+    def stop_replica(self, placement) -> bool:
+        """Terminate the worker process serving ``placement`` (the
+        autoscaler's scale-down, after the frontend drained it).
+        Workers are matched by the ``WORKER expert=E replica=R addr``
+        line they print at boot; returns False when no live process
+        matches (already gone — e.g. retired by another frontend)."""
+        want = (f"WORKER expert={placement.expert} "
+                f"replica={placement.replica} "
+                f"{placement.host}:{placement.port}")
+        for proc, log in zip(self._procs, self._logs):
+            if proc.poll() is not None:
+                continue
+            try:
+                with open(log, "rb") as f:
+                    head = f.read(_LOG_TAIL).decode(errors="replace")
+            except OSError:
+                continue
+            if want in head:
+                proc.terminate()
+                # reap off-path: this runs inside the frontend's step
+                # loop (scale-down finalize), which must not stall on a
+                # worker's exit
+                threading.Thread(target=_reap, args=(proc,),
+                                 daemon=True).start()
+                return True
+        return False
 
     def _tail(self, log: str) -> str:
         try:

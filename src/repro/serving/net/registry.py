@@ -34,7 +34,7 @@ op                    args                                     reply
 ====================  =======================================  ==========================
 ``register``          ``{expert, host, port[, replica]}``      ``{replica, ttl_s}``
 ``heartbeat``         ``(expert, replica)``                    ``"ok"`` | ``"unknown"``
-``placements``        —                                        ``[(expert, replica, host, port)]``
+``placements``        —                                        ``[Placement(expert, replica, host, port)]``
 ``lease``             —                                        ``int`` (0, 1, 2, ...)
 ``stop``              —                                        ``"ok"`` (shuts the registry down)
 ====================  =======================================  ==========================
@@ -47,6 +47,7 @@ import threading
 import time
 
 from repro.serving.net import framing
+from repro.serving.placement import Placement
 
 
 class Registry:
@@ -121,10 +122,14 @@ class Registry:
                 self._workers[key] = (host, port, now)
                 return "ok"
             if op == "placements":
-                return sorted((e, r, host, port)
-                              for (e, r), (host, port, seen)
-                              in self._workers.items()
-                              if now - seen <= self.ttl_s)
+                # typed Placement records on the wire (slot unbound: the
+                # frontend binds transport slots itself); iterating one
+                # still yields the legacy (e, r, host, port) tuple shape
+                return sorted(
+                    (Placement(expert=e, replica=r, host=host, port=port)
+                     for (e, r), (host, port, seen) in self._workers.items()
+                     if now - seen <= self.ttl_s),
+                    key=lambda p: (p.expert, p.replica, p.host, p.port))
             if op == "lease":
                 lease, self._leases = self._leases, self._leases + 1
                 return lease

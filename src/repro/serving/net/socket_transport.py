@@ -44,50 +44,103 @@ class SocketTransport(Transport):
     def __init__(self, addrs, labels=None, *, expect=None,
                  connect_timeout: float = 10.0, read_timeout: float = 60.0,
                  poll_s: float = 0.02):
-        self._addrs = [tuple(a) for a in addrs]
-        self.n_servers = len(self._addrs)
-        self.labels = list(labels) if labels is not None else \
-            [f"expert {s}" for s in range(self.n_servers)]
+        addrs = [tuple(a) for a in addrs]
+        labels = list(labels) if labels is not None else \
+            [f"expert {s}" for s in range(len(addrs))]
+        self._addrs: list = []
+        self.labels: list = []
+        self._connect_timeout = float(connect_timeout)
         self._poll_s = float(poll_s)
         self._read_timeout = float(read_timeout)
-        self._outstanding = [0] * self.n_servers
+        self._outstanding: list[int] = []
         # deltas received but not yet handed to the caller: when one slot
         # dies mid tick_many, the other slots' poll replies must still be
         # read (each socket is an ordered request/reply stream — leaving a
         # reply unread would desync every later op) and must not be lost
         # (the worker already handed them over)
         self._pending: dict[int, list] = {}
-        self._dead: list[str | None] = [None] * self.n_servers
+        self._dead: list[str | None] = []
         self._closed = False
         self._socks: list[socket.socket | None] = []
         try:
-            for s, addr in enumerate(self._addrs):
-                try:
-                    sock = framing.connect(addr, connect_timeout)
-                except OSError as e:
-                    raise RuntimeError(
-                        f"cannot reach {self.labels[s]} worker at "
-                        f"{addr[0]}:{addr[1]}: {e}") from None
-                hello = framing.client_handshake(sock, role="frontend")
-                claim = None if expect is None else tuple(expect[s])
-                ident = (hello.get("expert"), hello.get("replica"))
-                if claim is not None and ident != claim:
-                    sock.close()
-                    raise RuntimeError(
-                        f"placement mismatch at {addr[0]}:{addr[1]}: the "
-                        f"registry advertised expert {claim[0]} replica "
-                        f"{claim[1]} but the worker identifies as expert "
-                        f"{ident[0]} replica {ident[1]} — stale registry "
-                        f"entry or a port collision")
-                sock.settimeout(self._read_timeout)
-                self._socks.append(sock)
+            for s, addr in enumerate(addrs):
+                self.add_slot(addr, labels[s],
+                              expect=None if expect is None else expect[s])
         except Exception:
             for sock in self._socks:
-                try:
-                    sock.close()
-                except OSError:
-                    pass
+                if sock is not None:
+                    try:
+                        sock.close()
+                    except OSError:
+                        pass
             raise
+
+    # -- dynamic slot membership ---------------------------------------------
+    def slots(self):
+        # dead slots stay listed (ops on them raise, surfacing the death
+        # with its placement label); only retired slots leave the table
+        return [s for s, sock in enumerate(self._socks) if sock is not None]
+
+    def add_slot(self, target, label, *, expect=None):
+        """Connect one more worker mid-serve: ``target`` is its
+        ``(host, port)``; ``expect`` (a ``Placement`` or ``(e, r)``
+        tuple) cross-checks the worker's handshake identity.  Network
+        workers pre-warm at boot, so the slot is admissible at once."""
+        if self._closed:
+            raise RuntimeError("SocketTransport is closed; build a fresh "
+                               "engine to serve again")
+        addr = tuple(target)
+        try:
+            sock = framing.connect(addr, self._connect_timeout)
+        except OSError as e:
+            raise RuntimeError(
+                f"cannot reach {label} worker at "
+                f"{addr[0]}:{addr[1]}: {e}") from None
+        hello = framing.client_handshake(sock, role="frontend")
+        claim = None if expect is None else tuple(expect)[:2]
+        ident = (hello.get("expert"), hello.get("replica"))
+        if claim is not None and ident != claim:
+            sock.close()
+            raise RuntimeError(
+                f"placement mismatch at {addr[0]}:{addr[1]}: the "
+                f"registry advertised expert {claim[0]} replica "
+                f"{claim[1]} but the worker identifies as expert "
+                f"{ident[0]} replica {ident[1]} — stale registry "
+                f"entry or a port collision")
+        sock.settimeout(self._read_timeout)
+        self._addrs.append(addr)
+        self.labels.append(label)
+        self._outstanding.append(0)
+        self._dead.append(None)
+        self._socks.append(sock)
+        return len(self._socks) - 1
+
+    def remove_slot(self, s):
+        """Retire slot ``s``: polite ``close`` frame, then drop the
+        socket — the worker itself keeps running for other frontends
+        (a frontend never owns the fleet)."""
+        sock = self._socks[s]
+        if sock is None:
+            return
+        self._socks[s] = None
+        self._pending.pop(s, None)
+        if self._dead[s] is None:
+            try:
+                framing.send_frame(sock, ("close", None))
+            except framing.PeerGone:
+                pass
+        try:
+            sock.close()
+        except OSError:
+            pass
+
+    def recall(self, s):
+        self._send(s, "recall", None)
+        uids = self._recv(s)
+        # recalled requests leave this slot for good — decrement the
+        # sender-side load or the retired slot leaks load forever
+        self._outstanding[s] -= len(uids)
+        return list(uids)
 
     # -- failure plumbing ----------------------------------------------------
     def _fail(self, s: int, reason: str) -> RuntimeError:
@@ -106,6 +159,8 @@ class SocketTransport(Transport):
         if self._closed:
             raise RuntimeError("SocketTransport is closed; build a fresh "
                                "engine to serve again")
+        if self._socks[s] is None:
+            raise RuntimeError(f"{self.labels[s]} slot was retired")
         if self._dead[s] is not None:
             host, port = self._addrs[s]
             raise RuntimeError(
@@ -187,7 +242,7 @@ class SocketTransport(Transport):
         return self._recv(s)
 
     def reset_stats(self):
-        for s in range(self.n_servers):
+        for s in self.slots():
             if self._dead[s] is None:     # partial stats tolerate the dead
                 self._send(s, "reset_stats", None)
                 self._recv(s)
@@ -195,9 +250,10 @@ class SocketTransport(Transport):
     def warmup(self, prompt_len, sampled):
         # per-worker jit caches: warm every slot, concurrently (workers
         # pre-warm at boot, so this normally returns compiled-cache hits)
-        for s in range(self.n_servers):
+        live = self.slots()
+        for s in live:
             self._send(s, "warmup", (prompt_len, sampled))
-        for s in range(self.n_servers):
+        for s in live:
             self._recv(s)
 
     def sync(self):
@@ -205,7 +261,7 @@ class SocketTransport(Transport):
         # stats exclude queued device work — a slot dying here must not
         # take down the end-of-run report (its death is already surfaced
         # by the tick that lost the request, or by the stats() attempt)
-        live = [s for s in range(self.n_servers) if self._dead[s] is None]
+        live = [s for s in self.slots() if self._dead[s] is None]
         for s in live:
             try:
                 self._send(s, "sync", None)
@@ -223,7 +279,7 @@ class SocketTransport(Transport):
             return
         self._closed = True
         for s, sock in enumerate(self._socks):
-            if self._dead[s] is not None:
+            if sock is None or self._dead[s] is not None:
                 continue
             try:
                 framing.send_frame(sock, ("close", None))

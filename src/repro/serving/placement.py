@@ -1,0 +1,141 @@
+"""First-class placements: who serves (expert, replica), and where.
+
+A :class:`Placement` is the typed record behind every "expert E
+replica R" in the serving stack — the registry advertises them, the
+transports label slots with them, and the frontend's admission map is a
+:class:`PlacementMap` over them.  Before this module the same triple
+lived as ad-hoc ``(e, r)`` tuples in the frontend, ``(e, r, host,
+port)`` tuples on the registry wire, and f-string labels derived in
+three places; the label now derives in exactly one (:attr:`Placement.label`).
+
+Slots are **transport addresses**: a flat index into the transport's
+slot table.  With live autoscaling (:mod:`repro.serving.autoscale`)
+slot indices grow monotonically and are never reused — a retired slot
+leaves a hole, so a stale index can never silently address a new
+replica.  ``slot == -1`` means "not bound to a transport yet" (e.g. a
+placement fresh off the registry wire).
+
+This module is importable without jax (pure dataclass + dict logic), so
+the control plane — registry, CLI parsing, policy code — stays light.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """One (expert, replica) server and where it lives.
+
+    ``expert``/``replica`` identify the server; ``slot`` is its
+    transport address (-1 = unbound); ``host``/``port`` are set on the
+    tcp transport (empty/0 locally).  Iterating yields the legacy
+    registry-wire tuple ``(expert, replica, host, port)`` so existing
+    ``for e, r, host, port in placements`` call sites keep working.
+    """
+    expert: int
+    replica: int
+    slot: int = -1
+    host: str = ""
+    port: int = 0
+
+    @property
+    def label(self) -> str:
+        """THE human name for this server — every transport error and
+        ``missing_replicas`` entry derives from here."""
+        return f"expert {self.expert} replica {self.replica}"
+
+    @property
+    def addr(self) -> tuple[str, int]:
+        return (self.host, self.port)
+
+    @property
+    def key(self):
+        """Transport-independent identity (slot excluded): what the
+        frontend uses to recognize a worker across registry re-derivations."""
+        return (self.expert, self.replica, self.host, self.port)
+
+    def bind(self, slot: int) -> "Placement":
+        """A copy bound to a transport slot."""
+        return dataclasses.replace(self, slot=int(slot))
+
+    def __iter__(self):
+        return iter((self.expert, self.replica, self.host, self.port))
+
+
+class PlacementMap:
+    """The frontend's admission map: live slot -> :class:`Placement`.
+
+    Supports add/remove/lookup by slot or by (expert, replica), and
+    iteration in slot order.  Exactly the placements in this map are
+    admissible — a warming or draining replica lives outside it, which
+    is what makes scale-up/scale-down atomic from the router's point of
+    view (a replica either takes new requests or it does not).
+    """
+
+    def __init__(self, placements=()):
+        self._by_slot: dict[int, Placement] = {}
+        self._by_id: dict[tuple[int, int], Placement] = {}
+        for p in placements:
+            self.add(p)
+
+    def add(self, p: Placement) -> Placement:
+        if p.slot < 0:
+            raise ValueError(f"{p.label} is not bound to a slot")
+        if p.slot in self._by_slot:
+            raise ValueError(f"slot {p.slot} already maps to "
+                             f"{self._by_slot[p.slot].label}")
+        if (p.expert, p.replica) in self._by_id:
+            raise ValueError(f"{p.label} is already placed "
+                             f"(slot {self._by_id[(p.expert, p.replica)].slot})")
+        self._by_slot[p.slot] = p
+        self._by_id[(p.expert, p.replica)] = p
+        return p
+
+    def remove(self, slot: int) -> Placement:
+        p = self._by_slot.pop(slot)
+        del self._by_id[(p.expert, p.replica)]
+        return p
+
+    def get(self, slot: int) -> Placement | None:
+        return self._by_slot.get(slot)
+
+    def __getitem__(self, slot: int) -> Placement:
+        return self._by_slot[slot]
+
+    def __contains__(self, slot: int) -> bool:
+        return slot in self._by_slot
+
+    def find(self, expert: int, replica: int) -> Placement | None:
+        return self._by_id.get((expert, replica))
+
+    def slots(self) -> list[int]:
+        return sorted(self._by_slot)
+
+    def slots_of(self, expert: int) -> list[int]:
+        return sorted(p.slot for p in self._by_id.values()
+                      if p.expert == expert)
+
+    def replicas_of(self, expert: int) -> list[Placement]:
+        return sorted((p for p in self._by_id.values()
+                       if p.expert == expert), key=lambda p: p.replica)
+
+    def n_replicas(self, expert: int) -> int:
+        return sum(p.expert == expert for p in self._by_id.values())
+
+    def next_replica(self, expert: int, taken=()) -> int:
+        """Smallest replica index not live and not in ``taken`` (the
+        registry's auto-assignment rule, applied frontend-side for the
+        local transports)."""
+        used = {p.replica for p in self._by_id.values()
+                if p.expert == expert} | set(taken)
+        return next(i for i in range(len(used) + 1) if i not in used)
+
+    def __iter__(self):
+        return iter(sorted(self._by_slot.values(), key=lambda p: p.slot))
+
+    def __len__(self) -> int:
+        return len(self._by_slot)
+
+    def __repr__(self) -> str:
+        return (f"PlacementMap({[f'{p.label}@{p.slot}' for p in self]})")

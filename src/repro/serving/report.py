@@ -1,0 +1,158 @@
+"""Typed run report: what ``ServeFrontend.run()`` returns.
+
+The report used to be a nested dict whose keys were tribal knowledge
+spread across ``serve_bench.py`` and the tests.  :class:`RunReport`
+names every field with a docstring, while :meth:`RunReport.to_dict`
+reproduces the **exact** historical JSON shape (key names, nesting, and
+order) so ``benchmarks/compare_bench.py`` and the checked-in bench
+baselines are untouched.  ``report[key]`` / ``report.get(key)`` /
+``key in report`` keep working for existing dict-style callers.
+
+No jax imports — the report is plain data.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.serving.autoscale import ScaleEvent
+
+
+@dataclasses.dataclass
+class PrefixSharingStats:
+    """The prefix-sharing KV cache's run counters (PR 7).
+
+    ``enabled``              — was the radix cache on for this run.
+    ``hit_blocks``           — KV blocks served from the cache instead
+                               of being re-prefilled.
+    ``prefill_tokens_saved`` — prompt tokens never (re)computed because
+                               their blocks were cached.
+    ``cached_blocks``        — blocks the cache holds at run end.
+    """
+    enabled: bool = True
+    hit_blocks: int = 0
+    prefill_tokens_saved: int = 0
+    cached_blocks: int = 0
+
+    def to_dict(self) -> dict:
+        return {"enabled": self.enabled, "hit_blocks": self.hit_blocks,
+                "prefill_tokens_saved": self.prefill_tokens_saved,
+                "cached_blocks": self.cached_blocks}
+
+
+@dataclasses.dataclass
+class AutoscaleStats:
+    """What the autoscaler did during the run (absent when disabled).
+
+    ``scale_ups``/``scale_downs`` — replicas that entered admission /
+                               were drained and released this run.
+    ``peak_replicas``        — expert -> max simultaneous live replicas.
+    ``final_replicas``       — expert -> live replicas at run end.
+    ``events``               — every :class:`ScaleEvent` in tick order.
+    """
+    scale_ups: int = 0
+    scale_downs: int = 0
+    peak_replicas: dict = dataclasses.field(default_factory=dict)
+    final_replicas: dict = dataclasses.field(default_factory=dict)
+    events: list = dataclasses.field(default_factory=list)
+
+    def to_dict(self) -> dict:
+        return {"scale_ups": self.scale_ups,
+                "scale_downs": self.scale_downs,
+                "peak_replicas": dict(self.peak_replicas),
+                "final_replicas": dict(self.final_replicas),
+                "events": [e.to_dict() if isinstance(e, ScaleEvent) else e
+                           for e in self.events]}
+
+
+@dataclasses.dataclass
+class RunReport:
+    """One drained ``run()``: requests plus aggregate statistics.
+
+    ``requests``          — the completed Request records, uid order.
+    ``ticks``             — simulated tick span (idle gaps included).
+    ``steps``             — scheduler iterations actually executed.
+    ``wall_s``            — wall-clock seconds for the drain.
+    ``useful_tokens``     — tokens delivered to callers (no padding, no
+                            warmup).
+    ``early_stops``       — requests that ended on a stop token.
+    ``n_unadmitted``      — live requests that never reached a lane
+                            (kept out of queue-wait aggregates).
+    ``missing_replicas``  — labels of slots whose StatsMsg never arrived
+                            (worker died); their counters are absent
+                            from every aggregate below.
+    ``prefix_sharing``    — :class:`PrefixSharingStats`.
+    ``tokens_per_s``      — useful_tokens / wall_s.
+    ``mean_ttft_s``       — mean wall seconds from submit to first token.
+    ``occupancy``         — occupied lane-steps / (decode calls * lanes).
+    ``prefill_calls``     — batched prefill invocations, all servers.
+    ``kv_bytes_per_lane`` — device KV bytes one decode lane holds.
+    ``decode_impl``       — resolved decode attention path (jnp/pallas).
+    ``transport``         — loopback / process / tcp.
+    ``decode_read_bytes`` — paged vs gathered decode-read accounting.
+    ``per_expert``        — expert -> counters summed over its replicas
+                            (retired replicas' counters fold in; the
+                            ``per_replica`` breakdown lists live ones).
+    ``autoscale``         — :class:`AutoscaleStats`, or None when no
+                            ScalePolicy was installed (the legacy dict
+                            shape then carries no "autoscale" key).
+    """
+    requests: list
+    ticks: int
+    steps: int
+    wall_s: float
+    useful_tokens: int
+    early_stops: int
+    n_unadmitted: int
+    missing_replicas: list
+    prefix_sharing: PrefixSharingStats
+    tokens_per_s: float
+    mean_ttft_s: float
+    occupancy: float
+    prefill_calls: int
+    kv_bytes_per_lane: int
+    decode_impl: str
+    transport: str
+    decode_read_bytes: dict
+    per_expert: dict
+    autoscale: AutoscaleStats | None = None
+
+    def to_dict(self) -> dict:
+        """The exact historical ``run()`` dict (compare_bench's wire
+        shape); ``autoscale`` appears only when the policy was on."""
+        out = {
+            "requests": self.requests,
+            "ticks": self.ticks,
+            "steps": self.steps,
+            "wall_s": self.wall_s,
+            "useful_tokens": self.useful_tokens,
+            "early_stops": self.early_stops,
+            "n_unadmitted": self.n_unadmitted,
+            "missing_replicas": self.missing_replicas,
+            "prefix_sharing": self.prefix_sharing.to_dict(),
+            "tokens_per_s": self.tokens_per_s,
+            "mean_ttft_s": self.mean_ttft_s,
+            "occupancy": self.occupancy,
+            "prefill_calls": self.prefill_calls,
+            "kv_bytes_per_lane": self.kv_bytes_per_lane,
+            "decode_impl": self.decode_impl,
+            "transport": self.transport,
+            "decode_read_bytes": self.decode_read_bytes,
+            "per_expert": self.per_expert,
+        }
+        if self.autoscale is not None:
+            out["autoscale"] = self.autoscale.to_dict()
+        return out
+
+    # dict-compat shims: the report was a plain dict for eight PRs and
+    # the bench/tests index it — keep ``res["tokens_per_s"]`` working
+    def __getitem__(self, key):
+        return self.to_dict()[key]
+
+    def get(self, key, default=None):
+        return self.to_dict().get(key, default)
+
+    def __contains__(self, key) -> bool:
+        return key in self.to_dict()
+
+    def keys(self):
+        return self.to_dict().keys()

@@ -25,30 +25,48 @@ A :class:`Transport` carries them to N expert *servers* and knows
 nothing about models, caches, or routing.  A server slot is just an
 index — the frontend may map several slots to replicas of one hot
 expert (the paper's no-talk premise makes replication free: replicas
-share nothing and never know about each other), so transports count
-``n_servers``, not experts:
+share nothing and never know about each other), so transports speak
+slots, not experts.  **Slot membership is dynamic**: the autoscaler
+(:mod:`repro.serving.autoscale`) grows the table with ``add_slot`` and
+retires members with ``remove_slot`` mid-serve.  Slot indices grow
+monotonically and are never reused — a removed slot leaves a permanent
+hole, so a stale index can never silently address a new replica;
+``slots()`` enumerates the live members.
 
   * :class:`LoopbackTransport` (default) holds the
     :class:`repro.serving.expert_server.ExpertServer` objects in
     process — messages pass by reference, zero copies, and the jitted
     programs are shared across servers through the config-keyed compile
-    cache;
-  * :class:`ProcessTransport` spawns ONE OS process per expert, each
+    cache (which is also why ``add_slot`` is instant here: a new
+    replica reuses the compiled programs);
+  * :class:`ProcessTransport` spawns ONE OS process per slot, each
     holding its own params and KV pool; pickled messages over pipes are
-    the only cross-process traffic.  This is the local-machine proof of
-    the multi-host deployment: replace the pipes with RPC and each
-    expert's lanes can live on its own pod, the router score matrix
-    being the only thing on the wire.
+    the only cross-process traffic.  ``add_slot`` spawns cold — the new
+    worker imports jax and compiles off-path while serving continues;
+    ``warmup_slot``/``slot_ready`` let the frontend admit it only once
+    its programs are warm.  This is the local-machine proof of the
+    multi-host deployment: replace the pipes with RPC and each expert's
+    lanes can live on its own pod, the router score matrix being the
+    only thing on the wire.
 
-Both transports tick experts independently — ``tick(e)`` steps exactly
+Both transports tick experts independently — ``tick(s)`` steps exactly
 one server on its own clock, and ``tick_many`` lets the process backend
 overlap expert compute across processes (send every tick, then collect),
 so a hot expert never waits on an idle one.
+
+Scale-down quiesce rides on one extra op: ``recall(s)`` drains server
+``s``'s queued-but-unadmitted requests and hands their uids back, so
+the frontend can re-route them to surviving replicas.  The sender-side
+``load`` tracker decrements by the recalled count — without that, a
+retired replica's queued requests would leak load forever and skew
+least-loaded admission (regression-tested in
+``tests/test_serving_autoscale.py``).
 """
 from __future__ import annotations
 
 import dataclasses
 import multiprocessing as mp
+import threading
 import traceback
 
 import numpy as np
@@ -61,6 +79,8 @@ from repro.serving.sampling import SamplingParams
 # must be upgraded together, never mixed silently.
 # v2: StatsMsg grew prefix_hit_blocks / prefill_tokens_saved /
 # cached_blocks (prefix-sharing KV cache).
+# (Autoscaling added the `recall` op but no dataclass change — ops are
+# covered by the handshake's build pairing, so v2 stands.)
 WIRE_VERSION = 2
 
 
@@ -145,21 +165,71 @@ class _RemoteError:
 
 
 class Transport:
-    """Carries messages between the frontend and ``n_servers`` servers.
+    """Carries messages between the frontend and its server slots.
 
     Servers are addressed by a flat slot index; the frontend owns the
-    (expert, replica) -> slot mapping.  ``labels`` name each slot for
-    error reports (e.g. ``"expert 1 replica 0"``) so a dead worker is
-    surfaced with its identity, not a bare index.
+    (expert, replica) -> slot mapping (a
+    :class:`repro.serving.placement.PlacementMap`).  ``labels`` name
+    each slot for error reports (e.g. ``"expert 1 replica 0"``) so a
+    dead worker is surfaced with its identity, not a bare index.
+
+    ``slots()`` is the live membership; ``add_slot``/``remove_slot``
+    change it mid-serve (indices are never reused).  ``n_servers``
+    counts the live members.
     """
 
-    n_servers: int
     labels: list
+
+    def slots(self) -> list[int]:
+        """Live slot indices, ascending (holes from removals excluded)."""
+        raise NotImplementedError
+
+    @property
+    def n_servers(self) -> int:
+        return len(self.slots())
 
     @property
     def n_experts(self) -> int:
         """Historical alias from before replication: slots, not experts."""
         return self.n_servers
+
+    def add_slot(self, target, label: str) -> int:
+        """Grow the table with one server; returns its (new) slot index.
+
+        ``target`` is backend-specific: an ``ExpertServer`` (loopback),
+        a param tree to spawn with (process), or a ``(host, port)``
+        address (tcp).  The slot is live immediately for wire purposes;
+        use ``warmup_slot``/``slot_ready`` before routing latency-
+        sensitive traffic at a cold backend.
+        """
+        raise NotImplementedError
+
+    def remove_slot(self, s: int) -> None:
+        """Retire slot ``s`` for good: release its backend resources and
+        leave a permanent hole at the index.  The caller must have
+        drained it first (``recall`` + let its lanes finish); idempotent.
+        """
+        raise NotImplementedError
+
+    def recall(self, s: int) -> list[int]:
+        """Drain slot ``s``'s queued-but-unadmitted requests; returns
+        their uids for the frontend to re-route.  Requests already in a
+        decode lane are NOT recalled — they finish where they are (their
+        token streams are position-independent anyway).  Sender-side
+        ``load`` tracking decrements by the recalled count."""
+        raise NotImplementedError
+
+    def warmup_slot(self, s: int, prompt_len, sampled: bool) -> None:
+        """Start warming one slot without blocking on the compile; poll
+        ``slot_ready`` for completion.  In-process backends are warm by
+        construction (shared jit cache) — only the process backend has
+        a real async window."""
+        self.slot_ready(s)
+
+    def slot_ready(self, s: int) -> bool:
+        """True once slot ``s`` has finished any ``warmup_slot`` work
+        (always True on backends with nothing to warm)."""
+        return True
 
     def enqueue(self, s: int, msg: RequestMsg) -> None:
         raise NotImplementedError
@@ -181,7 +251,7 @@ class Transport:
 
     @property
     def any_busy(self) -> bool:
-        return any(self.busy(s) for s in range(self.n_servers))
+        return any(self.busy(s) for s in self.slots())
 
     def load(self, s: int) -> int:
         """Server ``s``'s instantaneous load: queued requests + occupied
@@ -213,47 +283,69 @@ class LoopbackTransport(Transport):
 
     Holds the ``ExpertServer`` objects directly; messages pass by
     reference (nothing is pickled) and ``busy`` reuses the server's own
-    idle predicate.
+    idle predicate.  A removed slot leaves ``None`` in the table.
     """
 
     def __init__(self, servers, labels=None):
         self.servers = list(servers)
-        self.n_servers = len(self.servers)
         self.labels = list(labels) if labels is not None else \
-            [f"expert {s}" for s in range(self.n_servers)]
+            [f"expert {s}" for s in range(len(self.servers))]
+
+    def slots(self):
+        return [s for s, srv in enumerate(self.servers) if srv is not None]
+
+    def _srv(self, s):
+        srv = self.servers[s]
+        if srv is None:
+            raise RuntimeError(f"{self.labels[s]} slot was retired")
+        return srv
+
+    def add_slot(self, target, label):
+        # instant: the new server's jitted programs come from the shared
+        # config-keyed compile cache — no cold-compile window in process
+        self.servers.append(target)
+        self.labels.append(label)
+        return len(self.servers) - 1
+
+    def remove_slot(self, s):
+        if self.servers[s] is not None:
+            self.servers[s] = None
+
+    def recall(self, s):
+        return self._srv(s).recall_pending()
 
     def enqueue(self, s, msg):
-        self.servers[s].enqueue(check_version(msg))
+        self._srv(s).enqueue(check_version(msg))
 
     def tick(self, s):
         # no per-delta check_version: the server is this build's own
         # object, and the handshake rule (see module docstring) keeps
         # the emit path check-free on every transport
-        return self.servers[s].tick()
+        return self._srv(s).tick()
 
     def busy(self, s):
-        return self.servers[s].busy
+        return self._srv(s).busy
 
     def load(self, s):
-        srv = self.servers[s]
+        srv = self._srv(s)
         return (len(srv.pending) + int(srv.active.sum())
                 + int(srv.filling.sum()))
 
     def stats(self, s):
-        return self.servers[s].stats()
+        return self._srv(s).stats()
 
     def reset_stats(self):
-        for s in self.servers:
-            s.reset_stats()
+        for s in self.slots():
+            self.servers[s].reset_stats()
 
     def warmup(self, prompt_len, sampled):
         # the jitted programs are shared across in-process servers via the
         # config-keyed compile cache: one server's shapes warm them all
-        self.servers[0].warmup(prompt_len, sampled=sampled)
+        self.servers[self.slots()[0]].warmup(prompt_len, sampled=sampled)
 
     def sync(self):
-        for s in self.servers:
-            s.sync()
+        for s in self.slots():
+            self.servers[s].sync()
 
 
 def _serve_expert(conn, ecfg, eng, host_params) -> None:
@@ -272,7 +364,10 @@ def _serve_expert(conn, ecfg, eng, host_params) -> None:
         server = ExpertServer(ecfg, params, eng)
         # one-time build proof: the parent validates this hello on its
         # first reply read instead of re-checking every delta's version
-        conn.send(("hello", WIRE_VERSION))
+        try:
+            conn.send(("hello", WIRE_VERSION))
+        except (BrokenPipeError, OSError):
+            return   # parent closed before ever adopting this worker
         while True:
             try:
                 op, args = conn.recv()
@@ -285,6 +380,8 @@ def _serve_expert(conn, ecfg, eng, host_params) -> None:
             elif op == "warmup":
                 server.warmup(args[0], sampled=args[1])
                 conn.send(None)
+            elif op == "recall":
+                conn.send(server.recall_pending())
             elif op == "stats":
                 conn.send(server.stats())
             elif op == "reset_stats":
@@ -321,6 +418,14 @@ class ProcessTransport(Transport):
     really do compute concurrently (this is what makes replication a
     wall-clock win: a hot expert's replicas decode in parallel).
 
+    ``add_slot`` spawns a fresh worker process mid-serve without
+    stalling serving: ``Process.start()`` blocks until the booting
+    child drains the (bigger-than-pipe-buffer) param pickle, so it runs
+    on a background thread while ops queue in the already-open pipe —
+    ``warmup_slot`` queues the compile and ``slot_ready`` polls for its
+    completion without ever blocking the parent, which is how the
+    autoscaler warms a new replica off-path before admitting it.
+
     The usual ``multiprocessing`` spawn rule applies: the parent's main
     module must be importable by path (a script piped via stdin cannot
     spawn workers — they die at startup, surfaced here with the slot's
@@ -331,31 +436,132 @@ class ProcessTransport(Transport):
     """
 
     def __init__(self, ecfg, eng, server_params, labels=None):
-        import jax                               # parent-side host transfer
-
-        self.n_servers = len(server_params)
-        self.labels = list(labels) if labels is not None else \
-            [f"expert {s}" for s in range(self.n_servers)]
-        self._outstanding = [0] * self.n_servers
-        self._hello = [False] * self.n_servers
+        self._ecfg, self._eng = ecfg, eng        # add_slot re-spawn recipe
+        self.labels = []
+        self._outstanding = []
+        self._hello = []
+        self._warming = []
+        self._starting: dict[int, threading.Thread] = {}
         self._broken = False
         self._closed = False
-        ctx = mp.get_context("spawn")            # never fork a live jax
+        self._ctx = mp.get_context("spawn")      # never fork a live jax
         self._procs, self._conns = [], []
-        for p in server_params:
-            host = jax.tree_util.tree_map(np.asarray, p)
-            parent, child = ctx.Pipe()
-            proc = ctx.Process(target=_serve_expert,
-                               args=(child, ecfg, eng, host), daemon=True)
-            proc.start()
-            child.close()
-            self._procs.append(proc)
-            self._conns.append(parent)
+        given = list(labels) if labels is not None else \
+            [f"expert {s}" for s in range(len(server_params))]
+        for p, lab in zip(server_params, given):
+            self._spawn(p, lab)
+
+    def _spawn(self, params, label, *, background=False) -> int:
+        import jax                               # parent-side host transfer
+
+        host = jax.tree_util.tree_map(np.asarray, params)
+        parent, child = self._ctx.Pipe()
+        proc = self._ctx.Process(target=_serve_expert,
+                                 args=(child, self._ecfg, self._eng, host),
+                                 daemon=True)
+        self._procs.append(proc)
+        self._conns.append(parent)
+        self.labels.append(label)
+        self._outstanding.append(0)
+        self._hello.append(False)
+        self._warming.append(False)
+        s = len(self._procs) - 1
+        if background:
+            # Process.start() under spawn blocks until the child has
+            # booted far enough to drain the >pipe-buffer param pickle —
+            # hundreds of ms the serve path must not pay mid-tick.  The
+            # pipe already exists, so ops sent meanwhile just queue;
+            # slot_ready() stays False until the worker's warmup reply.
+            t = threading.Thread(target=self._start_child,
+                                 args=(proc, child), daemon=True)
+            t.start()
+            self._starting[s] = t
+        else:
+            self._start_child(proc, child)
+        return s
+
+    @staticmethod
+    def _start_child(proc, child) -> None:
+        proc.start()
+        child.close()
+
+    def _started(self, s) -> None:
+        """Join slot ``s``'s background starter (no-op once it has run):
+        join/exitcode on a not-yet-started Process would raise."""
+        t = self._starting.pop(s, None)
+        if t is not None:
+            t.join()
+
+    def slots(self):
+        return [s for s, c in enumerate(self._conns) if c is not None]
+
+    def add_slot(self, target, label):
+        self._check()
+        return self._spawn(target, label, background=True)
+
+    def remove_slot(self, s):
+        conn = self._conns[s]
+        if conn is None:
+            return
+        self._started(s)
+        self._conns[s] = None
+        try:
+            conn.send(("close", None))
+        except (BrokenPipeError, OSError):
+            pass
+        try:
+            conn.close()
+        except OSError:
+            pass
+        p = self._procs[s]
+        p.join(timeout=30)
+        if p.is_alive():
+            p.terminate()
+            p.join(timeout=5)
+
+    def recall(self, s):
+        self._send(s, "recall", None)
+        uids = self._recv(s)
+        # the recalled requests leave this slot's queue for good — drop
+        # them from the sender-side load or the slot leaks load forever
+        self._outstanding[s] -= len(uids)
+        return list(uids)
+
+    def warmup_slot(self, s, prompt_len, sampled):
+        # fire-and-forget: the compile happens in the worker while the
+        # parent keeps serving; slot_ready() consumes the reply later
+        self._send(s, "warmup", (prompt_len, sampled))
+        self._warming[s] = True
+
+    def slot_ready(self, s):
+        if not self._warming[s]:
+            return True
+        self._check()
+        conn = self._conn(s)
+        while conn.poll(0):                     # never block the parent
+            if not self._hello[s]:
+                self._consume_hello(s)
+                continue
+            out = self._pipe_recv(s)
+            if isinstance(out, _RemoteError):
+                self._broken = True
+                raise RuntimeError(f"{self.labels[s]} worker failed:\n"
+                                   f"{out.trace}")
+            self._warming[s] = False            # the warmup's None reply
+            return True
+        return False
+
+    def _conn(self, s):
+        c = self._conns[s]
+        if c is None:
+            raise RuntimeError(f"{self.labels[s]} slot was retired")
+        return c
 
     def _dead(self, s) -> RuntimeError:
         """A worker vanished without a Python traceback (OOM kill,
         segfault): name the expert+replica and its exit code, not just
         a bare EOF."""
+        self._started(s)
         self._procs[s].join(timeout=1)
         return RuntimeError(
             f"{self.labels[s]} worker exited "
@@ -375,38 +581,44 @@ class ProcessTransport(Transport):
     def _send(self, s, op, args):
         self._check()
         try:
-            self._conns[s].send((op, args))
+            self._conn(s).send((op, args))
         except (BrokenPipeError, OSError):
             self._broken = True
             raise self._dead(s) from None
 
-    def _recv(self, s):
-        self._check()
+    def _pipe_recv(self, s):
         try:
-            if not self._hello[s]:
-                # the worker's first message is its boot hello: validate
-                # the build pairing once per process, so deltas need no
-                # per-message version checks afterwards
-                first = self._conns[s].recv()
-                if isinstance(first, _RemoteError):
-                    self._broken = True
-                    raise RuntimeError(f"{self.labels[s]} worker failed:\n"
-                                       f"{first.trace}")
-                if first != ("hello", WIRE_VERSION):
-                    self._broken = True
-                    got = first[1] if (isinstance(first, tuple)
-                                       and len(first) == 2
-                                       and first[0] == "hello") else first
-                    raise RuntimeError(
-                        f"wire protocol mismatch: {self.labels[s]} worker "
-                        f"speaks {got!r} but this build speaks "
-                        f"v{WIRE_VERSION} — frontend and expert servers "
-                        f"must run the same serving build")
-                self._hello[s] = True
-            out = self._conns[s].recv()
+            return self._conn(s).recv()
         except EOFError:
             self._broken = True
             raise self._dead(s) from None
+
+    def _consume_hello(self, s):
+        """The worker's first message is its boot hello: validate the
+        build pairing once per process, so deltas need no per-message
+        version checks afterwards."""
+        first = self._pipe_recv(s)
+        if isinstance(first, _RemoteError):
+            self._broken = True
+            raise RuntimeError(f"{self.labels[s]} worker failed:\n"
+                               f"{first.trace}")
+        if first != ("hello", WIRE_VERSION):
+            self._broken = True
+            got = first[1] if (isinstance(first, tuple)
+                               and len(first) == 2
+                               and first[0] == "hello") else first
+            raise RuntimeError(
+                f"wire protocol mismatch: {self.labels[s]} worker "
+                f"speaks {got!r} but this build speaks "
+                f"v{WIRE_VERSION} — frontend and expert servers "
+                f"must run the same serving build")
+        self._hello[s] = True
+
+    def _recv(self, s):
+        self._check()
+        if not self._hello[s]:
+            self._consume_hello(s)
+        out = self._pipe_recv(s)
         if isinstance(out, _RemoteError):
             self._broken = True
             raise RuntimeError(f"{self.labels[s]} worker failed:\n"
@@ -450,25 +662,31 @@ class ProcessTransport(Transport):
         return self._recv(s)
 
     def reset_stats(self):
-        for s in range(self.n_servers):
+        for s in self.slots():
             self._send(s, "reset_stats", None)
 
     def warmup(self, prompt_len, sampled):
         # per-process jit caches: every server warms itself, concurrently
-        for s in range(self.n_servers):
+        live = self.slots()
+        for s in live:
             self._send(s, "warmup", (prompt_len, sampled))
-        for s in range(self.n_servers):
+        for s in live:
             self._recv(s)
 
     def sync(self):
-        for s in range(self.n_servers):
+        live = self.slots()
+        for s in live:
             self._send(s, "sync", None)
-        for s in range(self.n_servers):
+        for s in live:
             self._recv(s)
 
     def close(self):
         self._closed = True
+        for s in list(self._starting):
+            self._started(s)
         for c in self._conns:
+            if c is None:
+                continue
             try:
                 c.send(("close", None))
                 c.close()

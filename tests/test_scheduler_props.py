@@ -15,7 +15,7 @@ import numpy as np
 import pytest
 
 from _hypothesis_compat import given, settings, st
-from repro.serving.engine import bucket_len
+from repro.serving import bucket_len
 from repro.serving.scheduler import (BlockAllocator, PrefixCache, Request,
                                      RequestQueue, SlotAllocator)
 

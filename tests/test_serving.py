@@ -22,7 +22,7 @@ import pytest
 from repro.configs.base import ModelConfig
 from repro.core import router as routerlib
 from repro.models import model as modellib
-from repro.serving import (EngineConfig, MixtureServeEngine, SamplingParams,
+from repro.serving import (EngineConfig, ServeFrontend, SamplingParams,
                            SlotAllocator)
 from repro.serving import baseline
 from repro.serving import cache as cachelib
@@ -51,7 +51,7 @@ def mixture():
 def _engine(mixture, lanes=3, ecfg=ECFG, **kw):
     expert_params, router_params = mixture
     kw.setdefault("route_batch", 4)
-    return MixtureServeEngine(
+    return ServeFrontend(
         ecfg, RCFG, expert_params, router_params,
         EngineConfig(lanes_per_expert=lanes, max_len=MAXLEN,
                      prefix_len=PREFIX, block_size=BS, **kw))
@@ -267,23 +267,23 @@ def test_submit_validation(mixture):
 def test_engine_config_validation(mixture):
     expert_params, router_params = mixture
     with pytest.raises(ValueError, match="multiple"):
-        MixtureServeEngine(ECFG, RCFG, expert_params, router_params,
+        ServeFrontend(ECFG, RCFG, expert_params, router_params,
                            EngineConfig(max_len=MAXLEN + 1, block_size=BS,
                                         prefix_len=PREFIX))
     with pytest.raises(ValueError, match="deadlock"):
         # pool cannot hold even one max-size request
-        MixtureServeEngine(ECFG, RCFG, expert_params, router_params,
+        ServeFrontend(ECFG, RCFG, expert_params, router_params,
                            EngineConfig(max_len=MAXLEN, block_size=BS,
                                         prefix_len=PREFIX,
                                         pool_blocks=MAXLEN // BS - 1))
     with pytest.raises(ValueError, match="min_prefill_bucket"):
         # a 0 bucket would loop forever in bucket_len at admission time
-        MixtureServeEngine(ECFG, RCFG, expert_params, router_params,
+        ServeFrontend(ECFG, RCFG, expert_params, router_params,
                            EngineConfig(max_len=MAXLEN, block_size=BS,
                                         prefix_len=PREFIX,
                                         min_prefill_bucket=0))
     with pytest.raises(ValueError, match="decode_impl"):
-        MixtureServeEngine(ECFG, RCFG, expert_params, router_params,
+        ServeFrontend(ECFG, RCFG, expert_params, router_params,
                            EngineConfig(max_len=MAXLEN, block_size=BS,
                                         prefix_len=PREFIX,
                                         decode_impl="triton"))
@@ -292,7 +292,7 @@ def test_engine_config_validation(mixture):
     key = jax.random.PRNGKey(13)
     ssm_params = [modellib.init_params(jax.random.fold_in(key, e), SSM_CFG)
                   for e in range(E)]
-    eng = MixtureServeEngine(SSM_CFG, RCFG, ssm_params, router_params,
+    eng = ServeFrontend(SSM_CFG, RCFG, ssm_params, router_params,
                              EngineConfig(max_len=MAXLEN + 1, block_size=BS,
                                           prefix_len=PREFIX))
     assert not eng.has_pool

@@ -1,0 +1,300 @@
+"""Live replica autoscaling: policy units, quiesce safety, token identity.
+
+The autoscaler (``repro.serving.autoscale``) grows and shrinks the
+frontend's replica map mid-serve.  The invariants pinned here:
+
+* :class:`ScalePolicy` validation and the deterministic
+  :class:`Autoscaler` decision logic — pressure hysteresis, idle
+  streaks, per-expert cooldown, min/max clamps, warming accounting,
+  and the cooldown re-stamp at adoption (a slot that spent its own
+  cooldown warming must not be idle-retired on arrival);
+* the ``recall`` load-leak regression — a retired replica's queued
+  requests leave the sender-side ``Transport.load`` tracker, or
+  least-loaded admission would be skewed forever;
+* quiesce safety under fire — a seeded fuzz retires a *busy* replica
+  mid-stream (queued requests recalled and re-routed, active lanes
+  draining in place) on the loopback and process transports, and every
+  token stays bitwise identical to the one-shot oracle: tokens are a
+  pure function of ``(seed, uid, step)``, so time-varying placement
+  cannot touch them;
+* an end-to-end loopback run with a :class:`ScalePolicy` installed —
+  the hot expert gains a replica under pressure, the idle one retires,
+  ``run()`` reports a typed ``autoscale`` section, and the stream
+  equals the serial oracle.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import router as routerlib
+from repro.models import model as modellib
+from repro.serving import (Autoscaler, AutoscaleStats, EngineConfig,
+                           ExpertServer, LoopbackTransport, RequestMsg,
+                           SamplingParams, ScaleEvent, ScalePolicy,
+                           ServeFrontend, baseline)
+from repro.serving.autoscale import SlotLoad
+
+ECFG = ModelConfig(name="as-expert", n_layers=2, d_model=64, n_heads=4,
+                   n_kv_heads=4, d_ff=128, vocab_size=128, ffn_type="gelu",
+                   loss_chunk=32, compute_dtype="float32",
+                   param_dtype="float32")
+RCFG = ModelConfig(name="as-router", n_layers=1, d_model=32, n_heads=2,
+                   n_kv_heads=2, d_ff=64, vocab_size=128, ffn_type="gelu",
+                   loss_chunk=32, compute_dtype="float32",
+                   param_dtype="float32")
+E, PREFIX, MAXLEN, BS = 2, 16, 48, 16
+ENG = EngineConfig(lanes_per_expert=2, max_len=MAXLEN, prefix_len=PREFIX,
+                   block_size=BS, route_batch=4)
+
+
+@pytest.fixture(scope="module")
+def mixture():
+    key = jax.random.PRNGKey(0)
+    router_params = routerlib.init_ensemble(key, RCFG, E)
+    expert_params = [modellib.init_params(jax.random.fold_in(key, e), ECFG)
+                     for e in range(E)]
+    return expert_params, router_params
+
+
+def _oracle(params, prompt, n_new, sampling=None, uid=0, stops=()):
+    return baseline.generate_request(ECFG, params, prompt, n_new,
+                                     sampling=sampling, uid=uid,
+                                     stop_tokens=stops, cache_len=MAXLEN)
+
+
+# ---------------------------------------------------------------------------
+# policy validation
+# ---------------------------------------------------------------------------
+def test_scale_policy_validation():
+    ScalePolicy().validate()                        # defaults are legal
+    with pytest.raises(ValueError, match="up_pressure"):
+        ScalePolicy(up_pressure=0).validate()
+    with pytest.raises(ValueError, match="up_ticks"):
+        ScalePolicy(up_ticks=0).validate()
+    with pytest.raises(ValueError, match="cooldown"):
+        ScalePolicy(cooldown_ticks=-1).validate()
+    with pytest.raises(ValueError, match="min_replicas"):
+        ScalePolicy(min_replicas=0).validate()
+    with pytest.raises(ValueError, match="max_replicas"):
+        ScalePolicy(max_replicas=1, min_replicas=2).validate()
+    with pytest.raises(ValueError, match="every"):
+        ScalePolicy(every=0).validate()
+
+
+# ---------------------------------------------------------------------------
+# decision logic (no jax, no transport)
+# ---------------------------------------------------------------------------
+def _policy(**kw):
+    base = dict(up_pressure=1, up_ticks=2, down_idle_ticks=3,
+                cooldown_ticks=4, min_replicas=1, max_replicas=3)
+    base.update(kw)
+    return ScalePolicy(**base)
+
+
+def test_autoscaler_pressure_hysteresis_and_max():
+    a = Autoscaler(_policy(), n_experts=1, lanes_per_replica=2)
+    hot = {0: [SlotLoad(0, 5)]}              # pressure 3 over one replica
+    assert a.observe(0, hot, {}) == []       # 1 pressured eval < up_ticks
+    assert a.observe(1, hot, {}) == [("up", 0)]
+    # the spawn is warming: capacity doubles, pressure gone, and the
+    # in-flight spawn counts toward max_replicas
+    calm = {0: [SlotLoad(0, 3)]}
+    assert a.observe(2, calm, {0: 1}) == []
+    # a single calm eval resets the streak — no flapping on bursts
+    a2 = Autoscaler(_policy(), 1, 2)
+    a2.observe(0, hot, {})
+    a2.observe(1, calm, {})
+    assert a2.observe(2, hot, {}) == []
+    # max_replicas clamps even under sustained pressure
+    a3 = Autoscaler(_policy(max_replicas=1), 1, 2)
+    a3.observe(0, hot, {})
+    assert a3.observe(1, hot, {}) == []
+
+
+def test_autoscaler_idle_retire_min_and_victim():
+    a = Autoscaler(_policy(), n_experts=1, lanes_per_replica=2)
+    loads = {0: [SlotLoad(0, 1), SlotLoad(1, 0), SlotLoad(2, 0)]}
+    assert a.observe(0, loads, {}) == []
+    assert a.observe(1, loads, {}) == []
+    # third consecutive idle eval: exactly one action, highest slot first
+    assert a.observe(2, loads, {}) == [("down", 0, 2)]
+    # cooldown blocks the next retire until tick 2 + cooldown_ticks
+    two = {0: [SlotLoad(0, 1), SlotLoad(1, 0)]}
+    for t in (3, 4, 5):
+        assert a.observe(t, two, {}) == []
+    assert a.observe(6, two, {}) == [("down", 0, 1)]
+    # min_replicas: the last replica never retires, however idle
+    one = {0: [SlotLoad(0, 0)]}
+    for t in range(10, 30):
+        assert a.observe(t, one, {}) == []
+
+
+def test_autoscaler_adoption_restamps_cooldown():
+    """A replica that warmed for longer than the cooldown must not be
+    ripe for retirement the moment it is adopted."""
+    a = Autoscaler(_policy(), n_experts=1, lanes_per_replica=2)
+    a.observe(0, {0: [SlotLoad(0, 5)]}, {})
+    assert a.observe(1, {0: [SlotLoad(0, 5)]}, {}) == [("up", 0)]
+    # ...slot 1 spawns and warms for 10 ticks (cooldown long expired)...
+    for t in range(2, 12):
+        a.observe(t, {0: [SlotLoad(0, 2)]}, {0: 1})
+    a.note_adopted(0, slot=1, tick=12)
+    both = {0: [SlotLoad(0, 2), SlotLoad(1, 0)]}
+    # idle streak (3) ripens before cooldown (12+4) clears; nothing may
+    # fire until tick 16
+    for t in range(12, 16):
+        assert a.observe(t, both, {}) == []
+    assert a.observe(16, both, {}) == [("down", 0, 1)]
+
+
+# ---------------------------------------------------------------------------
+# recall: the sender-side load tracker must shed recalled requests
+# ---------------------------------------------------------------------------
+def _req(uid, prompt, n_new=3, tick=0):
+    return RequestMsg(uid=uid, prompt=prompt, max_new_tokens=n_new,
+                      sampling=SamplingParams(), stop_tokens=frozenset(),
+                      enqueue_tick=tick)
+
+
+def test_recall_decrements_sender_side_load(mixture):
+    """Regression: retiring a replica with queued requests used to leak
+    their load in ``Transport.load`` forever, skewing least-loaded
+    admission toward the survivors."""
+    expert_params, _ = mixture
+    rng = np.random.default_rng(7)
+    lt = LoopbackTransport([ExpertServer(ECFG, expert_params[0], ENG)])
+    prompts = [rng.integers(0, ECFG.vocab_size, size=PREFIX).astype(np.int32)
+               for _ in range(5)]
+    for u, p in enumerate(prompts):
+        lt.enqueue(0, _req(u, p))
+    assert lt.load(0) == 5
+    lt.tick(0)                       # admit up to lanes=2, rest queued
+    uids = lt.recall(0)
+    assert sorted(uids) == [2, 3, 4]           # the queued, unadmitted tail
+    assert lt.load(0) == 2                     # active lanes only: no leak
+    while lt.busy(0):
+        lt.tick(0)
+    assert lt.load(0) == 0
+
+
+# ---------------------------------------------------------------------------
+# quiesce safety: retire a BUSY replica mid-stream, tokens identical
+# ---------------------------------------------------------------------------
+def _fuzz_retire_mid_stream(mixture, seed, transport):
+    expert_params, router_params = mixture
+    rng = np.random.default_rng(seed)
+    n = 10
+    prompts = [rng.integers(0, ECFG.vocab_size,
+                            size=int(rng.integers(PREFIX, 30))
+                            ).astype(np.int32) for _ in range(n)]
+    n_new = [int(rng.integers(3, 8)) for _ in range(n)]
+    sps = [None if rng.random() < 0.5 else
+           SamplingParams(temperature=float(rng.uniform(0.3, 1.2)),
+                          top_k=int(rng.choice([0, 4])),
+                          seed=int(rng.integers(0, 1 << 16)))
+           for _ in range(n)]
+    eng_cfg = dataclasses.replace(ENG, transport=transport)
+    with ServeFrontend(ECFG, RCFG, expert_params, router_params, eng_cfg,
+                       replicas={e: 2 for e in range(E)}) as eng:
+        reqs = [eng.submit(prompts[i], n_new[i], sampling=sps[i],
+                           arrival_tick=0) for i in range(n)]
+        # let lanes fill and some tokens stream, then yank one replica
+        # of the busiest expert out from under the engine (stats reset at
+        # run(), so completions during these warm steps won't be counted)
+        done0 = 0
+        for _ in range(int(rng.integers(1, 4))):
+            done0 += len(eng.step())
+        victim = max(range(E),
+                     key=lambda e: sum(r.expert == e for r in reqs))
+        assert any(eng._transport.busy(s)
+                   for s in eng.placements.slots_of(victim)), \
+            "fuzz setup: the victim expert must be mid-stream"
+        eng.retire_replica(victim, 1)
+        res = eng.run()
+    # the retire completed: replica 1 released, its counters folded in
+    assert [(ev.action, ev.expert, ev.replica)
+            for ev in eng.scale_events] == [("down", victim, 1)]
+    assert eng.placements.n_replicas(victim) == 1
+    assert res["per_expert"][victim]["replicas"] == 1
+    served = sum(st["served"] for st in res["per_expert"].values())
+    assert served == n - done0         # retired counters are not dropped
+    for r in sorted(reqs, key=lambda r: r.uid):
+        want = _oracle(expert_params[r.expert], prompts[r.uid],
+                       n_new[r.uid], sampling=sps[r.uid], uid=r.uid)
+        np.testing.assert_array_equal(np.asarray(r.tokens), want,
+                                      err_msg=f"uid {r.uid} (seed {seed})")
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_retire_busy_replica_mid_stream_loopback(mixture, seed):
+    _fuzz_retire_mid_stream(mixture, 8800 + seed, "loopback")
+
+
+@pytest.mark.slow
+def test_retire_busy_replica_mid_stream_process(mixture):
+    _fuzz_retire_mid_stream(mixture, 8810, "process")
+
+
+def test_retire_guards(mixture):
+    expert_params, router_params = mixture
+    with ServeFrontend(ECFG, RCFG, expert_params, router_params, ENG,
+                       replicas={0: 2}) as eng:
+        with pytest.raises(ValueError, match="not a live replica"):
+            eng.retire_replica(0, 5)
+        with pytest.raises(ValueError, match="last live replica"):
+            eng.retire_replica(1, 0)
+        eng.retire_replica(0, 1)           # idle: finalized next step
+        eng.step()
+        assert eng.placements.n_replicas(0) == 1
+        with pytest.raises(ValueError, match="last live replica"):
+            eng.retire_replica(0, 0)
+
+
+# ---------------------------------------------------------------------------
+# end to end: the control plane scales up AND down, tokens exact
+# ---------------------------------------------------------------------------
+def test_autoscale_end_to_end_loopback(mixture):
+    """Flood the hot expert past its lane capacity with a spare replica
+    on the cold one: the policy must spawn for the hot expert and retire
+    the idle cold replica, with the whole stream oracle-identical and a
+    typed ``autoscale`` report section."""
+    expert_params, router_params = mixture
+    rng = np.random.default_rng(41)
+    n = 24
+    prompts = [rng.integers(0, ECFG.vocab_size, size=PREFIX).astype(np.int32)
+               for _ in range(n)]
+    routes = [int(baseline.route(
+        RCFG, router_params, np.asarray(p)[None, :PREFIX], PREFIX)[0])
+        for p in prompts]
+    hot = max(range(E), key=routes.count)
+    cold = 1 - hot
+    hot_prompts = [p for p, e in zip(prompts, routes) if e == hot][:12]
+    # down_idle long enough that only the cold expert's never-loaded
+    # replica ripens mid-run (the hot one would flap: idle-retire at the
+    # drain tail, pressure-respawn on the leftovers)
+    scale = ScalePolicy(up_pressure=1, up_ticks=2, down_idle_ticks=10,
+                        cooldown_ticks=4, max_replicas=2)
+    with ServeFrontend(ECFG, RCFG, expert_params, router_params, ENG,
+                       replicas={cold: 2}, scale=scale) as eng:
+        reqs = [eng.submit(p, 4, arrival_tick=0) for p in hot_prompts]
+        res = eng.run()
+    ups = [ev for ev in eng.scale_events if ev.action == "up"]
+    downs = [ev for ev in eng.scale_events if ev.action == "down"]
+    assert ups and all(ev.expert == hot for ev in ups)
+    assert ups[0].reason == "pressure"
+    assert (cold, 1) in [(ev.expert, ev.replica) for ev in downs]
+    a = res.autoscale
+    assert isinstance(a, AutoscaleStats)
+    assert a.scale_ups == len(ups) and a.scale_downs == len(downs) >= 1
+    assert a.peak_replicas[hot] == 2
+    assert all(isinstance(ev, ScaleEvent) for ev in a.events)
+    d = res.to_dict()
+    assert d["autoscale"]["scale_ups"] == a.scale_ups   # dict-compat report
+    for r, p in zip(reqs, hot_prompts):
+        assert r.expert == hot
+        want = _oracle(expert_params[hot], p, 4, uid=r.uid)
+        np.testing.assert_array_equal(np.asarray(r.tokens), want,
+                                      err_msg=f"uid {r.uid}")

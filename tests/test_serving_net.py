@@ -38,8 +38,8 @@ import pytest
 from repro.configs.base import ModelConfig
 from repro.core import router as routerlib
 from repro.models import model as modellib
-from repro.serving import (EngineConfig, SamplingParams, ServeFrontend,
-                           baseline)
+from repro.serving import (EngineConfig, Placement, SamplingParams,
+                           ServeFrontend, baseline)
 from repro.serving.frontend import MAX_UID_NAMESPACE, UID_NAMESPACE_STRIDE
 from repro.serving.net import Registry, SocketTransport, framing
 from repro.serving.net import registry as netreg
@@ -179,15 +179,19 @@ def test_registry_register_heartbeat_expiry():
         r1 = netreg.call(reg.addr, "register",
                          {"expert": 0, "host": "h", "port": 2})
         assert r1["replica"] == 1              # auto-assigned, not clobbered
-        assert netreg.call(reg.addr, "placements") == \
-            [(0, 0, "h", 1), (0, 1, "h", 2)]
+        placed = netreg.call(reg.addr, "placements")
+        # typed Placement records on the wire; iterating one still
+        # yields the legacy (expert, replica, host, port) shape
+        assert all(isinstance(p, Placement) for p in placed)
+        assert [tuple(p) for p in placed] == [(0, 0, "h", 1), (0, 1, "h", 2)]
         assert netreg.call(reg.addr, "heartbeat", (0, 0)) == "ok"
         assert netreg.call(reg.addr, "heartbeat", (0, 7)) == "unknown"
         time.sleep(0.45)                       # both workers go silent
         assert netreg.call(reg.addr, "placements") == []
         # a late heartbeat revives exactly that worker, nothing else
         assert netreg.call(reg.addr, "heartbeat", (0, 0)) == "ok"
-        assert netreg.call(reg.addr, "placements") == [(0, 0, "h", 1)]
+        assert [tuple(p) for p in netreg.call(reg.addr, "placements")] == \
+            [(0, 0, "h", 1)]
         with pytest.raises(RuntimeError, match=r"no live worker for "
                                                r"expert\(s\)"):
             netreg.wait_for_fleet(reg.addr, 2, timeout=0.4)
@@ -345,7 +349,8 @@ def test_replicated_tcp_fleet(mixture):
             with ServeFrontend(ECFG, RCFG, expert_params, router_params,
                                _tcp(reg), uid_namespace=0) as eng:
                 assert eng.replicas == [2, 1]
-                assert eng.placements == [(0, 0), (0, 1), (1, 0)]
+                assert [(p.expert, p.replica) for p in eng.placements] \
+                    == [(0, 0), (0, 1), (1, 0)]
                 prompts = [rng.integers(0, ECFG.vocab_size,
                                         size=PREFIX).astype(np.int32)
                            for _ in range(6)]
@@ -389,13 +394,13 @@ def test_worker_death_mid_stream_names_placement(mixture):
                 workers[victim].stop()        # crash, not a polite close
                 with pytest.raises(
                         RuntimeError,
-                        match=rf"expert {victim} worker at .* died "
-                              rf"mid-stream"):
+                        match=rf"expert {victim} replica 0 worker at .* "
+                              rf"died mid-stream"):
                     for _ in range(200):
                         eng.step()
                 # the other expert's slot is still alive and answering
-                survivors = [s for s, (e, _) in enumerate(eng.placements)
-                             if e != victim]
+                survivors = [p.slot for p in eng.placements
+                             if p.expert != victim]
                 for s in survivors:
                     assert eng._transport.stats(s).version == WIRE_VERSION
         finally:
@@ -423,7 +428,7 @@ def test_run_partial_stats_on_dead_replica(mixture, monkeypatch):
 
     monkeypatch.setattr(eng._transport, "stats", stats)
     res = eng.run()
-    assert res["missing_replicas"] == ["expert 0"]
+    assert res["missing_replicas"] == ["expert 0 replica 0"]
     st0 = res["per_expert"][0]
     assert st0["missing_replicas"] == [0]
     assert st0["served"] == 0 and st0["per_replica"] == {}

@@ -17,12 +17,12 @@ tokens cannot depend on replica placement.  These tests pin that down:
   rejected loudly at the transport boundary;
 * ``StatsMsg.pending``/``active_lanes`` as the ground truth the
   sender-side ``Transport.load`` tracker is checked against;
-* the consolidated API — ``MixtureServeEngine`` warns
-  ``DeprecationWarning`` and is a thin alias of ``ServeFrontend``;
+* the consolidated API — ``repro.serving`` exports :class:`Placement`
+  / :class:`PlacementMap` and no longer ships the retired
+  ``MixtureServeEngine`` facade;
 * ``repro.serving.cli.parse_replicas`` spec parsing.
 """
 import dataclasses
-import warnings
 
 import jax
 import numpy as np
@@ -32,9 +32,9 @@ from repro.configs.base import ModelConfig
 from repro.core import router as routerlib
 from repro.models import model as modellib
 from repro.serving import (EngineConfig, ExpertServer, LoopbackTransport,
-                           MixtureServeEngine, RequestMsg, SamplingParams,
-                           ServeFrontend, WIRE_VERSION, baseline,
-                           check_version)
+                           Placement, PlacementMap, RequestMsg,
+                           SamplingParams, ServeFrontend, WIRE_VERSION,
+                           baseline, check_version)
 from repro.serving.cli import parse_replicas
 
 ECFG = ModelConfig(name="rep-expert", n_layers=2, d_model=64, n_heads=4,
@@ -221,17 +221,32 @@ def test_stats_msg_is_load_ground_truth(mixture):
 
 
 # ---------------------------------------------------------------------------
-# consolidated API: ServeFrontend is the entry point, the facade warns
+# consolidated API: ServeFrontend is the entry point, Placement is public
 # ---------------------------------------------------------------------------
-def test_facade_warns_and_aliases_servefrontend(mixture):
+def test_facade_is_gone_and_placement_is_public(mixture):
+    """The one-release ``MixtureServeEngine`` deprecation window closed:
+    the alias and its ``engine.py`` home are removed, ``bucket_len``
+    re-exports from the package root, and the placement vocabulary the
+    frontend speaks is first-class."""
+    import repro.serving as serving
+    assert not hasattr(serving, "MixtureServeEngine")
+    with pytest.raises(ModuleNotFoundError):
+        import repro.serving.engine  # noqa: F401
+    from repro.serving import bucket_len
+    from repro.serving.expert_server import bucket_len as real
+    assert bucket_len is real
+
     expert_params, router_params = mixture
-    with pytest.warns(DeprecationWarning, match="ServeFrontend"):
-        eng = MixtureServeEngine(ECFG, RCFG, expert_params, router_params,
-                                 ENG)
-    assert isinstance(eng, ServeFrontend)
-    with warnings.catch_warnings():
-        warnings.simplefilter("error", DeprecationWarning)
-        ServeFrontend(ECFG, RCFG, expert_params, router_params, ENG)
+    eng = ServeFrontend(ECFG, RCFG, expert_params, router_params, ENG,
+                        replicas={0: 2})
+    assert isinstance(eng.placements, PlacementMap)
+    by_key = {(p.expert, p.replica): p for p in eng.placements}
+    assert set(by_key) == {(0, 0), (0, 1), (1, 0)}
+    p = by_key[(0, 1)]
+    assert isinstance(p, Placement)
+    assert p.label == "expert 0 replica 1"
+    assert eng.placements.get(p.slot) is p
+    assert eng.placements.slots_of(0) == [by_key[(0, 0)].slot, p.slot]
 
 
 def test_parse_replicas_spec():
@@ -294,7 +309,8 @@ def test_process_transport_replica_identity_smoke(mixture):
         replicas={0: 2})
     with eng:
         assert eng._transport.labels == ["expert 0 replica 0",
-                                         "expert 0 replica 1", "expert 1"]
+                                         "expert 0 replica 1",
+                                         "expert 1 replica 0"]
         reqs = [eng.submit(prompts[i], n_new[i], sampling=sps[i],
                            stop_tokens=stops[i], arrival_tick=i // 3)
                 for i in range(n)]

@@ -26,7 +26,7 @@ from repro.configs.base import ModelConfig
 from repro.core import router as routerlib
 from repro.models import model as modellib
 from repro.serving import (EngineConfig, ExpertServer, LoopbackTransport,
-                           MixtureServeEngine, ProcessTransport, RequestMsg,
+                           ServeFrontend, ProcessTransport, RequestMsg,
                            SamplingParams, StatsMsg, baseline)
 
 ECFG = ModelConfig(name="tr-expert", n_layers=2, d_model=64, n_heads=4,
@@ -200,7 +200,7 @@ def test_unequal_tick_counts_leave_tokens_unchanged(mixture):
     sps = [None if i % 2 else SamplingParams(temperature=0.8, seed=20 + i)
            for i in range(6)]
     # reference: the ordinary lockstep facade
-    eng = MixtureServeEngine(ECFG, RCFG, expert_params, router_params, ENG)
+    eng = ServeFrontend(ECFG, RCFG, expert_params, router_params, ENG)
     ref = [eng.submit(prompts[i], 4, sampling=sps[i]) for i in range(6)]
     eng.run()
     by_expert = {0: [], 1: []}
@@ -263,7 +263,7 @@ def test_loopback_frontend_fuzz_matches_baseline(mixture, seed):
     stops = [frozenset(int(t) for t in
                        rng.integers(0, ECFG.vocab_size, size=8))
              if rng.random() < 0.5 else frozenset() for _ in range(R)]
-    eng = MixtureServeEngine(ECFG, RCFG, expert_params, router_params, ENG)
+    eng = ServeFrontend(ECFG, RCFG, expert_params, router_params, ENG)
     assert isinstance(eng._transport, LoopbackTransport)
     reqs = [eng.submit(prompts[i], n_new[i], sampling=sps[i],
                        stop_tokens=stops[i],
@@ -284,7 +284,7 @@ def test_run_report_per_expert_stats(mixture):
     occupancy next to the global aggregates."""
     expert_params, router_params = mixture
     rng = np.random.default_rng(60)
-    eng = MixtureServeEngine(ECFG, RCFG, expert_params, router_params, ENG)
+    eng = ServeFrontend(ECFG, RCFG, expert_params, router_params, ENG)
     for i in range(6):                        # > lanes: someone must queue
         eng.submit(rng.integers(0, ECFG.vocab_size,
                                 size=PREFIX).astype(np.int32), 4,
@@ -305,7 +305,7 @@ def test_run_report_per_expert_stats(mixture):
 def test_engine_config_rejects_unknown_transport(mixture):
     expert_params, router_params = mixture
     with pytest.raises(ValueError, match="transport"):
-        MixtureServeEngine(ECFG, RCFG, expert_params, router_params,
+        ServeFrontend(ECFG, RCFG, expert_params, router_params,
                            EngineConfig(max_len=MAXLEN, block_size=BS,
                                         prefix_len=PREFIX, transport="grpc"))
 
@@ -333,7 +333,7 @@ def test_process_transport_identity_smoke(mixture):
              frozenset(int(t) for t in
                        rng.integers(0, ECFG.vocab_size, size=12))
              for i in range(R)]
-    eng = MixtureServeEngine(
+    eng = ServeFrontend(
         ECFG, RCFG, expert_params, router_params,
         EngineConfig(lanes_per_expert=2, max_len=MAXLEN, prefix_len=PREFIX,
                      block_size=BS, route_batch=4, transport="process"))
