@@ -27,6 +27,10 @@ BENCH trajectory is *gated*, not just uploaded:
     mid-serve), ``retired_cold`` (an idle cold replica was quiesced and
     released), ``p99_ttft_improved`` vs the static single-replica run,
     and ``tokens_identical`` across both runs — all hard gates;
+  * a v7 ``prefill_write_bytes`` section (when present) must show the
+    fused paged prefill's pool writes strictly below the slab+scatter
+    path it replaced — the admission-side mirror of the decode read
+    gate, also hard;
   * engine tokens/sec must stay within ``--min-ratio`` of the baseline —
     generous by default because shared CI runners are noisy; the full
     delta table lands in ``$GITHUB_STEP_SUMMARY`` either way.
@@ -86,6 +90,10 @@ ROWS = [
     ("early stops", "engine.early_stops"),
     ("paged read B/tick", "decode_read_bytes_per_tick.paged"),
     ("gathered read B/tick", "decode_read_bytes_per_tick.gathered"),
+    # v7 admission-write rows: absent in older reports, tolerantly skipped
+    ("fused prefill write B/prefill", "prefill_write_bytes.fused_per_prefill"),
+    ("slab prefill write B/prefill", "prefill_write_bytes.slab_per_prefill"),
+    ("epilogue logits B", "epilogue_logits_bytes"),
     # v3 open-loop latency rows: absent in v1/v2 reports, tolerantly
     # skipped (latency is informational here; the gates below check the
     # structural invariants, serve_bench gates the improvement itself)
@@ -259,6 +267,10 @@ def main() -> int:
     if rb and rb["paged"] >= rb["gathered"]:
         failures.append(f"paged decode reads ({rb['paged']} B/tick) not "
                         f"below gathered ({rb['gathered']} B/tick)")
+    wb = fresh.get("prefill_write_bytes")
+    if wb and wb.get("slab") and wb["fused"] >= wb["slab"]:
+        failures.append(f"fused prefill writes ({wb['fused']} B) not "
+                        f"below slab+scatter ({wb['slab']} B)")
     failures.extend(check_open_loop(fresh))
     failures.extend(check_two_frontend(fresh))
     failures.extend(check_autoscale(fresh))

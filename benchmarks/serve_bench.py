@@ -20,6 +20,17 @@ interpret-mode on CPU) vs the gathered ``(lanes, max_len)`` view the
 old decode materialized — the former must be strictly smaller or the
 bench fails.
 
+v7 adds the admission-side mirror of that read gate: the fused paged
+prefill (``--prefill-impl``; attention + direct pool block writes, no
+dense KV slab and no ``insert_requests`` re-read) is priced against the
+slab+scatter path it replaced, and fused write bytes must be strictly
+below slab write bytes or the bench fails.  The decode epilogue's
+``(lanes, vocab)`` logits HBM traffic is reported alongside — it drops
+to zero when ``--decode-impl pallas`` fuses unembed+softcap+sampling
+into the decode kernel.  ``--trajectory FILE`` appends a one-line JSONL
+perf record (tokens/sec, decode read bytes, prefill write bytes) so CI
+can accumulate ``benchmarks/TRAJECTORY.jsonl`` across PRs.
+
 Both paths are warmed first (same shapes as the timed run) so jit compile
 time is excluded.  The model is sized so per-step compute, not dispatch
 overhead, dominates — wasted lane-tokens then cost real wall time.
@@ -498,6 +509,12 @@ def build_parser() -> argparse.ArgumentParser:
                     help="random stop-token ids shared by all requests "
                          "(-1: vocab/16 in sampled mode, 0 in greedy)")
     ap.add_argument("--json", default=None, help="write results to this file")
+    ap.add_argument("--trajectory", default=None,
+                    help="append a one-line JSONL perf record (tokens/sec, "
+                         "decode read bytes, prefill write bytes) to this "
+                         "file on success — CI points it at "
+                         "benchmarks/TRAJECTORY.jsonl so the perf "
+                         "trajectory accumulates across PRs")
     ap.add_argument("--smoke", action="store_true",
                     help="small CI workload: identity gates (greedy pool "
                          "pressure, admission budget, sampled early-stop), "
@@ -625,7 +642,11 @@ def run_bench(args, ecfg, rcfg, max_len: int) -> int:
     speedup = res["tokens_per_s"] / serial["tokens_per_s"]
     dense = dense_slab_bytes(ecfg, args.lanes, max_len)
     report = {
-        # v6 (PR 9): the autoscale section — live replica scaling under
+        # v7 (PR 10): prefill_impl + prefill_write_bytes (fused paged
+        # prefill vs the dense slab+scatter it replaced — fused must be
+        # strictly below slab) and epilogue_logits_bytes (the decode
+        # epilogue's HBM logits traffic; 0 on the fused Pallas
+        # epilogue); v6 (PR 9): the autoscale section — live replica scaling under
         # the open-loop Zipf workload, gated on a mid-serve hot-expert
         # scale-up, an idle cold-expert scale-down, hot p99 TTFT
         # strictly improving vs static, and bitwise token identity; v5
@@ -638,7 +659,7 @@ def run_bench(args, ecfg, rcfg, max_len: int) -> int:
         # (PR 5) added "transport" + per-expert queue_wait_ticks /
         # occupancy; compare_bench.py accepts a newer fresh report
         # against an older baseline (added keys only)
-        "schema": "BENCH_serve/v6",
+        "schema": "BENCH_serve/v7",
         "mode": args.mode,
         "transport": args.transport,
         "workload": {"requests": args.requests, "experts": args.experts,
@@ -691,6 +712,23 @@ def run_bench(args, ecfg, rcfg, max_len: int) -> int:
             "paged": res["decode_read_bytes"]["paged_per_tick"],
             "gathered": res["decode_read_bytes"]["gathered_per_tick"],
         },
+        "prefill_impl": res["prefill_impl"],
+        "prefill_write_bytes": {
+            # what the fused paged prefill writes (bucketed K/V straight
+            # into pool blocks + the block-span pos rewrite) vs the dense
+            # slab+scatter path (slab K/V out of prefill, then read back
+            # and scattered by insert_requests) — both priced on every
+            # admission regardless of which path ran
+            "fused": res["prefill_write_bytes"]["fused"],
+            "slab": res["prefill_write_bytes"]["slab"],
+            "fused_per_prefill": res["prefill_write_bytes"]
+                                    ["fused_per_prefill"],
+            "slab_per_prefill": res["prefill_write_bytes"]
+                                   ["slab_per_prefill"],
+        },
+        # (lanes, vocab) logits buffers the decode epilogue materialized
+        # in HBM; 0 when the Pallas epilogue samples in-kernel
+        "epilogue_logits_bytes": res["epilogue_logits_bytes"],
         "speedup": round(speedup, 2),
         "tokens_identical": not mismatches,
     }
@@ -700,6 +738,29 @@ def run_bench(args, ecfg, rcfg, max_len: int) -> int:
         if args.json:
             with open(args.json, "w") as f:
                 json.dump(report, f, indent=1)
+        if args.trajectory and code == 0:
+            # one compact perf row per green run: the numbers the repo
+            # tracks across PRs, appended so history accumulates
+            row = {"ts": round(time.time(), 1),
+                   "schema": report["schema"],
+                   "mode": args.mode,
+                   "transport": args.transport,
+                   "smoke": bool(args.smoke),
+                   "decode_impl": report["decode_impl"],
+                   "prefill_impl": report["prefill_impl"],
+                   "tokens_per_s": report["engine"]["tokens_per_s"],
+                   "speedup": report["speedup"],
+                   "decode_read_bytes_per_tick":
+                       report["decode_read_bytes_per_tick"]["paged"],
+                   "prefill_write_bytes_per_prefill":
+                       report["prefill_write_bytes"]["fused_per_prefill"]
+                       if report["prefill_impl"] != "slab"
+                       else report["prefill_write_bytes"]
+                                  ["slab_per_prefill"],
+                   "epilogue_logits_bytes":
+                       report["epilogue_logits_bytes"]}
+            with open(args.trajectory, "a") as f:
+                f.write(json.dumps(row) + "\n")
         return code
 
     if mismatches:
@@ -720,6 +781,17 @@ def run_bench(args, ecfg, rcfg, max_len: int) -> int:
     if rb["paged"] >= rb["gathered"]:
         print("FAIL: paged decode reads did not beat the gathered "
               "(lanes, max_len) view")
+        return emit(1)
+    wb = res["prefill_write_bytes"]
+    print(f"admission KV writes ({res['prefill_impl']}): fused "
+          f"{wb['fused_per_prefill']} B/prefill vs slab+scatter "
+          f"{wb['slab_per_prefill']} B/prefill "
+          f"({wb['fused'] / max(wb['slab'], 1):.2f}x); decode epilogue "
+          f"logits traffic {res['epilogue_logits_bytes']} B "
+          f"({res['decode_impl']} epilogue)")
+    if wb["slab"] and wb["fused"] >= wb["slab"]:
+        print("FAIL: fused paged prefill writes did not beat the dense "
+              "slab+scatter path")
         return emit(1)
     ps = report["prefix_sharing"]
     print(f"prefix sharing: {'on' if ps['enabled'] else 'off'}, "

@@ -1,0 +1,1 @@
+from repro.kernels.paged_prefill import ops, ref  # noqa: F401

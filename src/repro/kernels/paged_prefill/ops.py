@@ -1,0 +1,80 @@
+"""Unified entry point for fused paged prefill.
+
+One op computes causal flash attention for a batch of pow2-bucketed
+prompts **and** lands the new K/V directly in the block pool through
+each lane's block table — replacing the dense ``(K, max_len)`` slab +
+separate ``insert_requests`` scatter of the legacy admission path with
+a single program whose write traffic is the bucket itself.
+
+``impl`` is validated instead of silently ignored: ``"jnp"`` is the
+reference (attention via the exact blockwise flash call the slab path
+made, so last-token logits — and hence engine tokens — stay bitwise
+identical to ``serving/baseline.py``; scatter via ``.at[].set``);
+``"pallas"`` reuses the Pallas flash kernel and lands K/V with a
+scalar-prefetch table-chasing writer kernel aliased onto the pools
+(runs under ``interpret=True`` on CPU).
+
+Contract (both impls): position ``s`` of lane ``i`` is prompt position
+``s`` — fresh-lane admission prefills from position 0, RoPE already
+applied by the caller; ``pos`` is rewritten over every lane's full
+reserved span with ``insert_requests``' mask, clearing stale positions
+from a previous tenant; blocks not in ``block_tables`` (other lanes',
+shared copy-on-write prefix blocks) are never written.
+"""
+from __future__ import annotations
+
+from repro.kernels.paged_prefill import ref as _ref
+
+VALID_IMPLS = ("jnp", "pallas")
+
+
+def paged_prefill_attention(q, k, v, *, block_tables, true_lens,
+                            k_pool, v_pool, pos_pool,
+                            softcap: float = 0.0, impl: str = "jnp",
+                            interpret: bool | None = None,
+                            q_chunk: int = 1024):
+    """Fused paged prefill over one padded bucket.
+
+    q: (K, S, Hq, hd); k, v: (K, S, Hkv, hd) post-RoPE; block_tables:
+    (K, R) int32 (-1 = unreserved); true_lens: (K,) int32; pools as in
+    :mod:`repro.serving.cache` (single replication slice).  Returns
+    ``(out, k_pool', v_pool', pos_pool')``.  ``q_chunk`` applies to the
+    jnp blockwise attention only; ``interpret=None`` lets the Pallas
+    kernels pick by backend (compiled on TPU, interpreter on CPU).
+    """
+    if impl not in VALID_IMPLS:
+        raise ValueError(f"paged_prefill_attention impl must be one of "
+                         f"{VALID_IMPLS}, got {impl!r}")
+    K, S, Hq, hd = q.shape
+    if k.shape != (K, S) + k.shape[2:] or k.shape != v.shape:
+        raise ValueError(f"k/v must be (K, S, Hkv, hd) matching q's "
+                         f"(K, S)={K, S}: got k={k.shape} v={v.shape}")
+    Hkv = k.shape[2]
+    if Hq % Hkv or k.shape[3] != hd:
+        raise ValueError(f"GQA shapes q={q.shape} k={k.shape}: Hq must be "
+                         f"a multiple of Hkv and head dims must match")
+    n_rows, bs = pos_pool.shape
+    if k_pool.shape != (n_rows, bs, Hkv, hd) or k_pool.shape != v_pool.shape:
+        raise ValueError(f"pools must be (n_rows, bs, Hkv, hd)="
+                         f"{(n_rows, bs, Hkv, hd)} with pos_pool "
+                         f"(n_rows, bs): got k_pool={k_pool.shape} "
+                         f"v_pool={v_pool.shape} pos_pool={pos_pool.shape}")
+    if block_tables.ndim != 2 or block_tables.shape[0] != K:
+        raise ValueError(f"block_tables must be (K, R) with K={K}, got "
+                         f"{block_tables.shape}")
+    if S > block_tables.shape[1] * bs:
+        raise ValueError(f"bucket S={S} exceeds the reserved span "
+                         f"R*bs={block_tables.shape[1] * bs}: admission "
+                         f"must reserve the full prompt before prefill")
+    if true_lens.shape != (K,):
+        raise ValueError(f"true_lens must be (K,), got {true_lens.shape}")
+    if impl == "pallas":
+        from repro.kernels.paged_prefill import paged_prefill as _pl
+        return _pl.paged_prefill_attention_pallas(
+            q, k, v, block_tables=block_tables, true_lens=true_lens,
+            k_pool=k_pool, v_pool=v_pool, pos_pool=pos_pool,
+            softcap=softcap, interpret=interpret)
+    return _ref.paged_prefill_attention_ref(
+        q, k, v, block_tables=block_tables, true_lens=true_lens,
+        k_pool=k_pool, v_pool=v_pool, pos_pool=pos_pool,
+        softcap=softcap, q_chunk=q_chunk)

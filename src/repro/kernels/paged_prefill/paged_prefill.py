@@ -1,0 +1,132 @@
+"""Pallas fused paged prefill: flash attention + in-place pool landing.
+
+One jitted program, two kernels, zero dense slabs:
+
+  1. attention over the padded bucket reuses the blockwise Pallas flash
+     kernel (:func:`repro.kernels.flash_attention.flash_attention.
+     flash_attention_pallas`) unchanged;
+  2. the new K/V lands straight in the block pool through a
+     scalar-prefetch **table-chasing writer kernel** whose output
+     BlockSpecs resolve each grid step's destination from the lane's
+     block table (``paged_attention.py``'s prefetch pattern, applied to
+     the write side), with ``input_output_aliases`` so the pools are
+     updated in place — no ``(K, max_len)`` slab is ever materialized
+     and no separate ``insert_requests`` scatter re-reads it.
+
+Writer grid is ``(K, Hkv, R)`` over lanes x kv-heads x reserved rows.
+Every grid step fully defines its output block (Pallas flushes the
+output buffer each step regardless, so partial writes would leak stale
+buffer contents): bucket rows copy the new K/V tile, growth rows beyond
+the bucket copy the pool block through unchanged, and the ``pos`` block
+is rewritten over the lane's full reserved span with
+``insert_requests``' mask — clearing a previous tenant's stale
+positions in the same pass.  Unreserved table entries (and padding
+lanes, table all ``-1``) clamp to the scratch row, so blocks owned by
+other lanes — shared copy-on-write prefix blocks included — are never
+addressed, let alone written.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.flash_attention.flash_attention import (
+    flash_attention_pallas,
+)
+
+
+def _writer_kernel(tables_ref, tlens_ref, k_ref, v_ref,
+                   kp_in, vp_in, pp_in, kp_out, vp_out, pp_out,
+                   *, bs: int, nkb: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    inside = j < nkb  # rows past the bucket keep their K/V (growth span)
+    kp_out[...] = jnp.where(inside, k_ref[...], kp_in[...])
+    vp_out[...] = jnp.where(inside, v_ref[...], vp_in[...])
+    p = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    pp_out[...] = jnp.where(p < tlens_ref[b], p, -1)
+
+
+def scatter_kv_pallas(k, v, *, block_tables, true_lens,
+                      k_pool, v_pool, pos_pool, interpret=None):
+    """Table-chasing in-place pool write of a prefill bucket's K/V.
+
+    Same contract as :func:`repro.kernels.paged_prefill.ref.scatter_kv`:
+    position ``s`` of lane ``i`` is prompt position ``s``; ``pos`` is
+    rewritten over each lane's full ``R * bs`` reserved span.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    K, S, Hkv, hd = k.shape
+    n_rows, bs = pos_pool.shape
+    scratch = n_rows - 1
+    R = block_tables.shape[1]
+    tables = jnp.asarray(block_tables, jnp.int32)
+    tlens = jnp.asarray(true_lens, jnp.int32)
+    if S % bs:
+        pad = bs - S % bs
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nkb = k.shape[1] // bs  # bucket rows; grid also covers growth rows
+
+    def row_of(b, j, t, tl):
+        blk = t[b, j]
+        return jnp.where(blk >= 0, blk, scratch)
+
+    def kv_new_map(b, h, j, t, tl):
+        return (b, jnp.minimum(j, nkb - 1), h, 0)
+
+    def kv_pool_map(b, h, j, t, tl):
+        return (row_of(b, j, t, tl), 0, h, 0)
+
+    def pos_map(b, h, j, t, tl):
+        return (row_of(b, j, t, tl), 0)
+
+    kv_new_spec = pl.BlockSpec((1, bs, 1, hd), kv_new_map)
+    kv_pool_spec = pl.BlockSpec((1, bs, 1, hd), kv_pool_map)
+    pos_spec = pl.BlockSpec((1, bs), pos_map)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(K, Hkv, R),
+        in_specs=[kv_new_spec, kv_new_spec,
+                  kv_pool_spec, kv_pool_spec, pos_spec],
+        out_specs=[kv_pool_spec, kv_pool_spec, pos_spec],
+    )
+    kernel = functools.partial(_writer_kernel, bs=bs, nkb=nkb)
+    # alias indices count *all* inputs, scalar-prefetch operands included:
+    # (tables, tlens, k, v, k_pool, v_pool, pos_pool) -> pools are 4..6
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(k_pool.shape, k_pool.dtype),
+            jax.ShapeDtypeStruct(v_pool.shape, v_pool.dtype),
+            jax.ShapeDtypeStruct(pos_pool.shape, pos_pool.dtype),
+        ],
+        input_output_aliases={4: 0, 5: 1, 6: 2},
+        interpret=interpret,
+    )(tables, tlens, k, v, k_pool, v_pool, pos_pool)
+
+
+def paged_prefill_attention_pallas(q, k, v, *, block_tables, true_lens,
+                                   k_pool, v_pool, pos_pool,
+                                   softcap: float = 0.0, interpret=None):
+    """Fused paged prefill, Pallas implementation.
+
+    Causal flash attention over the bucket plus the in-place pool write;
+    returns ``(out, k_pool', v_pool', pos_pool')`` like the reference.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    out = flash_attention_pallas(q, k, v, causal=True, window=0,
+                                 softcap=softcap, interpret=interpret)
+    k_pool, v_pool, pos_pool = scatter_kv_pallas(
+        k, v, block_tables=block_tables, true_lens=true_lens,
+        k_pool=k_pool, v_pool=v_pool, pos_pool=pos_pool,
+        interpret=interpret)
+    return out, k_pool, v_pool, pos_pool

@@ -1,0 +1,92 @@
+"""Pure-jnp reference for fused paged prefill (the bitwise contract).
+
+The legacy admission path computes causal flash attention over a
+``(K, bucket)`` batch of right-padded prompts into a *dense* per-request
+KV slab spanning the whole ``max_len`` decode budget, then a separate
+jitted scatter (:func:`repro.serving.cache.insert_requests`) copies that
+slab into the reserved pool blocks.  That is two full-span HBM writes of
+every request's KV per admission.
+
+The fused path replaces both with one op per attention layer:
+
+  * the **attention output** is computed by *exactly* the same call the
+    dense-slab prefill made (:func:`repro.kernels.flash_attention.ops.
+    flash_attention` over the padded bucket, causal, ``q_chunk=1024``) —
+    last-token logits are therefore bitwise identical by construction;
+  * the new K/V lands **directly in the pool**: position ``p`` of lane
+    ``i`` goes to ``(block_tables[i, p // bs], p % bs)``, unreserved rows
+    and padding lanes clamp to the scratch row (``n_blocks``) exactly
+    like ``insert_requests``;
+  * the ``pos`` leaf is written over the lane's **full reserved span**
+    with ``insert_requests``' mask (``p`` where ``p < true_len``, else
+    ``-1``), so a previous tenant's stale positions in the growth blocks
+    are cleared in the same op and the pool state after the fused op is
+    **bitwise identical** to slab + scatter (K/V beyond the prompt span
+    differ only behind the ``pos = -1`` mask, which the decode read
+    treats as garbage either way — ``tests/test_kernels_paged_prefill``
+    pins the readable state, i.e. the gathered lane view).
+
+Blocks owned by other lanes (shared copy-on-write prefix blocks
+included) are never touched: every write index resolves through the
+caller's block tables or clamps to scratch.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ops as fa
+
+
+def scatter_kv(k, v, *, block_tables, true_lens, k_pool, v_pool, pos_pool):
+    """Land a prefill bucket's K/V in the pool through the block tables.
+
+    k, v: (K, S, Hkv, hd) new KV for the padded prompt bucket, position
+    ``s`` of lane ``i`` being prompt position ``s`` (fresh-lane admission
+    always prefills from position 0); block_tables: (K, R) int32
+    full-span reserved rows (-1 = unreserved, padding lanes all -1);
+    true_lens: (K,) int32 un-padded prompt lengths; pools as in
+    :mod:`repro.serving.cache`.  Returns (k_pool', v_pool', pos_pool').
+
+    The ``pos`` write covers all ``R * bs`` positions of every lane
+    (stale-position clearing included); the k/v write covers the bucket.
+    """
+    K, S = k.shape[:2]
+    n_rows, bs = pos_pool.shape
+    scratch = n_rows - 1
+    R = block_tables.shape[1]
+    p = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (K, S))
+    tl = jnp.asarray(true_lens, jnp.int32)
+    tables = jnp.asarray(block_tables, jnp.int32)
+    # k/v: position-addressed scatter over the bucket span
+    bi = jnp.clip(jnp.where(p >= 0, p // bs, 0), 0, R - 1)
+    blk = jnp.take_along_axis(tables, bi, axis=1)           # (K, S)
+    wblk = jnp.where((p >= 0) & (blk >= 0), blk, scratch)
+    off = jnp.where(p >= 0, p % bs, 0)
+    k_pool = k_pool.at[wblk, off].set(k)
+    v_pool = v_pool.at[wblk, off].set(v)
+    # pos: insert_requests' full-span semantics — every reserved row gets
+    # `position if position < true_len else -1`, clearing stale entries
+    span = jnp.arange(R * bs, dtype=jnp.int32)[None, :]     # (1, R*bs)
+    vals = jnp.where(span < tl[:, None], span, -1)          # (K, R*bs)
+    ids = jnp.where(tables >= 0, tables, scratch).reshape(-1)
+    pos_pool = pos_pool.at[ids].set(
+        vals.reshape(K * R, bs).astype(pos_pool.dtype))
+    return k_pool, v_pool, pos_pool
+
+
+def paged_prefill_attention_ref(q, k, v, *, block_tables, true_lens,
+                                k_pool, v_pool, pos_pool,
+                                softcap: float = 0.0, q_chunk: int = 1024):
+    """Fused paged prefill, jnp reference.
+
+    q: (K, S, Hq, hd); k, v: (K, S, Hkv, hd) — post-RoPE, padded to the
+    bucket.  Returns ``(out, k_pool', v_pool', pos_pool')`` where ``out``
+    is bitwise identical to the dense-slab prefill's attention output
+    (same blockwise flash call) and the pools carry the scattered KV.
+    """
+    out = fa.flash_attention(q, k, v, causal=True, window=0,
+                             softcap=softcap, impl="jnp", q_chunk=q_chunk)
+    k_pool, v_pool, pos_pool = scatter_kv(
+        k, v, block_tables=block_tables, true_lens=true_lens,
+        k_pool=k_pool, v_pool=v_pool, pos_pool=pos_pool)
+    return out, k_pool, v_pool, pos_pool

@@ -1,0 +1,1 @@
+from repro.kernels.sample_epilogue import ops, ref  # noqa: F401

@@ -1,0 +1,85 @@
+"""Unified entry point for the fused decode epilogue.
+
+One op pair finishes the decode step from the last-layer hidden state:
+``decode_and_sample`` (unembed matmul + final softcap + the PR 3
+counter-based ``(seed, uid, step)`` sampler) and ``decode_greedy``
+(unembed + softcap + argmax).  On the fused path the ``(lanes, vocab)``
+logits are an internal intermediate — only ``(lanes,)`` int32 tokens
+come back — which kills the per-tick logits HBM round-trip between the
+decode program and the separate ``sample_tokens_jit`` call.
+
+``impl`` is validated instead of silently ignored: ``"jnp"`` replays the
+legacy sequence bit for bit (same matmul shape and astype/softcap order
+as ``model._logits``, same row-wise sampler — tokens bitwise identical
+to ``serving/baseline.py`` by construction); ``"pallas"`` builds each
+logits row chunk-wise in VMEM and runs the *same* ``_sample_row`` /
+argmax in-kernel (interpret mode on CPU; in-kernel sort/threefry on TPU
+silicon is the documented validation gap).
+
+``unemb`` must already be cast to the compute dtype — callers hold cast
+params, and re-casting here would diverge from ``model._logits``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.sample_epilogue import ref as _ref
+
+VALID_IMPLS = ("jnp", "pallas")
+
+
+def _validate(h, unemb, impl):
+    if impl not in VALID_IMPLS:
+        raise ValueError(f"sample_epilogue impl must be one of "
+                         f"{VALID_IMPLS}, got {impl!r}")
+    if h.ndim != 3 or h.shape[1] != 1:
+        raise ValueError(f"h must be (B, 1, D) — one decode position per "
+                         f"lane — got {h.shape}")
+    if unemb.ndim != 2 or unemb.shape[1] != h.shape[2]:
+        raise ValueError(f"unemb must be (V, D) with D={h.shape[2]}, "
+                         f"got {unemb.shape}")
+
+
+def decode_and_sample(h, unemb, *, keys, steps, temps, top_ks, top_ps,
+                      final_softcap: float = 0.0,
+                      logit_dtype=jnp.float32, impl: str = "jnp",
+                      interpret: bool | None = None):
+    """Sampled fused epilogue: h (B, 1, D) -> tokens (B,) int32.
+
+    ``keys`` (B, 2) uint32 request roots, ``steps``/``temps``/
+    ``top_ks``/``top_ps`` (B,) per-lane operands — identical to
+    :func:`repro.serving.sampling.sample_tokens`'s contract.
+    """
+    _validate(h, unemb, impl)
+    B = h.shape[0]
+    if keys.shape != (B, 2):
+        raise ValueError(f"keys must be (B, 2)={B, 2} uint32 request "
+                         f"roots, got {keys.shape}")
+    for name, arr in (("steps", steps), ("temps", temps),
+                      ("top_ks", top_ks), ("top_ps", top_ps)):
+        if arr.shape != (B,):
+            raise ValueError(f"{name} must be (B,)={(B,)}, got {arr.shape}")
+    if impl == "pallas":
+        from repro.kernels.sample_epilogue import sample_epilogue as _pl
+        return _pl.decode_and_sample_pallas(
+            h, unemb, keys=keys, steps=steps, temps=temps, top_ks=top_ks,
+            top_ps=top_ps, final_softcap=final_softcap,
+            logit_dtype=logit_dtype, interpret=interpret)
+    return _ref.decode_and_sample_ref(
+        h, unemb, keys=keys, steps=steps, temps=temps, top_ks=top_ks,
+        top_ps=top_ps, final_softcap=final_softcap,
+        logit_dtype=logit_dtype)
+
+
+def decode_greedy(h, unemb, *, final_softcap: float = 0.0,
+                  logit_dtype=jnp.float32, impl: str = "jnp",
+                  interpret: bool | None = None):
+    """Greedy fused epilogue: h (B, 1, D) -> argmax tokens (B,) int32."""
+    _validate(h, unemb, impl)
+    if impl == "pallas":
+        from repro.kernels.sample_epilogue import sample_epilogue as _pl
+        return _pl.decode_greedy_pallas(
+            h, unemb, final_softcap=final_softcap,
+            logit_dtype=logit_dtype, interpret=interpret)
+    return _ref.decode_greedy_ref(h, unemb, final_softcap=final_softcap,
+                                  logit_dtype=logit_dtype)

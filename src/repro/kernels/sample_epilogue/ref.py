@@ -1,0 +1,49 @@
+"""Pure-jnp reference for the fused decode epilogue (the bitwise contract).
+
+The legacy decode program ends at ``model._logits``: the full
+``(lanes, vocab)`` logits land in HBM and a separate sampler
+(:func:`repro.serving.sampling.sample_tokens`) or ``argmax`` reads them
+back to draw one token per lane.  The fused epilogue moves that last
+matmul + softcap + sample into the decode program itself, so only the
+``(lanes,)`` tokens ever leave it.
+
+This reference performs *exactly* the legacy sequence on the last-layer
+hidden state — the same ``(B, 1, D) @ (D, V)`` matmul shape, the same
+``astype(logit_dtype)``-then-softcap order as ``model._logits``, and the
+same row-wise :func:`repro.serving.sampling._sample_row` counter-based
+``(seed, uid, step)`` sampler — so engine tokens are bitwise identical
+to the unfused path (and hence to ``serving/baseline.py``) by
+construction.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.serving import sampling as samplib
+
+
+def logits_from_hidden(h, unemb, *, final_softcap: float, logit_dtype):
+    """``model._logits`` on a precomputed hidden state; h: (B, 1, D).
+
+    ``unemb`` must already be cast to the compute dtype (the caller holds
+    the cast params), matching the legacy decode program bit for bit.
+    """
+    logits = (h @ unemb.T).astype(logit_dtype)
+    return common.softcap(logits, final_softcap)
+
+
+def decode_and_sample_ref(h, unemb, *, keys, steps, temps, top_ks, top_ps,
+                          final_softcap: float, logit_dtype):
+    """Sampled epilogue: h (B, 1, D) -> tokens (B,) int32."""
+    logits = logits_from_hidden(h, unemb, final_softcap=final_softcap,
+                                logit_dtype=logit_dtype)
+    return samplib.sample_tokens(logits[:, 0], keys, steps, temps,
+                                 top_ks, top_ps)
+
+
+def decode_greedy_ref(h, unemb, *, final_softcap: float, logit_dtype):
+    """Greedy epilogue: h (B, 1, D) -> argmax tokens (B,) int32."""
+    logits = logits_from_hidden(h, unemb, final_softcap=final_softcap,
+                                logit_dtype=logit_dtype)
+    return jnp.argmax(logits[:, 0], -1).astype(jnp.int32)

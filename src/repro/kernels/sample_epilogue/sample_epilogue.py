@@ -1,0 +1,137 @@
+"""Pallas fused decode epilogue: unembed + softcap + sample in VMEM.
+
+Grid ``(B, vocab_chunks)``: each lane's logits row is built chunk by
+chunk in a VMEM scratch buffer — ``(1, D) @ (D, Vc)`` unembed tile,
+``astype(logit_dtype)``, final softcap, exactly ``model._logits``' op
+order — and at the last chunk the **whole sampler runs in-kernel** on
+the completed row: the literal :func:`repro.serving.sampling._sample_row`
+(counter-based ``fold_in(key, step)`` threefry categorical, top-k /
+top-p masks, temp-0 argmax branch), so the ``(lanes, vocab)`` logits
+never leave VMEM and only the ``(lanes,)`` tokens are written back.
+
+Per-lane sampling operands ride in as scalar-prefetch inputs (the same
+mechanism ``paged_attention.py`` uses for block tables), so lane churn
+never recompiles.  The vocab is padded up to the chunk size for the
+matmul tiles, but the sampler reads exactly ``row[:V]`` — the categorical
+draw sees the same ``(V,)`` shape as the unfused sampler, which is what
+keeps the token stream bit-compatible.  In-kernel ``sort`` / threefry
+lowering on real TPUs is the documented silicon validation gap
+(``serving/README.md``); interpret mode is bit-exact.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.models import common
+from repro.serving import sampling as samplib
+
+_VOCAB_CHUNK = 512
+
+
+def _chunks(V: int) -> tuple[int, int, int]:
+    vc = min(V, _VOCAB_CHUNK)
+    nc = -(-V // vc)
+    return vc, nc, vc * nc  # (chunk, n_chunks, padded vocab)
+
+
+def _logits_chunk(h_ref, u_ref, *, logit_dtype, softcap: float):
+    vals = (h_ref[0] @ u_ref[...].T).astype(logit_dtype)   # (1, Vc)
+    return common.softcap(vals, softcap)
+
+
+def _sampled_kernel(keys_ref, steps_ref, temps_ref, topks_ref, topps_ref,
+                    h_ref, u_ref, tok_ref, scratch,
+                    *, V, Vc, nc, softcap, logit_dtype):
+    b, j = pl.program_id(0), pl.program_id(1)
+    vals = _logits_chunk(h_ref, u_ref, logit_dtype=logit_dtype,
+                         softcap=softcap)
+    pl.store(scratch, (slice(None), pl.ds(j * Vc, Vc)), vals)
+
+    @pl.when(j == nc - 1)
+    def _emit():
+        tok = samplib._sample_row(scratch[0, :V], keys_ref[b], steps_ref[b],
+                                  temps_ref[b], topks_ref[b], topps_ref[b])
+        tok_ref[0] = tok.astype(jnp.int32)
+
+
+def _greedy_kernel(h_ref, u_ref, tok_ref, scratch,
+                   *, V, Vc, nc, softcap, logit_dtype):
+    j = pl.program_id(1)
+    vals = _logits_chunk(h_ref, u_ref, logit_dtype=logit_dtype,
+                         softcap=softcap)
+    pl.store(scratch, (slice(None), pl.ds(j * Vc, Vc)), vals)
+
+    @pl.when(j == nc - 1)
+    def _emit():
+        tok_ref[0] = jnp.argmax(scratch[0, :V], -1).astype(jnp.int32)
+
+
+def _pad_unemb(unemb, vpad: int):
+    V = unemb.shape[0]
+    if vpad == V:
+        return unemb
+    return jnp.pad(unemb, ((0, vpad - V), (0, 0)))
+
+
+def decode_and_sample_pallas(h, unemb, *, keys, steps, temps, top_ks,
+                             top_ps, final_softcap: float, logit_dtype,
+                             interpret=None):
+    """Fused sampled epilogue: h (B, 1, D) -> tokens (B,) int32."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, _, D = h.shape
+    V = unemb.shape[0]
+    Vc, nc, vpad = _chunks(V)
+    logit_dtype = jnp.dtype(logit_dtype)
+    kernel = functools.partial(_sampled_kernel, V=V, Vc=Vc, nc=nc,
+                               softcap=final_softcap,
+                               logit_dtype=logit_dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(B, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, D), lambda b, j, *_: (b, 0, 0)),
+            pl.BlockSpec((Vc, D), lambda b, j, *_: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda b, j, *_: (b,)),
+        scratch_shapes=[pltpu.VMEM((1, vpad), logit_dtype)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.int32),
+        interpret=interpret,
+    )(jnp.asarray(keys, jnp.uint32), jnp.asarray(steps, jnp.int32),
+      jnp.asarray(temps, jnp.float32), jnp.asarray(top_ks, jnp.int32),
+      jnp.asarray(top_ps, jnp.float32), h, _pad_unemb(unemb, vpad))
+
+
+def decode_greedy_pallas(h, unemb, *, final_softcap: float, logit_dtype,
+                         interpret=None):
+    """Fused greedy epilogue: h (B, 1, D) -> argmax tokens (B,) int32."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, _, D = h.shape
+    V = unemb.shape[0]
+    Vc, nc, vpad = _chunks(V)
+    logit_dtype = jnp.dtype(logit_dtype)
+    kernel = functools.partial(_greedy_kernel, V=V, Vc=Vc, nc=nc,
+                               softcap=final_softcap,
+                               logit_dtype=logit_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, D), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((Vc, D), lambda b, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda b, j: (b,)),
+        scratch_shapes=[pltpu.VMEM((1, vpad), logit_dtype)],
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.int32),
+        interpret=interpret,
+    )(h, _pad_unemb(unemb, vpad))

@@ -124,7 +124,9 @@ def attn_apply(params: Params, x: jnp.ndarray, cfg, *,
                cache: Params | None = None,
                cache_index: jnp.ndarray | None = None,
                cache_len: int | None = None,
-               block_tables: jnp.ndarray | None = None) -> tuple[jnp.ndarray, Params | None]:
+               block_tables: jnp.ndarray | None = None,
+               paged_prefill: bool = False,
+               true_lens: jnp.ndarray | None = None) -> tuple[jnp.ndarray, Params | None]:
     """Pre-norm attention block.  Returns (residual_output, new_cache).
 
     Train/prefill: ``cache`` is None (prefill returns a fresh cache when
@@ -146,6 +148,15 @@ def attn_apply(params: Params, x: jnp.ndarray, cfg, *,
     decode bit-identical to the unpaged path, while ``cfg.use_pallas``
     selects the block-table-chasing Pallas kernel that reads only live
     blocks instead of materializing the (B, max_len, ...) gather.
+
+    Fused paged prefill (``paged_prefill=True``; needs ``cache`` +
+    ``block_tables`` + ``true_lens``, full-attention kinds only): ``x``
+    is a right-padded prompt bucket (B, S, D) prefilled from position 0;
+    causal attention and the pool KV write happen in one dispatch
+    (:mod:`repro.kernels.paged_prefill.ops`) — no dense per-lane slab is
+    materialized and no separate insert scatter runs afterwards.  The
+    jnp impl makes the same blockwise flash call as the slab path, so
+    the hidden state (hence logits, hence tokens) is bitwise unchanged.
     """
     from repro.kernels.flash_attention import ops as fa
     from repro.kernels.paged_attention import ops as pa
@@ -175,7 +186,22 @@ def attn_apply(params: Params, x: jnp.ndarray, cfg, *,
     q_pos = positions[..., 0] if positions.ndim == 3 else positions
 
     new_cache: Params | None = None
-    if cache is not None and block_tables is not None and kind == "attn":
+    if paged_prefill:
+        if cache is None or block_tables is None or true_lens is None \
+                or kind != "attn":
+            raise ValueError(
+                "paged_prefill needs the paged pool layout (cache + "
+                "block_tables + true_lens) on a full-attention layer; "
+                f"got kind={kind!r}")
+        from repro.kernels.paged_prefill import ops as ppf
+        out, ck, cv, cpos = ppf.paged_prefill_attention(
+            q, k, v, block_tables=block_tables, true_lens=true_lens,
+            k_pool=cache["k"], v_pool=cache["v"], pos_pool=cache["pos"],
+            softcap=cfg.attn_softcap,
+            impl="pallas" if cfg.use_pallas else "jnp")
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+        out = act.shard_attn_q(out)
+    elif cache is not None and block_tables is not None and kind == "attn":
         # paged decode: cache leaves are the shared block pool
         n_blocks, bs = cache["k"].shape[0], cache["k"].shape[1]
         scratch = n_blocks - 1

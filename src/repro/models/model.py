@@ -108,7 +108,8 @@ def cast_params(params: Params, cfg) -> Params:
 # ---------------------------------------------------------------------------
 def _apply_block(kind: str, bparams: Params, x, cfg, *, positions,
                  cache=None, cache_index=None, want_cache=False,
-                 shared=None, cache_len=None, block_tables=None):
+                 shared=None, cache_len=None, block_tables=None,
+                 paged_prefill=False, true_lens=None):
     """Returns (x, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     if kind in ATTN_KINDS:
@@ -121,7 +122,8 @@ def _apply_block(kind: str, bparams: Params, x, cfg, *, positions,
             kind="attn_local" if kind == cfglib.ATTN_LOCAL else "attn",
             positions=positions, cache=cache,
             cache_index=ci, cache_len=cache_len,
-            block_tables=block_tables)
+            block_tables=block_tables,
+            paged_prefill=paged_prefill, true_lens=true_lens)
         if cfg.d_ff > 0:
             if cfg.moe is not None:
                 x, aux = moelib.moe_apply(p["moe"], x, cfg)
@@ -148,8 +150,15 @@ def _apply_block(kind: str, bparams: Params, x, cfg, *, positions,
 # ---------------------------------------------------------------------------
 def forward(params: Params, cfg, x, positions, *, caches=None,
             cache_index=None, want_cache=False, cache_len=None,
-            block_tables=None):
-    """x: (B,S,D) embedded inputs.  Returns (hidden, new_caches, aux)."""
+            block_tables=None, paged_prefill=False, true_lens=None):
+    """x: (B,S,D) embedded inputs.  Returns (hidden, new_caches, aux).
+
+    ``paged_prefill=True`` (with ``caches`` holding the paged block pool,
+    ``block_tables`` and ``true_lens``) runs the full-sequence fused
+    paged prefill: every attention layer computes causal attention over
+    the bucket *and* lands its K/V directly in the pool blocks — see
+    :func:`repro.models.common.attn_apply`.
+    """
     mode = "decode" if caches is not None else (
         "prefill" if want_cache else "train")
     shared = params.get("shared_block")
@@ -173,7 +182,8 @@ def forward(params: Params, cfg, x, positions, *, caches=None,
                     kind, uparams[pos], xc, cfg, positions=positions,
                     cache=bc, cache_index=cache_index,
                     want_cache=(mode == "prefill"), shared=shared,
-                    cache_len=cache_len, block_tables=block_tables)
+                    cache_len=cache_len, block_tables=block_tables,
+                    paged_prefill=paged_prefill, true_lens=true_lens)
                 out_caches.append(c)
                 auxc = auxc + a
             ys = tuple(out_caches) if mode in ("decode", "prefill") else None
@@ -322,6 +332,79 @@ def decode_step(params: Params, cfg, batch: dict, caches):
                                cache_index=batch["cache_index"],
                                block_tables=batch.get("block_tables"))
     return _logits(params, cfg, h), new_caches
+
+
+def prefill_paged(params: Params, cfg, batch: dict, caches, *,
+                  block_tables, true_lens, last_index):
+    """Fused paged prefill: bucket forward + in-place pool KV landing.
+
+    Same contract as :func:`prefill` with ``last_index`` — returns
+    ``(true-last-token logits (B, V), new_caches)`` — except ``caches``
+    is the live paged block pool and the new K/V is written directly
+    into each lane's reserved blocks through ``block_tables`` ((B, R)
+    int32, -1 = unreserved) instead of materializing dense per-lane
+    slabs for a separate ``insert_requests`` scatter.  ``true_lens``
+    ((B,) int32) drives the full-span ``pos`` rewrite that clears a
+    previous tenant's stale positions.  Only valid for pure
+    full-attention (pool-only) layer patterns; on the jnp dispatch the
+    hidden state matches the slab path bit for bit.
+    """
+    params = cast_params(params, cfg)
+    x, positions = embed_inputs(params, cfg, batch)
+    h, new_caches, _ = forward(params, cfg, x, positions, caches=caches,
+                               block_tables=block_tables,
+                               paged_prefill=True, true_lens=true_lens)
+    li = jnp.asarray(last_index, jnp.int32)
+    hl = h[jnp.arange(h.shape[0]), li][:, None]
+    return _logits(params, cfg, hl)[:, 0], new_caches
+
+
+def decode_and_sample(params: Params, cfg, batch: dict, caches, *,
+                      keys, steps, temps, top_ks, top_ps,
+                      epilogue_impl: str = "jnp"):
+    """One-token decode with the sampler fused into the program.
+
+    :func:`decode_step` minus the logits round-trip: the last-layer
+    hidden state goes straight through the fused epilogue dispatch
+    (:mod:`repro.kernels.sample_epilogue.ops`), so the ``(B, vocab)``
+    logits never leave the program — returns ``(tokens (B,) int32,
+    new_caches)``.  Sampling operands follow
+    :func:`repro.serving.sampling.sample_tokens`'s per-row contract and
+    the token stream is bitwise identical to ``decode_step`` +
+    ``sample_tokens`` on the jnp dispatch by construction.
+    """
+    from repro.kernels.sample_epilogue import ops as ep_ops
+    params = cast_params(params, cfg)
+    x, positions = embed_inputs(params, cfg, batch)
+    h, new_caches, _ = forward(params, cfg, x, positions, caches=caches,
+                               cache_index=batch["cache_index"],
+                               block_tables=batch.get("block_tables"))
+    unemb = unembed_matrix(params, cfg).astype(common.dt(cfg.compute_dtype))
+    tok = ep_ops.decode_and_sample(
+        h, unemb, keys=keys, steps=steps, temps=temps, top_ks=top_ks,
+        top_ps=top_ps, final_softcap=cfg.final_softcap,
+        logit_dtype=common.dt(cfg.logit_dtype), impl=epilogue_impl)
+    return tok, new_caches
+
+
+def decode_greedy(params: Params, cfg, batch: dict, caches, *,
+                  epilogue_impl: str = "jnp"):
+    """One-token greedy decode with the argmax fused into the program.
+
+    Returns ``(tokens (B,) int32, new_caches)``; see
+    :func:`decode_and_sample`.
+    """
+    from repro.kernels.sample_epilogue import ops as ep_ops
+    params = cast_params(params, cfg)
+    x, positions = embed_inputs(params, cfg, batch)
+    h, new_caches, _ = forward(params, cfg, x, positions, caches=caches,
+                               cache_index=batch["cache_index"],
+                               block_tables=batch.get("block_tables"))
+    unemb = unembed_matrix(params, cfg).astype(common.dt(cfg.compute_dtype))
+    tok = ep_ops.decode_greedy(
+        h, unemb, final_softcap=cfg.final_softcap,
+        logit_dtype=common.dt(cfg.logit_dtype), impl=epilogue_impl)
+    return tok, new_caches
 
 
 # ---------------------------------------------------------------------------

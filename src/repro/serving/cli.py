@@ -67,6 +67,13 @@ def add_engine_args(ap: argparse.ArgumentParser, *, lanes: int = 4,
                    help="paged decode attention: jnp gather reference or "
                         "the Pallas block-table kernel (interpret-mode on "
                         "CPU; auto follows the expert config)")
+    g.add_argument("--prefill-impl", choices=["auto", "jnp", "pallas"],
+                   default="auto",
+                   help="admission prefill: jnp/pallas run the fused "
+                        "paged prefill (attention + direct pool write, no "
+                        "dense slab); auto follows the expert config on "
+                        "fused-capable shapes and falls back to the "
+                        "slab+scatter path otherwise")
     g.add_argument("--transport", choices=["loopback", "process", "tcp"],
                    default="loopback",
                    help="expert backend: in-process loopback, one spawned "
@@ -118,7 +125,8 @@ def engine_config_from_args(args: argparse.Namespace, *, max_len: int,
     kw = dict(lanes_per_expert=args.lanes, max_len=max_len,
               prefix_len=prefix_len, block_size=args.block_size,
               pool_blocks=args.blocks_per_expert,
-              decode_impl=args.decode_impl, transport=args.transport,
+              decode_impl=args.decode_impl, prefill_impl=args.prefill_impl,
+              transport=args.transport,
               registry=args.registry, net_timeout_s=args.net_timeout,
               net_poll_ms=args.net_poll_ms,
               prefix_cache=not args.no_prefix_cache,

@@ -70,6 +70,13 @@ class EngineConfig:
     pool_blocks: int = 0          # KV blocks per expert; 0 -> lanes*max_len/bs
     decode_impl: str = "auto"     # paged decode kernel: auto|jnp|pallas
                                   # (auto follows the expert cfg's use_pallas)
+    prefill_impl: str = "auto"    # admission prefill: auto|jnp|pallas select
+                                  # the fused paged prefill (attention + in-
+                                  # place pool KV landing, no slab/insert);
+                                  # auto follows the expert cfg's use_pallas
+                                  # on fused-capable (pure full-attention)
+                                  # archs and falls back to the dense slab +
+                                  # insert scatter elsewhere
     transport: str = "loopback"   # expert backend: loopback|process|tcp
     registry: str = ""            # tcp only: HOST:PORT of the discovery
                                   # registry the worker fleet registered with
@@ -101,6 +108,8 @@ class ServingShapes:
     pool_blocks: int              # resolved pool size per expert
     dcfg: object                  # decode-side expert config (use_pallas flip)
     decode_impl: str              # "jnp" | "pallas" after `auto` resolution
+    pcfg: object                  # prefill-side expert config (use_pallas flip)
+    prefill_impl: str             # "slab" | "jnp" | "pallas" after resolution
     prefix_ok: bool               # prefix-sharing KV cache is usable
 
 
@@ -119,6 +128,9 @@ def resolve_shapes(ecfg, eng: EngineConfig) -> ServingShapes:
     if eng.decode_impl not in ("auto", "jnp", "pallas"):
         raise ValueError(f"decode_impl must be 'auto', 'jnp' or "
                          f"'pallas', got {eng.decode_impl!r}")
+    if eng.prefill_impl not in ("auto", "jnp", "pallas"):
+        raise ValueError(f"prefill_impl must be 'auto', 'jnp' or "
+                         f"'pallas', got {eng.prefill_impl!r}")
     if eng.transport not in TRANSPORTS:
         raise ValueError(f"transport must be one of {TRANSPORTS}, "
                          f"got {eng.transport!r}")
@@ -153,10 +165,32 @@ def resolve_shapes(ecfg, eng: EngineConfig) -> ServingShapes:
         raise ValueError(
             f"pool_blocks {pool} cannot hold one max-size request "
             f"({lane_blocks} blocks) — the queue would deadlock")
-    # decode_impl overrides use_pallas for the jitted decode programs
-    # only: prefill keeps the expert config's own kernel choice
+    # decode_impl overrides use_pallas for the jitted decode programs only
+    # (paged-attention read + fused sampling epilogue); prefill has its own
+    # override below
     dcfg = ecfg if eng.decode_impl == "auto" else \
         ecfg.replace(use_pallas=eng.decode_impl == "pallas")
+    # fused paged prefill (attention + in-place pool landing in one
+    # program, insert_requests dead) needs every layer's prefill KV to
+    # live in the paged pool AND right-padded bucketing to be exact —
+    # i.e. a pure full-attention pattern.  `auto` silently keeps the
+    # legacy slab + scatter elsewhere; an explicit jnp/pallas ask on a
+    # non-capable arch is a configuration error, not a fallback.
+    fused_capable = pad_safe and has_pool
+    if eng.prefill_impl == "auto":
+        prefill_impl = ("pallas" if ecfg.use_pallas else "jnp") \
+            if fused_capable else "slab"
+    elif not fused_capable:
+        raise ValueError(
+            f"prefill_impl={eng.prefill_impl!r} needs a fused-capable "
+            f"expert arch (every layer full-attention so all prefill KV "
+            f"is paged and bucket padding is exact); "
+            f"layer_pattern={ecfg.layer_pattern!r} is not — use "
+            f"prefill_impl='auto' for the dense slab + insert fallback")
+    else:
+        prefill_impl = eng.prefill_impl
+    pcfg = ecfg if prefill_impl == "slab" else \
+        ecfg.replace(use_pallas=prefill_impl == "pallas")
     # the hit path skips prefill for cached blocks and replays only the
     # suffix through the decode scatter — sound only when every layer's
     # prefix state lives in the paged pool (pure full-attention archs);
@@ -168,46 +202,62 @@ def resolve_shapes(ecfg, eng: EngineConfig) -> ServingShapes:
                          lane_blocks=lane_blocks, pool_blocks=pool,
                          dcfg=dcfg,
                          decode_impl="pallas" if dcfg.use_pallas else "jnp",
+                         pcfg=pcfg, prefill_impl=prefill_impl,
                          prefix_ok=prefix_ok)
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_fns(ecfg, dcfg, max_len: int):
+def _jit_fns(ecfg, dcfg, pcfg, max_len: int, prefill_impl: str):
     """Jitted expert-side serving kernels, shared across server instances.
 
     Keyed on the (hashable, frozen) configs so fuzz suites building many
     servers reuse one compile cache instead of re-jitting per instance.
-    ``dcfg`` is the decode-side expert config — identical to ``ecfg``
-    except possibly ``use_pallas``, so ``EngineConfig.decode_impl`` can
-    flip the paged-attention kernel without dragging prefill onto the
-    Pallas flash path.  (Router scoring lives with the frontend — an
-    expert server never sees the router.)
+    ``dcfg`` / ``pcfg`` are the decode- and prefill-side expert configs —
+    identical to ``ecfg`` except possibly ``use_pallas``, so
+    ``EngineConfig.decode_impl`` / ``prefill_impl`` flip each side's
+    kernels independently.  The decode programs fuse the sampling
+    epilogue (:mod:`repro.kernels.sample_epilogue`): tokens come straight
+    out of the jitted step and the ``(lanes, vocab)`` logits stay an
+    internal intermediate — on the Pallas dispatch they never leave VMEM.
+    (Router scoring lives with the frontend — an expert server never sees
+    the router.)
     """
+    ep_impl = "pallas" if dcfg.use_pallas else "jnp"
+
     def decode_and_sample(p, toks, pos, ci, bt, c, keys, steps, temps,
                           top_ks, top_ps):
-        logits, nc = modellib.decode_step(
+        return modellib.decode_and_sample(
             p, dcfg, {"tokens": toks, "positions": pos, "cache_index": ci,
-                      "block_tables": bt}, c)
-        return samplib.sample_tokens(logits[:, 0], keys, steps, temps,
-                                     top_ks, top_ps), nc
+                      "block_tables": bt}, c,
+            keys=keys, steps=steps, temps=temps, top_ks=top_ks,
+            top_ps=top_ps, epilogue_impl=ep_impl)
 
     def decode_greedy(p, toks, pos, ci, bt, c):
         # all-greedy ticks skip the sampler entirely (its sort/softmax
         # work per lane per token is pure waste when every temp is 0);
         # both programs compile once, so mode flips never recompile
-        logits, nc = modellib.decode_step(
+        return modellib.decode_greedy(
             p, dcfg, {"tokens": toks, "positions": pos, "cache_index": ci,
-                      "block_tables": bt}, c)
-        return jnp.argmax(logits[:, 0], -1).astype(jnp.int32), nc
+                      "block_tables": bt}, c, epilogue_impl=ep_impl)
 
     decode = jax.jit(decode_and_sample)
     decode_g = jax.jit(decode_greedy)
     prefill = jax.jit(
         lambda p, toks, last: modellib.prefill(
             p, ecfg, {"tokens": toks}, cache_len=max_len, last_index=last))
+    if prefill_impl == "slab":
+        prefill_fused = None
+    else:
+        # fused paged prefill: attention + in-place pool KV landing in one
+        # program; the caches go in and come back with the bucket written
+        prefill_fused = jax.jit(
+            lambda p, toks, last, c, bt, tl: modellib.prefill_paged(
+                p, pcfg, {"tokens": toks}, c, block_tables=bt,
+                true_lens=tl, last_index=last))
     insert = jax.jit(functools.partial(cachelib.insert_requests, ecfg))
     clear = jax.jit(functools.partial(cachelib.clear_block_pos, ecfg))
-    return decode, decode_g, prefill, insert, samplib.sample_tokens_jit, clear
+    return (decode, decode_g, prefill, prefill_fused, insert,
+            samplib.sample_tokens_jit, clear)
 
 
 class ExpertServer:
@@ -227,6 +277,7 @@ class ExpertServer:
         self.lane_blocks = shapes.lane_blocks
         self.pool_blocks = shapes.pool_blocks
         self.decode_impl = shapes.decode_impl
+        self.prefill_impl = shapes.prefill_impl
         L, M, bs = eng.lanes_per_expert, eng.max_len, eng.block_size
         # per-(block, layer) decode read traffic: k + v + slot positions
         self._pool_layers = sum(k in cachelib.POOL_KINDS
@@ -235,6 +286,12 @@ class ExpertServer:
             2 * ecfg.n_kv_heads * ecfg.resolved_head_dim
             * np.dtype(ecfg.compute_dtype).itemsize
             + np.dtype(np.int32).itemsize)
+        # per-(token, layer) prefill KV write traffic (k + v, pos separate)
+        self._tok_write_bytes = (2 * ecfg.n_kv_heads * ecfg.resolved_head_dim
+                                 * np.dtype(ecfg.compute_dtype).itemsize)
+        # per-(lane, tick) epilogue logits row the unfused path round-trips
+        self._logit_row_bytes = (ecfg.vocab_size
+                                 * np.dtype(ecfg.logit_dtype).itemsize)
         self.caches = cachelib.init_paged_caches(ecfg, L, self.pool_blocks,
                                                  bs, M)
         self.alloc = SlotAllocator(L)
@@ -276,9 +333,19 @@ class ExpertServer:
         self.gathered_read_bytes = 0
         self.prefix_hit_blocks = 0    # blocks acquired from the prefix cache
         self.prefill_tokens_saved = 0  # prompt tokens never (re)prefilled
+        # admission KV write traffic, both paths priced on every prefill
+        # (bookkeeping like the read counters, impl-independent): fused =
+        # bucket KV + full-span pos once; slab = dense (K, max_len) slab
+        # materialization + the insert scatter's full-span overwrite
+        self.prefill_write_fused_bytes = 0
+        self.prefill_write_slab_bytes = 0
+        # (lanes, vocab) logits HBM round-trip between decode and sampler;
+        # zero on the fused-Pallas epilogue where the row stays in VMEM
+        self.epilogue_logits_bytes = 0
         (self._decode_fn, self._decode_greedy_fn, self._prefill_fn,
-         self._insert_fn, self._sample_fn, self._clear_fn) = \
-            _jit_fns(ecfg, shapes.dcfg, M)
+         self._prefill_fused_fn, self._insert_fn, self._sample_fn,
+         self._clear_fn) = \
+            _jit_fns(ecfg, shapes.dcfg, shapes.pcfg, M, shapes.prefill_impl)
 
     # -- the narrow API ----------------------------------------------------
     @property
@@ -349,7 +416,10 @@ class ExpertServer:
             active_lanes=int(self.active.sum()) + int(self.filling.sum()),
             prefix_hit_blocks=self.prefix_hit_blocks,
             prefill_tokens_saved=self.prefill_tokens_saved,
-            cached_blocks=self.cached_blocks)
+            cached_blocks=self.cached_blocks,
+            prefill_write_fused_bytes=self.prefill_write_fused_bytes,
+            prefill_write_slab_bytes=self.prefill_write_slab_bytes,
+            epilogue_logits_bytes=self.epilogue_logits_bytes)
 
     def reset_stats(self) -> None:
         """Zero the run counters (a warmup must not pollute a timed run)."""
@@ -357,6 +427,8 @@ class ExpertServer:
         self.occupied_lane_steps = self.queue_wait_ticks = 0
         self.paged_read_bytes = self.gathered_read_bytes = 0
         self.prefix_hit_blocks = self.prefill_tokens_saved = 0
+        self.prefill_write_fused_bytes = self.prefill_write_slab_bytes = 0
+        self.epilogue_logits_bytes = 0
         self.balloc.peak_in_use = self.balloc.n_in_use
 
     def sync(self) -> None:
@@ -429,6 +501,35 @@ class ExpertServer:
             return 0
         used = len(req.prompt) + req.max_new_tokens - 1
         return -(-used // self.eng.block_size)
+
+    def _count_prefill_write(self, K: int, bucket: int) -> None:
+        """Price one admission prefill's pool write traffic, both ways.
+
+        Analytic bookkeeping like the decode read counters (computed from
+        shapes, accumulated on every prefill regardless of the dispatched
+        path, so any config can report the delta): the fused path writes
+        the ``(K, bucket)`` KV once plus the full-span ``pos`` rewrite;
+        the slab path materializes a dense ``(K, max_len)`` KV+pos slab
+        and then ``insert_requests`` overwrites every reserved slot —
+        two full-span writes per admitted group.
+        """
+        if not self.has_pool:
+            return
+        M = self.eng.max_len
+        pos_b = np.dtype(np.int32).itemsize
+        fused = K * (bucket * self._tok_write_bytes + M * pos_b)
+        slab = 2 * K * M * (self._tok_write_bytes + pos_b)
+        self.prefill_write_fused_bytes += fused * self._pool_layers
+        self.prefill_write_slab_bytes += slab * self._pool_layers
+
+    def _count_epilogue(self) -> None:
+        """Price one decode call's logits round-trip: the unfused / jnp
+        epilogue materializes the ``(lanes, vocab)`` logits buffer in HBM
+        for the sampler; the fused Pallas epilogue keeps each row in VMEM
+        and writes back ``(lanes,)`` tokens only."""
+        if self.decode_impl != "pallas":
+            self.epilogue_logits_bytes += \
+                self.eng.lanes_per_expert * self._logit_row_bytes
 
     def _alloc_evicting(self, k: int) -> list[int] | None:
         """``alloc_n`` with LRU eviction of cached-but-unreferenced
@@ -539,41 +640,51 @@ class ExpertServer:
                 np.concatenate([topks[idx], np.zeros(pad, np.int32)]),
                 np.concatenate([topps[idx], np.ones(pad, np.float32)])))[:n]
 
-        if self.pad_safe:
-            # one (K, bucket) prefill for the whole drain: K is the batch
-            # width padded to the next power of two (bounded compile count,
-            # no full-lane-width compute for single admissions), bucket =
-            # the largest prompt bucket among the drained requests
-            K = min(1 << (len(batch) - 1).bit_length(), L)
-            bucket = max(self._bucket(int(n)) for n in lens)
+        def run_prefill(group: np.ndarray) -> np.ndarray:
+            """One prefill call for batch members ``group``: build the
+            padded operands, dispatch slab+insert or the fused paged
+            program, account the write traffic, sample first tokens.
+            Shared by the bucketed drain and the exact-length fallback so
+            dispatch / ``prefill_calls`` / byte accounting cannot drift
+            between them."""
+            if self.pad_safe:
+                # K is the group width padded to the next power of two
+                # (bounded compile count, no full-lane-width compute for
+                # single admissions), bucket = the largest prompt bucket
+                K = min(1 << (len(group) - 1).bit_length(), L)
+                bucket = max(self._bucket(int(lens[i])) for i in group)
+            else:
+                K, bucket = 1, int(lens[group[0]])
             toks = np.zeros((K, bucket), np.int32)
             last = np.zeros(K, np.int32)
-            for i, (req, _, _) in enumerate(batch):
-                toks[i, :lens[i]] = req.prompt
-                last[i] = lens[i] - 1
-            logits, rcache = self._prefill_fn(self.params, jnp.asarray(toks),
-                                              jnp.asarray(last))
-            self.prefill_calls += 1
             rows = np.full((K, self.lane_blocks), -1, np.int32)
             slots = np.full(K, L, np.int32)       # out-of-range -> dropped
             true = np.zeros(K, np.int32)
-            for i, (_, slot, row) in enumerate(batch):
-                rows[i], slots[i], true[i] = row, slot, lens[i]
-            self.caches = self._insert_fn(self.caches, rcache, rows, slots,
-                                          true)
-            firsts = first_tokens(logits, np.arange(len(batch)))
-        else:
-            firsts = np.zeros(len(batch), np.int64)
-            for i, (req, slot, row) in enumerate(batch):
+            for j, i in enumerate(group):
+                req, slot, row = batch[i]
+                toks[j, :lens[i]] = req.prompt
+                last[j] = lens[i] - 1
+                rows[j], slots[j], true[j] = row, slot, lens[i]
+            if self.prefill_impl == "slab":
                 logits, rcache = self._prefill_fn(
-                    self.params, jnp.asarray(req.prompt[None]),
-                    jnp.full((1,), lens[i] - 1, jnp.int32))
-                self.prefill_calls += 1
-                self.caches = self._insert_fn(
-                    self.caches, rcache, row[None],
-                    np.full(1, slot, np.int32),
-                    np.full(1, lens[i], np.int32))
-                firsts[i] = int(first_tokens(logits, np.array([i]))[0])
+                    self.params, jnp.asarray(toks), jnp.asarray(last))
+                self.caches = self._insert_fn(self.caches, rcache, rows,
+                                              slots, true)
+            else:
+                logits, self.caches = self._prefill_fused_fn(
+                    self.params, jnp.asarray(toks), jnp.asarray(last),
+                    self.caches, jnp.asarray(rows), jnp.asarray(true))
+            self.prefill_calls += 1
+            self._count_prefill_write(K, bucket)
+            return first_tokens(logits, group)
+
+        if self.pad_safe:
+            firsts = run_prefill(np.arange(len(batch)))
+        else:
+            # recurrent / sliding-window states can't take right-padding:
+            # exact-length compiles, one request per call, same helper
+            firsts = np.concatenate(
+                [run_prefill(np.array([i])) for i in range(len(batch))])
 
         for i, (req, slot, row) in enumerate(batch):
             first = int(firsts[i])
@@ -671,6 +782,7 @@ class ExpertServer:
                     jnp.asarray(self.block_tables), self.caches)
             self.decode_calls += 1
             self.occupied_lane_steps += len(lanes)
+            self._count_epilogue()
             if self.has_pool:
                 live = sum(len(self.blocks[s]) for s in lanes)
                 per_layer = self._block_read_bytes * self._pool_layers
@@ -726,6 +838,7 @@ class ExpertServer:
                 jnp.asarray(self.block_tables), self.caches)
         self.decode_calls += 1
         self.occupied_lane_steps += int(self.active.sum())
+        self._count_epilogue()
         if self.has_pool:
             # bytes the paged kernel reads this tick (each active lane's
             # reserved blocks) vs what the old gathered (lanes, max_len)

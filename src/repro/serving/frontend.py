@@ -185,6 +185,7 @@ class ServeFrontend:
         self.lane_blocks = shapes.lane_blocks
         self.pool_blocks = shapes.pool_blocks
         self.decode_impl = shapes.decode_impl
+        self.prefill_impl = shapes.prefill_impl
         labels = [p.label for p in placed]
         if eng.transport == "tcp":
             self._transport = SocketTransport(
@@ -658,6 +659,10 @@ class ServeFrontend:
         lane_steps = sum(st.occupied_lane_steps for st in live)
         paged_rd = sum(st.paged_read_bytes for st in live)
         gathered_rd = sum(st.gathered_read_bytes for st in live)
+        prefill_wr_fused = sum(st.prefill_write_fused_bytes for st in live)
+        prefill_wr_slab = sum(st.prefill_write_slab_bytes for st in live)
+        epilogue_bytes = sum(st.epilogue_logits_bytes for st in live)
+        prefills = sum(st.prefill_calls for st in live)
         lanes = self.eng.lanes_per_expert
 
         def expert_stats(e):
@@ -720,9 +725,10 @@ class ServeFrontend:
             mean_ttft_s=float(np.mean([r.t_first for r in completed]))
             if completed else 0.0,
             occupancy=lane_steps / max(decode_calls * lanes, 1),
-            prefill_calls=sum(st.prefill_calls for st in live),
+            prefill_calls=prefills,
             kv_bytes_per_lane=self.kv_bytes_per_expert() // lanes,
             decode_impl=self.decode_impl,
+            prefill_impl=self.prefill_impl,
             transport=self.eng.transport,
             decode_read_bytes={
                 "paged": paged_rd,
@@ -730,6 +736,13 @@ class ServeFrontend:
                 "paged_per_tick": paged_rd // max(decode_calls, 1),
                 "gathered_per_tick": gathered_rd // max(decode_calls, 1),
             },
+            prefill_write_bytes={
+                "fused": prefill_wr_fused,
+                "slab": prefill_wr_slab,
+                "fused_per_prefill": prefill_wr_fused // max(prefills, 1),
+                "slab_per_prefill": prefill_wr_slab // max(prefills, 1),
+            },
+            epilogue_logits_bytes=epilogue_bytes,
             per_expert={e: expert_stats(e)
                         for e in range(self.n_experts)},
             autoscale=autoscale)

@@ -87,8 +87,16 @@ class RunReport:
     ``prefill_calls``     — batched prefill invocations, all servers.
     ``kv_bytes_per_lane`` — device KV bytes one decode lane holds.
     ``decode_impl``       — resolved decode attention path (jnp/pallas).
+    ``prefill_impl``      — resolved admission prefill path
+                            (slab/jnp/pallas; jnp and pallas are the
+                            fused paged prefill).
     ``transport``         — loopback / process / tcp.
     ``decode_read_bytes`` — paged vs gathered decode-read accounting.
+    ``prefill_write_bytes`` — fused vs slab+scatter admission KV write
+                            accounting (both priced on every prefill).
+    ``epilogue_logits_bytes`` — (lanes, vocab) logits buffers the decode
+                            epilogue materialized in HBM (0 on the fused
+                            Pallas epilogue).
     ``per_expert``        — expert -> counters summed over its replicas
                             (retired replicas' counters fold in; the
                             ``per_replica`` breakdown lists live ones).
@@ -115,6 +123,9 @@ class RunReport:
     decode_read_bytes: dict
     per_expert: dict
     autoscale: AutoscaleStats | None = None
+    prefill_impl: str = "jnp"
+    prefill_write_bytes: dict = dataclasses.field(default_factory=dict)
+    epilogue_logits_bytes: int = 0
 
     def to_dict(self) -> dict:
         """The exact historical ``run()`` dict (compare_bench's wire
@@ -135,8 +146,11 @@ class RunReport:
             "prefill_calls": self.prefill_calls,
             "kv_bytes_per_lane": self.kv_bytes_per_lane,
             "decode_impl": self.decode_impl,
+            "prefill_impl": self.prefill_impl,
             "transport": self.transport,
             "decode_read_bytes": self.decode_read_bytes,
+            "prefill_write_bytes": self.prefill_write_bytes,
+            "epilogue_logits_bytes": self.epilogue_logits_bytes,
             "per_expert": self.per_expert,
         }
         if self.autoscale is not None:

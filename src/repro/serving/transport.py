@@ -81,7 +81,9 @@ from repro.serving.sampling import SamplingParams
 # cached_blocks (prefix-sharing KV cache).
 # (Autoscaling added the `recall` op but no dataclass change — ops are
 # covered by the handshake's build pairing, so v2 stands.)
-WIRE_VERSION = 2
+# v3: StatsMsg grew prefill_write_fused_bytes / prefill_write_slab_bytes /
+# epilogue_logits_bytes (fused paged prefill + sampling epilogue).
+WIRE_VERSION = 3
 
 
 def check_version(msg):
@@ -155,6 +157,10 @@ class StatsMsg:
     prefix_hit_blocks: int = 0    # KV blocks served from the prefix cache
     prefill_tokens_saved: int = 0  # prompt tokens never (re)prefilled
     cached_blocks: int = 0        # blocks the prefix cache holds right now
+    prefill_write_fused_bytes: int = 0   # admission KV write traffic priced
+    prefill_write_slab_bytes: int = 0    # both ways (fused vs slab+scatter)
+    epilogue_logits_bytes: int = 0  # (lanes, vocab) logits round-trips the
+                                    # unfused decode epilogue materialized
     version: int = WIRE_VERSION
 
 

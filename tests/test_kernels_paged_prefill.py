@@ -1,0 +1,191 @@
+"""Fused paged prefill kernel: slab+scatter identity + CoW non-clobber.
+
+The fused op replaces the legacy admission pair — dense ``(K, max_len)``
+slab prefill followed by ``cache.insert_requests`` — so its oracle is a
+verbatim re-enactment of that pair over random pool recipes (bucket
+widths, block sizes, GQA ratios, head dims, ragged true lengths, padded
+lanes, softcap on/off):
+
+  1. the jnp impl's attention output must match the **exact** blockwise
+     flash call the slab path made (``impl="jnp"``, ``q_chunk=1024``)
+     bit for bit — engine first tokens, and hence the token-identity
+     contract vs ``serving/baseline.py``, ride on it;
+  2. both impls' ``pos`` pool must equal the slab+scatter result bit for
+     bit over every row (full-span rewrite clears a previous tenant's
+     stale positions, unreserved spans land on scratch, scratch pos
+     stays -1), and the *readable* K/V state (``pos >= 0``) must be
+     identical — beyond a lane's prompt the two paths store different
+     padding, all of it masked dead;
+  3. rows not addressed by any table entry — other lanes' blocks and
+     shared copy-on-write prefix blocks — must come back untouched;
+  4. ``ops.paged_prefill_attention`` must reject bad ``impl`` values and
+     malformed shapes loudly instead of silently falling back.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as fa
+from repro.kernels.paged_prefill import ops
+
+
+def _slab_scatter(k, v, tables, true_lens, kp0, vp0, pp0):
+    """The deleted admission pair (single replication slice): pad the
+    bucket to the reserved span, write every block-sized piece through
+    the table (unreserved pieces to scratch), mask pos beyond true_len —
+    ``cache.insert_requests`` semantics, kept test-only as the bitwise
+    anchor."""
+    K, S = k.shape[:2]
+    R, bs = tables.shape[1], pp0.shape[1]
+    scratch = pp0.shape[0] - 1
+    pad = R * bs - S
+    k_slab = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    v_slab = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    span = jnp.broadcast_to(jnp.arange(R * bs, dtype=jnp.int32), (K, R * bs))
+    ids = jnp.where(tables >= 0, tables, scratch).reshape(-1)
+    kp = kp0.at[ids].set(k_slab.reshape(K * R, bs, *k.shape[2:]))
+    vp = vp0.at[ids].set(v_slab.reshape(K * R, bs, *v.shape[2:]))
+    pos = jnp.where((span >= 0) & (span < true_lens[:, None]), span, -1)
+    pp = pp0.at[ids].set(pos.reshape(K * R, bs))
+    return kp, vp, pp
+
+
+def _random_problem(rng):
+    """An engine-shaped fused-prefill problem: disjoint per-lane tables
+    covering each prompt plus random reserved growth, occasionally a
+    padding lane (all -1 table, true_len 0), pools pre-filled with
+    garbage K/V and stale position markers from a previous tenant."""
+    K = int(rng.integers(1, 4))
+    bs = int(rng.choice([4, 8, 16]))
+    R = int(rng.integers(2, 6))
+    S = int(rng.choice([b for b in (4, 8, 16, 32, 64) if b <= R * bs]))
+    Hkv = int(rng.choice([1, 2]))
+    g = int(rng.choice([1, 2, 4]))
+    hd = int(rng.choice([8, 16]))
+    softcap = float(rng.choice([0.0, 30.0]))
+    n_rows = int(rng.integers(K * R + 2, K * R + 6))
+    scratch = n_rows - 1
+
+    q = jnp.asarray(rng.standard_normal((K, S, Hkv * g, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((K, S, Hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((K, S, Hkv, hd)), jnp.float32)
+    true_lens = jnp.asarray(rng.integers(1, S + 1, K), jnp.int32)
+    perm = rng.permutation(scratch)[:K * R]
+    tables = np.full((K, R), -1, np.int32)
+    for i in range(K):
+        need = -(-int(true_lens[i]) // bs)
+        n = need + int(rng.integers(0, R - need + 1))
+        tables[i, :n] = perm[i * R:i * R + n]
+    if K > 1 and rng.random() < 0.5:          # padding lane
+        tables[K - 1] = -1
+        true_lens = true_lens.at[K - 1].set(0)
+    tables = jnp.asarray(tables)
+
+    kp0 = jnp.asarray(rng.standard_normal((n_rows, bs, Hkv, hd)), jnp.float32)
+    vp0 = jnp.asarray(rng.standard_normal((n_rows, bs, Hkv, hd)), jnp.float32)
+    pp0 = jnp.asarray(rng.integers(-1, 50, (n_rows, bs)), jnp.int32)
+    pp0 = pp0.at[scratch].set(-1)   # engine invariant: scratch pos is -1
+    return q, k, v, tables, true_lens, kp0, vp0, pp0, softcap
+
+
+N_FUZZ = 25
+
+
+@pytest.mark.parametrize("seed", range(N_FUZZ))
+def test_fuzz_fused_matches_slab_scatter(seed):
+    rng = np.random.default_rng(7000 + seed)
+    q, k, v, tables, true_lens, kp0, vp0, pp0, softcap = _random_problem(rng)
+    scratch = pp0.shape[0] - 1
+    kp_s, vp_s, pp_s = _slab_scatter(k, v, tables, true_lens, kp0, vp0, pp0)
+    untouched = sorted(set(range(pp0.shape[0])) - {scratch}
+                       - set(np.asarray(jnp.where(tables >= 0, tables,
+                                                  scratch)).ravel().tolist()))
+    out_jnp = None
+    for impl in ("jnp", "pallas"):
+        out, kp1, vp1, pp1 = ops.paged_prefill_attention(
+            q, k, v, block_tables=tables, true_lens=true_lens,
+            k_pool=kp0, v_pool=vp0, pos_pool=pp0, softcap=softcap, impl=impl)
+        # pos pool == slab+scatter bit for bit (every row, scratch incl.)
+        np.testing.assert_array_equal(np.asarray(pp1), np.asarray(pp_s),
+                                      err_msg=f"seed {seed} {impl} pos")
+        # readable K/V state (pos >= 0) identical; beyond the prompt the
+        # two paths store different dead padding
+        m = (np.asarray(pp_s) >= 0)[:, :, None, None]
+        np.testing.assert_array_equal(
+            np.where(m, np.asarray(kp1), 0), np.where(m, np.asarray(kp_s), 0),
+            err_msg=f"seed {seed} {impl} k")
+        np.testing.assert_array_equal(
+            np.where(m, np.asarray(vp1), 0), np.where(m, np.asarray(vp_s), 0),
+            err_msg=f"seed {seed} {impl} v")
+        # scratch pos never leaves -1
+        assert (np.asarray(pp1)[scratch] == -1).all(), f"seed {seed} {impl}"
+        # unaddressed rows (other tenants' blocks) bitwise untouched
+        for r in untouched:
+            assert (np.asarray(kp1[r]) == np.asarray(kp0[r])).all() \
+                and (np.asarray(vp1[r]) == np.asarray(vp0[r])).all() \
+                and (np.asarray(pp1[r]) == np.asarray(pp0[r])).all(), \
+                f"seed {seed} {impl} clobbered row {r}"
+        if impl == "jnp":
+            # attention == the exact flash call the slab prefill made
+            want = fa.flash_attention(q, k, v, causal=True, window=0,
+                                      softcap=softcap, impl="jnp",
+                                      q_chunk=1024)
+            np.testing.assert_array_equal(np.asarray(out), np.asarray(want),
+                                          err_msg=f"seed {seed} attn")
+            out_jnp = np.asarray(out)
+        else:
+            np.testing.assert_allclose(np.asarray(out), out_jnp,
+                                       rtol=2e-5, atol=2e-5,
+                                       err_msg=f"seed {seed} pallas attn")
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_cow_shared_prefix_block_not_clobbered(impl):
+    """A shared copy-on-write prefix block (held by the radix cache, in
+    no admitted lane's table) survives a fused prefill bitwise — the
+    writer only chases rows the tables name."""
+    rng = np.random.default_rng(42)
+    bs, R, Hkv, hd = 8, 3, 2, 16
+    n_rows, scratch, shared = 8, 7, 1
+    q = jnp.asarray(rng.standard_normal((1, 16, 4, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 16, Hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 16, Hkv, hd)), jnp.float32)
+    tables = jnp.asarray([[3, 4, -1]], jnp.int32)   # novel suffix rows only
+    true_lens = jnp.asarray([13], jnp.int32)
+    kp0 = jnp.asarray(rng.standard_normal((n_rows, bs, Hkv, hd)), jnp.float32)
+    vp0 = jnp.asarray(rng.standard_normal((n_rows, bs, Hkv, hd)), jnp.float32)
+    pp0 = jnp.full((n_rows, bs), -1, jnp.int32)
+    pp0 = pp0.at[shared].set(jnp.arange(bs, dtype=jnp.int32))  # live prefix
+    _, kp1, vp1, pp1 = ops.paged_prefill_attention(
+        q, k, v, block_tables=tables, true_lens=true_lens,
+        k_pool=kp0, v_pool=vp0, pos_pool=pp0, impl=impl)
+    np.testing.assert_array_equal(np.asarray(kp1[shared]),
+                                  np.asarray(kp0[shared]))
+    np.testing.assert_array_equal(np.asarray(vp1[shared]),
+                                  np.asarray(vp0[shared]))
+    np.testing.assert_array_equal(np.asarray(pp1[shared]),
+                                  np.asarray(pp0[shared]))
+    # while the addressed rows did get the prompt
+    assert (np.asarray(pp1[3]) == np.arange(bs)).all()
+
+
+def test_ops_dispatch_validates():
+    rng = np.random.default_rng(5)
+    q, k, v, tables, true_lens, kp0, vp0, pp0, _ = _random_problem(rng)
+    kw = dict(block_tables=tables, true_lens=true_lens,
+              k_pool=kp0, v_pool=vp0, pos_pool=pp0)
+    with pytest.raises(ValueError, match="impl must be one of"):
+        ops.paged_prefill_attention(q, k, v, impl="triton", **kw)
+    with pytest.raises(ValueError, match="GQA"):
+        ops.paged_prefill_attention(q[:, :, :, :4], k, v, impl="jnp", **kw)
+    with pytest.raises(ValueError, match="block_tables"):
+        ops.paged_prefill_attention(q, k, v, block_tables=tables[0],
+                                    true_lens=true_lens, k_pool=kp0,
+                                    v_pool=vp0, pos_pool=pp0, impl="jnp")
+    # a bucket wider than the reserved span is an admission bug, not a
+    # silent truncation
+    S_over = tables.shape[1] * pp0.shape[1] + pp0.shape[1]
+    qq = jnp.zeros((q.shape[0], S_over) + q.shape[2:], q.dtype)
+    kk = jnp.zeros((k.shape[0], S_over) + k.shape[2:], k.dtype)
+    with pytest.raises(ValueError, match="exceeds the reserved span"):
+        ops.paged_prefill_attention(qq, kk, kk, impl="jnp", **kw)

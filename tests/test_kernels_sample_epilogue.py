@@ -1,0 +1,131 @@
+"""Fused decode epilogue: token identity vs the unfused sampler chain.
+
+The fused op replaces the legacy decode tail — ``model._logits``
+materializing ``(lanes, vocab)`` logits in HBM, then a separate
+``sample_tokens_jit`` call — so the oracle is that exact sequence,
+re-enacted per trial and compared **bitwise**:
+
+  1. both impls of ``ops.decode_and_sample`` must return the same
+     tokens as ``sample_tokens_jit`` on ``softcap((h @ U.T).astype(f32))``
+     across the full recipe grid: temperature 0 (exact greedy lanes)
+     through > 1, top-k off/1/partial/full, top-p tight/loose/off,
+     mixed per-lane, with real ``request_key`` roots and varying step
+     counters — the sampler sees exactly ``(V,)`` logits in-kernel, so
+     vocab padding must never leak into the categorical draw;
+  2. ``ops.decode_greedy`` must equal the raw argmax on both impls;
+  3. vocab sizes around the kernel's 512-lane chunk (non-divisible,
+     smaller-than-one-chunk, multi-chunk) all hold;
+  4. the dispatch rejects bad ``impl`` values and malformed shapes.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.sample_epilogue import ops
+from repro.models import common
+from repro.serving import sampling as samplib
+
+N_FUZZ = 12
+
+
+def _problem(rng, *, V=None):
+    B = int(rng.integers(1, 6))
+    D = int(rng.choice([16, 32]))
+    V = V if V is not None else int(rng.choice([50, 500, 512, 700, 1024]))
+    cap = float(rng.choice([0.0, 30.0]))
+    h = jnp.asarray(rng.standard_normal((B, 1, D)), jnp.float32)
+    unemb = jnp.asarray(rng.standard_normal((V, D)), jnp.float32)
+    keys = jnp.asarray(np.stack([samplib.request_key(3, u)
+                                 for u in range(B)]))
+    steps = jnp.asarray(rng.integers(0, 9, B), jnp.int32)
+    temps = jnp.asarray(rng.choice([0.0, 0.5, 1.0, 1.7], B), jnp.float32)
+    top_ks = jnp.asarray(rng.choice([0, 1, 5, V], B), jnp.int32)
+    top_ps = jnp.asarray(rng.choice([0.1, 0.7, 1.0], B), jnp.float32)
+    return h, unemb, keys, steps, temps, top_ks, top_ps, cap
+
+
+def _unfused(h, unemb, keys, steps, temps, top_ks, top_ps, cap):
+    """The legacy sequence the fusion replaced, bit for bit: logits to
+    HBM (same matmul/astype/softcap order as ``model._logits``), then
+    the shared jitted sampler."""
+    logits = common.softcap((h @ unemb.T).astype(jnp.float32), cap)
+    toks = samplib.sample_tokens_jit(logits[:, 0], keys, steps, temps,
+                                     top_ks, top_ps)
+    return toks, jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("seed", range(N_FUZZ))
+def test_fuzz_fused_tokens_bitwise(seed):
+    rng = np.random.default_rng(8000 + seed)
+    h, unemb, keys, steps, temps, top_ks, top_ps, cap = _problem(rng)
+    want, want_g = _unfused(h, unemb, keys, steps, temps, top_ks, top_ps,
+                            cap)
+    for impl in ("jnp", "pallas"):
+        got = ops.decode_and_sample(h, unemb, keys=keys, steps=steps,
+                                    temps=temps, top_ks=top_ks,
+                                    top_ps=top_ps, final_softcap=cap,
+                                    logit_dtype=jnp.float32, impl=impl)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=f"seed {seed} {impl}")
+        got_g = ops.decode_greedy(h, unemb, final_softcap=cap,
+                                  logit_dtype=jnp.float32, impl=impl)
+        np.testing.assert_array_equal(np.asarray(got_g), np.asarray(want_g),
+                                      err_msg=f"seed {seed} {impl} greedy")
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_temperature_zero_lanes_are_exact_greedy(impl):
+    """An all-greedy sampled batch (temperature 0 everywhere) must equal
+    the raw argmax — the engine mixes greedy and sampled lanes through
+    one program, so temp-0 rows cannot pick up sampler noise."""
+    rng = np.random.default_rng(9)
+    h, unemb, keys, steps, _, top_ks, top_ps, cap = _problem(rng, V=300)
+    B = h.shape[0]
+    zeros = jnp.zeros(B, jnp.float32)
+    got = ops.decode_and_sample(h, unemb, keys=keys, steps=steps,
+                                temps=zeros, top_ks=top_ks, top_ps=top_ps,
+                                final_softcap=cap,
+                                logit_dtype=jnp.float32, impl=impl)
+    want = ops.decode_greedy(h, unemb, final_softcap=cap,
+                             logit_dtype=jnp.float32, impl="jnp")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("V", [8, 511, 512, 513, 1536])
+def test_vocab_chunk_boundaries(V):
+    """Vocabs below / at / just past / at multiples of the Pallas vocab
+    chunk: padded matmul lanes must never reach the sampler."""
+    rng = np.random.default_rng(100 + V)
+    h, unemb, keys, steps, temps, top_ks, top_ps, cap = _problem(rng, V=V)
+    want, want_g = _unfused(h, unemb, keys, steps, temps, top_ks, top_ps,
+                            cap)
+    got = ops.decode_and_sample(h, unemb, keys=keys, steps=steps,
+                                temps=temps, top_ks=top_ks, top_ps=top_ps,
+                                final_softcap=cap, logit_dtype=jnp.float32,
+                                impl="pallas")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    got_g = ops.decode_greedy(h, unemb, final_softcap=cap,
+                              logit_dtype=jnp.float32, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(got_g), np.asarray(want_g))
+
+
+def test_ops_dispatch_validates():
+    rng = np.random.default_rng(5)
+    h, unemb, keys, steps, temps, top_ks, top_ps, cap = _problem(rng, V=64)
+    kw = dict(keys=keys, steps=steps, temps=temps, top_ks=top_ks,
+              top_ps=top_ps)
+    with pytest.raises(ValueError, match="impl must be one of"):
+        ops.decode_and_sample(h, unemb, impl="triton", **kw)
+    with pytest.raises(ValueError, match="impl must be one of"):
+        ops.decode_greedy(h, unemb, impl="triton")
+    with pytest.raises(ValueError, match=r"\(B, 1, D\)"):
+        ops.decode_and_sample(h[:, 0], unemb, **kw)
+    with pytest.raises(ValueError, match=r"\(V, D\)"):
+        ops.decode_and_sample(h, unemb.T, **kw)
+    with pytest.raises(ValueError, match="keys"):
+        ops.decode_and_sample(h, unemb, keys=keys[:, :1], steps=steps,
+                              temps=temps, top_ks=top_ks, top_ps=top_ps)
+    with pytest.raises(ValueError, match="temps"):
+        ops.decode_and_sample(h, unemb, keys=keys, steps=steps,
+                              temps=temps[:-1], top_ks=top_ks,
+                              top_ps=top_ps)
